@@ -1,0 +1,54 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,table4,table5,table6,apps")
+    ap.add_argument("--fast", action="store_true", help="smaller datasets")
+    args = ap.parse_args()
+
+    from . import (
+        bench_applications,
+        bench_construction,
+        bench_datasets,
+        bench_dbit_distribution,
+        bench_parallel_scaling,
+        bench_sort_comparison,
+        bench_zipf_sensitivity,
+    )
+
+    scale = 0.05 if args.fast else 0.1
+    suites = {
+        "table1": lambda: bench_construction.run(scale=scale),
+        "table2": lambda: bench_datasets.run(scale=scale),
+        "table3": bench_dbit_distribution.run,
+        "table4": lambda: bench_zipf_sensitivity.run(
+            n_keys=20000 if args.fast else 40000
+        ),
+        "table5": bench_parallel_scaling.run,
+        "table6": bench_sort_comparison.run,
+        "apps": bench_applications.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            print(f"# SUITE {name} FAILED")
+            traceback.print_exc()
+        print(f"# suite {name} took {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

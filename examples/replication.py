@@ -1,0 +1,63 @@
+"""Database-replication scenario (the paper's motivating use case, §1):
+
+A "master" trains and checkpoints; a "replica" node brings the state up by
+loading the table (checkpoint payload) and RECONSTRUCTING the search index
+from persisted DS-metadata — no index image ever crosses the wire, exactly
+as in main-memory DBMS replication.  Also demonstrates elastic restore
+(different logical mesh on the replica).
+
+  PYTHONPATH=src python examples/replication.py
+"""
+
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointIndex, restore_checkpoint, save_checkpoint
+from repro.configs import ARCHS
+from repro.models.lm import LM
+
+
+def main():
+    cfg = ARCHS["llama3-8b"].reduced()
+    model = LM(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+
+    with tempfile.TemporaryDirectory() as d:
+        print(f"== master: checkpointing {n_leaves} leaves ==")
+        t0 = time.perf_counter()
+        save_checkpoint(d, step=1000, tree=params,
+                        extra_meta={"step": 1000, "arch": cfg.name})
+        print(f"   saved in {time.perf_counter()-t0:.2f}s "
+              f"(manifest + DS-metadata persisted; NO index image)")
+
+        print("== replica: index reconstruction on load ==")
+        from pathlib import Path
+
+        t0 = time.perf_counter()
+        idx = CheckpointIndex(Path(d) / "step_00001000")
+        st = idx.result.stats
+        print(f"   manifest index rebuilt in {time.perf_counter()-t0:.2f}s: "
+              f"compression {st['compression_ratio']:.2f}:1, "
+              f"height {st['tree_height']}")
+
+        like = jax.tree_util.tree_map(np.zeros_like, params)
+        restored, stats = restore_checkpoint(d, 1000, like)
+        ok = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(
+                jax.tree_util.tree_leaves(params),
+                jax.tree_util.tree_leaves(restored),
+            )
+        )
+        print(f"   {stats['n_leaves']} leaves restored via index lookups; "
+              f"bit-exact: {ok}")
+        print(f"   index rebuild took {stats['index_rebuild_s']*1e3:.1f}ms of "
+              f"the restore path")
+
+
+if __name__ == "__main__":
+    main()

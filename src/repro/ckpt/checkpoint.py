@@ -1,0 +1,179 @@
+"""Checkpointing with reconstructable manifest index (fault tolerance).
+
+Layout of a checkpoint directory:
+
+  step_<N>/
+    manifest.npz       — the TABLE: rows of (key, file, shape, dtype)
+                         where key = fnv1a(param path) || shard coords
+    dsmeta.npz         — DS-metadata of the manifest keys (D-bitmap etc.)
+    <leaf files>.npy   — one array per param leaf (full array; elastic
+                         restore re-places onto any mesh)
+    DONE               — commit marker (atomic-rename protocol)
+
+Exactly as in the paper's main-memory DBMS setting, the *search index* over
+the manifest is never serialized — only the DS-metadata is — and restore
+begins by RECONSTRUCTING the key index with the compressed key sort
+(``repro.core.reconstruct``).  For thousand-node restores the manifest has
+one row per (leaf x shard) — millions of rows — and index rebuild cost is
+exactly the paper's Table 1 problem.
+
+Fault-tolerance properties:
+  * atomic commit (DONE marker written last; partial checkpoints ignored);
+  * ``latest_step`` scans for the newest committed step -> crash-restart;
+  * elastic resharding: arrays are saved unsharded and re-placed with
+    ``jax.device_put`` under the *restoring* mesh's shardings, so a
+    checkpoint from mesh A restores onto mesh B (different axis sizes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core.keyformat import KeySet
+from repro.core.metadata import DSMeta
+from repro.core.reconstruct import ReconstructionResult, reconstruct_index
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointIndex"]
+
+
+def _fnv1a(s: str) -> int:
+    h = 0xCBF29CE484222325
+    for c in s.encode():
+        h = ((h ^ c) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def _flatten(tree) -> list[tuple[str, np.ndarray]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p) for p in path
+        )
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def _manifest_key(name: str, shard: int = 0) -> np.ndarray:
+    """96-bit manifest key: 64-bit path hash || 32-bit shard coord."""
+    h = _fnv1a(name)
+    return np.asarray([h >> 32, h & 0xFFFFFFFF, shard], dtype=np.uint32)
+
+
+def save_checkpoint(ckpt_dir: str | os.PathLike, step: int, tree,
+                    extra_meta: dict | None = None) -> Path:
+    root = Path(ckpt_dir)
+    final = root / f"step_{step:08d}"
+    tmp = root / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    rows_keys, rows_files, rows_names = [], [], []
+    for i, (name, arr) in enumerate(_flatten(tree)):
+        fn = f"leaf_{i:06d}.npy"
+        np.save(tmp / fn, arr)
+        rows_keys.append(_manifest_key(name))
+        rows_files.append(fn)
+        rows_names.append(name)
+
+    keys = np.stack(rows_keys)  # (n, 3) uint32
+    np.savez(
+        tmp / "manifest.npz",
+        keys=keys,
+        files=np.asarray(rows_files),
+        names=np.asarray(rows_names),
+    )
+    # persist ONLY the DS-metadata of the manifest keys — the index itself
+    # is reconstructed on restore (the paper's premise)
+    from repro.core.metadata import meta_from_keys
+
+    meta = meta_from_keys(keys)
+    np.savez(tmp / "dsmeta.npz", **meta.to_npz_dict())
+    (tmp / "meta.json").write_text(json.dumps({"step": step, **(extra_meta or {})}))
+    (tmp / "DONE").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
+    root = Path(ckpt_dir)
+    if not root.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in root.iterdir()
+        if p.name.startswith("step_") and (p / "DONE").exists()
+    ]
+    return max(steps) if steps else None
+
+
+class CheckpointIndex:
+    """The reconstructed manifest index: hashed-path point lookups."""
+
+    def __init__(self, step_dir: Path):
+        self.dir = step_dir
+        m = np.load(step_dir / "manifest.npz")
+        self.keys = m["keys"].astype(np.uint32)
+        self.files = [str(x) for x in m["files"]]
+        self.names = [str(x) for x in m["names"]]
+        meta = DSMeta.from_npz_dict(dict(np.load(step_dir / "dsmeta.npz")))
+        ks = KeySet(
+            words=self.keys,
+            lengths=np.full(len(self.files), 12, np.int32),
+            rids=np.arange(len(self.files), dtype=np.uint32),
+        )
+        # THE paper pipeline: extract by persisted D-bitmap -> sort -> build
+        self.result: ReconstructionResult = reconstruct_index(ks, meta=meta)
+
+    def lookup(self, name: str) -> str:
+        from repro.core.btree import search_batch
+        import jax.numpy as jnp
+
+        q = jnp.asarray(_manifest_key(name))[None, :]
+        found, rid, _ = search_batch(self.result.tree, q)
+        if not bool(found[0]):
+            raise KeyError(name)
+        return self.files[int(rid[0])]
+
+
+def restore_checkpoint(ckpt_dir: str | os.PathLike, step: int, like_tree,
+                       shardings=None) -> tuple[dict, dict]:
+    """Restore a pytree; elastic re-placement under ``shardings`` if given.
+
+    Every leaf is fetched through the reconstructed manifest index (point
+    lookup by hashed path) — the restore path exercises the paper's index,
+    not a linear scan.
+    """
+    step_dir = Path(ckpt_dir) / f"step_{step:08d}"
+    if not (step_dir / "DONE").exists():
+        raise FileNotFoundError(f"no committed checkpoint at {step_dir}")
+    idx = CheckpointIndex(step_dir)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(like_tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p) for p in path)
+        arr = np.load(step_dir / idx.lookup(name))
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(tdef, out)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings
+        )
+    stats = {
+        "n_leaves": len(out),
+        "index_height": idx.result.tree.height,
+        "compression_ratio": idx.result.stats["compression_ratio"],
+        "index_rebuild_s": idx.result.timings["total"],
+        "meta": json.loads((step_dir / "meta.json").read_text()),
+    }
+    return tree, stats

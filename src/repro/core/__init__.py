@@ -1,0 +1,27 @@
+# The paper's primary contribution — compressed key sort + fast index
+# reconstruction — as composable JAX modules. Sibling subpackages hold the
+# substrates (models/train/serve/ckpt/data/distributed/launch).
+
+from . import (
+    btree,
+    compress,
+    dbits,
+    distsort,
+    index,
+    keyformat,
+    metadata,
+    reconstruct,
+    sortkeys,
+)
+
+__all__ = [
+    "btree",
+    "compress",
+    "dbits",
+    "distsort",
+    "index",
+    "keyformat",
+    "metadata",
+    "reconstruct",
+    "sortkeys",
+]

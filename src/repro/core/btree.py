@@ -1,0 +1,315 @@
+"""Bottom-up bulk build of the partial-key B+tree (paper §4.2, §5.3).
+
+TPU adaptation (DESIGN.md §2): pointer-chasing nodes become
+structure-of-arrays *levels* — each level is a dict of `(n_nodes, fanout)`
+arrays — so bulk build is reshapes + gathers and batched search is a
+vectorized descent.  Entry layout is the paper's: every entry carries a
+``pk``-bit partial key, the distinction bit position against the previous
+entry's (highest) key, the key length, and a record id (leaf) or child
+pointer + highest-key pointer (non-leaf).
+
+Node geometry follows §5.3 exactly: 256-byte nodes, 24-byte header (+8-byte
+next pointer in leaves), 16-byte leaf entries and 24-byte non-leaf entries
+=> max fanout 14 (leaf) / 9 (non-leaf), filled to ``max_fanout * fill``
+(default fill 0.9).
+
+Partial-key bits are obtained by paper option **C.b**: sliced from the
+record's full key via the record id (the base table is memory-resident in
+the target systems, so the deref is a gather).  Point lookups can use the
+partial-key screening path (`search_batch_partial`) which derefs only
+entries whose partial window matches the query — the vectorized analogue of
+Bohannon et al.'s sequential leaf procedure.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dbits import NO_DBIT, adjacent_dbit_positions, lex_compare_le
+from .metadata import DSMeta
+
+__all__ = ["BTreeConfig", "BTree", "build_btree", "search_batch", "search_batch_partial"]
+
+NODE_BYTES = 256
+LEAF_HEADER = 24 + 8  # header + next-node pointer
+NONLEAF_HEADER = 24
+LEAF_ENTRY = 16
+NONLEAF_ENTRY = 24
+LEAF_MAX_FANOUT = (NODE_BYTES - LEAF_HEADER) // LEAF_ENTRY  # 14
+NONLEAF_MAX_FANOUT = (NODE_BYTES - NONLEAF_HEADER) // NONLEAF_ENTRY  # 9
+
+
+@dataclass(frozen=True)
+class BTreeConfig:
+    pk_bits: int = 16
+    fill_factor: float = 0.9
+
+    @property
+    def leaf_cap(self) -> int:
+        return max(2, int(LEAF_MAX_FANOUT * self.fill_factor))
+
+    @property
+    def nonleaf_cap(self) -> int:
+        return max(2, int(NONLEAF_MAX_FANOUT * self.fill_factor))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class BTree:
+    """SoA partial-key B+tree.
+
+    levels: root-first tuple of non-leaf levels, each a dict with
+            child (m,c) int32 (-1 = empty), hi (m,c) int32 (index into the
+            sorted key order), pk (m,c) uint32, dpos (m,c) int32,
+            klen (m,c) int32.
+    leaf:   dict with rid (L,c) uint32, pk (L,c) uint32, dpos (L,c) int32,
+            klen (L,c) int32, valid (L,c) bool.
+    sorted_full: (n, W) uint32 — full keys in sorted order (the "pointer to
+            the highest index key" target; rows of the memory-resident table
+            in key order).
+    sorted_rids: (n,) uint32.
+    """
+
+    levels: tuple
+    leaf: dict
+    sorted_full: jnp.ndarray
+    sorted_rids: jnp.ndarray
+    n_keys: int
+    config: BTreeConfig
+
+    def tree_flatten(self):
+        children = (self.levels, self.leaf, self.sorted_full, self.sorted_rids)
+        aux = (self.n_keys, self.config)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        levels, leaf, sorted_full, sorted_rids = children
+        return cls(levels, leaf, sorted_full, sorted_rids, *aux)
+
+    @property
+    def height(self) -> int:
+        return len(self.levels) + 1
+
+    def nodes_per_level(self) -> list[int]:
+        return [int(l["child"].shape[0]) for l in self.levels] + [
+            int(self.leaf["rid"].shape[0])
+        ]
+
+    def memory_bytes(self) -> int:
+        return sum(self.nodes_per_level()) * NODE_BYTES
+
+
+def _slice_bits(words: jnp.ndarray, start: jnp.ndarray, pk_bits: int) -> jnp.ndarray:
+    """pk_bits bits of (m, W) keys starting at bit position start (m,)."""
+    W = words.shape[-1]
+    start = jnp.clip(start, 0, W * 32 - 1)
+    wi = start // 32
+    sh = (start % 32).astype(jnp.uint32)
+    w0 = jnp.take_along_axis(words, wi[..., None], axis=-1)[..., 0]
+    wi1 = jnp.minimum(wi + 1, W - 1)
+    w1 = jnp.take_along_axis(words, wi1[..., None], axis=-1)[..., 0]
+    w1 = jnp.where(wi + 1 < W, w1, 0)
+    hi = w0 << sh
+    lo = jnp.where(sh == 0, jnp.uint32(0), w1 >> (jnp.uint32(32) - sh))
+    window = hi | lo
+    return window >> jnp.uint32(32 - pk_bits)
+
+
+def _pad_to(x: jnp.ndarray, rows: int, fill) -> jnp.ndarray:
+    pad = rows - x.shape[0]
+    if pad <= 0:
+        return x
+    shape = (pad,) + x.shape[1:]
+    return jnp.concatenate([x, jnp.full(shape, fill, dtype=x.dtype)], axis=0)
+
+
+def build_btree(
+    comp_sorted: jnp.ndarray,
+    row_sorted: jnp.ndarray,
+    meta: DSMeta,
+    table_words: jnp.ndarray,
+    table_lengths: jnp.ndarray | None = None,
+    config: BTreeConfig = BTreeConfig(),
+    rids: jnp.ndarray | None = None,
+) -> BTree:
+    """Bulk-build the tree from sorted compressed keys + row positions (§5.3).
+
+    ``table_words`` is the base table's full keys by *row*; ``row_sorted``
+    is the sort permutation over rows; ``rids`` (optional) maps rows to
+    record ids stored in leaf entries (defaults to the row index).
+    Distinction bit positions of entries come from adjacent *compressed*
+    keys mapped through D-offset — no full-key comparisons are needed
+    anywhere in the build, which is the point of the paper.
+    """
+    n = int(comp_sorted.shape[0])
+    rid_sorted = (
+        jnp.asarray(row_sorted, jnp.uint32)
+        if rids is None
+        else jnp.asarray(rids, jnp.uint32)[row_sorted]
+    )
+    lc, nc = config.leaf_cap, config.nonleaf_cap
+    pk = config.pk_bits
+
+    d_off = jnp.asarray(meta.d_offset(), jnp.int32)
+    n_off = int(d_off.shape[0])
+
+    # distinction bit positions per sorted entry (entry 0 -> position 0)
+    dpos_comp = adjacent_dbit_positions(jnp.asarray(comp_sorted, jnp.uint32))
+    safe = jnp.clip(dpos_comp, 0, n_off - 1)
+    dpos_full = jnp.where(dpos_comp == NO_DBIT, jnp.int32(0), d_off[safe])
+    dpos_full = jnp.concatenate([jnp.zeros((1,), jnp.int32), dpos_full.astype(jnp.int32)])
+
+    sorted_full = jnp.asarray(table_words, jnp.uint32)[row_sorted]
+    if table_lengths is None:
+        klen = jnp.full((n,), table_words.shape[1] * 4, jnp.int32)
+    else:
+        klen = jnp.asarray(table_lengths, jnp.int32)[row_sorted]
+
+    # partial key: pk bits following the distinction bit position (option C.b:
+    # sliced from the record's full key)
+    pkeys = _slice_bits(sorted_full, dpos_full + 1, pk).astype(jnp.uint32)
+
+    # ---------------- leaf level ----------------
+    n_leaves = -(-n // lc)
+    rows = n_leaves * lc
+    leaf = {
+        "rid": _pad_to(jnp.asarray(rid_sorted, jnp.uint32), rows, 0xFFFFFFFF).reshape(n_leaves, lc),
+        "pk": _pad_to(pkeys, rows, 0).reshape(n_leaves, lc),
+        "dpos": _pad_to(dpos_full, rows, 0).reshape(n_leaves, lc),
+        "klen": _pad_to(klen, rows, 0).reshape(n_leaves, lc),
+        "valid": (jnp.arange(rows).reshape(n_leaves, lc) < n),
+    }
+    # highest (sorted-order) key index of each leaf
+    child_hi = jnp.minimum(jnp.arange(n_leaves) * lc + lc, n) - 1
+
+    # ---------------- non-leaf levels, bottom-up ----------------
+    levels: list[dict] = []
+    child_idx = jnp.arange(n_leaves, dtype=jnp.int32)
+    while child_idx.shape[0] > 1:
+        m_children = int(child_idx.shape[0])
+        n_nodes = -(-m_children // nc)
+        rows = n_nodes * nc
+        hi = _pad_to(child_hi.astype(jnp.int32), rows, -1)
+        # entry distinction bit: adjacent highest keys at this level, via the
+        # compressed keys + D-offset (paper §5.3)
+        hi_prev = jnp.concatenate([hi[:1], hi[:-1]])
+        a = jnp.asarray(comp_sorted, jnp.uint32)[jnp.clip(hi_prev, 0, n - 1)]
+        b = jnp.asarray(comp_sorted, jnp.uint32)[jnp.clip(hi, 0, n - 1)]
+        from .dbits import dbit_position_pairwise
+
+        dc = dbit_position_pairwise(a, b)
+        dfull = jnp.where(dc == NO_DBIT, jnp.int32(0), d_off[jnp.clip(dc, 0, n_off - 1)])
+        dfull = dfull.at[0].set(0)
+        epk = _slice_bits(sorted_full[jnp.clip(hi, 0, n - 1)], dfull + 1, pk)
+        level = {
+            "child": _pad_to(child_idx, rows, -1).reshape(n_nodes, nc),
+            "hi": hi.reshape(n_nodes, nc),
+            "pk": epk.astype(jnp.uint32).reshape(n_nodes, nc),
+            "dpos": dfull.astype(jnp.int32).reshape(n_nodes, nc),
+            "klen": _pad_to(
+                jnp.take(klen, jnp.clip(hi, 0, n - 1)), rows, 0
+            ).reshape(n_nodes, nc),
+        }
+        levels.append(level)
+        # parents become the children of the next level up
+        valid_children = (level["child"] >= 0)
+        last_valid = jnp.sum(valid_children.astype(jnp.int32), axis=1) - 1
+        child_hi = jnp.take_along_axis(level["hi"], last_valid[:, None], axis=1)[:, 0]
+        child_idx = jnp.arange(n_nodes, dtype=jnp.int32)
+
+    levels.reverse()  # root first
+    return BTree(
+        levels=tuple(levels),
+        leaf=leaf,
+        sorted_full=sorted_full,
+        sorted_rids=jnp.asarray(rid_sorted, jnp.uint32),
+        n_keys=n,
+        config=config,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batched search
+# ---------------------------------------------------------------------------
+
+def _first_ge(entry_keys: jnp.ndarray, valid: jnp.ndarray, query: jnp.ndarray) -> jnp.ndarray:
+    """Index of first valid entry whose key >= query; last valid if none."""
+    ge = lex_compare_le(query[:, None, :], entry_keys) & valid
+    any_ge = jnp.any(ge, axis=1)
+    first = jnp.argmax(ge, axis=1)
+    last_valid = jnp.sum(valid.astype(jnp.int32), axis=1) - 1
+    return jnp.where(any_ge, first, last_valid)
+
+
+@jax.jit
+def search_batch(tree: BTree, queries: jnp.ndarray):
+    """Vectorized descent; returns (found (q,), rid (q,), position (q,)).
+
+    Non-leaf steps compare the query against the entries' *highest index
+    keys* through the highest-key pointer, exactly as the paper's search
+    (§4.3) does — a full-key binary comparison per entry, vectorized over
+    the node fanout and the query batch.
+    """
+    q = queries.shape[0]
+    node = jnp.zeros((q,), jnp.int32)
+    for level in tree.levels:
+        hi = level["hi"][node]  # (q, c)
+        valid = level["child"][node] >= 0
+        hi_keys = tree.sorted_full[jnp.clip(hi, 0, tree.n_keys - 1)]  # (q, c, W)
+        e = _first_ge(hi_keys, valid, queries)
+        node = jnp.take_along_axis(level["child"][node], e[:, None], axis=1)[:, 0]
+        node = jnp.maximum(node, 0)
+    lc = tree.config.leaf_cap
+    rids = tree.leaf["rid"][node]  # (q, c)
+    valid = tree.leaf["valid"][node]
+    pos0 = node * lc
+    keys = tree.sorted_full[jnp.clip(pos0[:, None] + jnp.arange(lc)[None, :], 0, tree.n_keys - 1)]
+    e = _first_ge(keys, valid, queries)
+    key_at = jnp.take_along_axis(keys, e[:, None, None], axis=1)[:, 0, :]
+    found = jnp.all(key_at == queries, axis=-1)
+    rid = jnp.take_along_axis(rids, e[:, None], axis=1)[:, 0]
+    return found, rid, pos0 + e
+
+
+@jax.jit
+def search_batch_partial(tree: BTree, queries: jnp.ndarray):
+    """Point lookup via partial-key screening (vectorized Bohannon §4.3).
+
+    For each leaf entry, a true match requires the query's ``pk``-bit window
+    at the entry's distinction bit position to equal the entry's partial
+    key.  Only screened candidates are dereferenced (full-key compare),
+    which is the partial-key B-tree's cache saving; we report the deref
+    count so benchmarks can measure it.
+    """
+    q = queries.shape[0]
+    node = jnp.zeros((q,), jnp.int32)
+    for level in tree.levels:
+        hi = level["hi"][node]
+        valid = level["child"][node] >= 0
+        hi_keys = tree.sorted_full[jnp.clip(hi, 0, tree.n_keys - 1)]
+        e = _first_ge(hi_keys, valid, queries)
+        node = jnp.take_along_axis(level["child"][node], e[:, None], axis=1)[:, 0]
+        node = jnp.maximum(node, 0)
+    lc = tree.config.leaf_cap
+    pk = tree.config.pk_bits
+    dpos = tree.leaf["dpos"][node]  # (q, c)
+    entry_pk = tree.leaf["pk"][node]
+    valid = tree.leaf["valid"][node]
+    # query window at each entry's dpos
+    qwin = _slice_bits(queries[:, None, :].repeat(lc, 1), dpos + 1, pk)
+    candidate = (qwin == entry_pk) & valid
+    n_deref = jnp.sum(candidate.astype(jnp.int32), axis=1)
+    # deref candidates only: compare full keys where candidate
+    pos0 = node * lc
+    keys = tree.sorted_full[jnp.clip(pos0[:, None] + jnp.arange(lc)[None, :], 0, tree.n_keys - 1)]
+    eq = jnp.all(keys == queries[:, None, :], axis=-1) & candidate
+    found = jnp.any(eq, axis=1)
+    e = jnp.argmax(eq, axis=1)
+    rid = jnp.take_along_axis(tree.leaf["rid"][node], e[:, None], axis=1)[:, 0]
+    return found, jnp.where(found, rid, jnp.uint32(0xFFFFFFFF)), n_deref

@@ -1,0 +1,134 @@
+"""Compressed-key extraction (paper §5.1).
+
+The CPU implementation uses the BMI ``PEXT`` instruction per 8-byte mask plus
+shift/OR concatenation.  TPUs have no PEXT; we adapt the idea to the
+TPU memory/compute hierarchy:
+
+* The D-bitmap is metadata that changes only on reconstruction (it is
+  persisted in the DS-metadata, §4.2), so we precompute an **extraction
+  plan** host-side: for each output bit ``b`` of the compressed key, the
+  source word and source shift in the full key.  The plan is a trace-time
+  constant, turning bit gathering into a static shift/mask schedule — the
+  TPU-idiomatic equivalent of PEXT where each scheduled op is amortized over
+  the full 8×128 vector tile of keys.
+* Two execution paths: a fully vectorized jnp path (`extract_bits` — also
+  the oracle for the Pallas kernel) and the Pallas kernel in
+  ``repro.kernels.pext`` that performs the same schedule per VMEM tile.
+
+Output compressed keys are ``(n, Wc)`` uint32, word 0 most significant,
+bit order preserved (ascending source position -> ascending output
+position), which is exactly what Theorem 2 requires for order equivalence.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dbits import bitmap_to_positions
+
+__all__ = ["ExtractionPlan", "make_plan", "extract_bits", "extract_bits_dynamic"]
+
+
+@dataclass(frozen=True)
+class ExtractionPlan:
+    """Static schedule mapping full-key bit positions to compressed-key bits.
+
+    positions:   (B_c,) int32 ascending source bit positions (host numpy).
+    src_word:    (B_c,) source word index   = positions // 32
+    src_shift:   (B_c,) right-shift amount  = 31 - positions % 32
+    n_words_in:  full key width in words.
+    n_words_out: compressed key width in words = ceil(B_c / 32).
+    """
+
+    positions: tuple[int, ...]
+    src_word: tuple[int, ...]
+    src_shift: tuple[int, ...]
+    n_words_in: int
+    n_words_out: int
+
+    @property
+    def n_bits(self) -> int:
+        return len(self.positions)
+
+    def dst(self, b: int) -> tuple[int, int]:
+        """(dst_word, dst_shift) of output bit b (b=0 is global MSB)."""
+        return b // 32, 31 - (b % 32)
+
+    def as_arrays(self) -> dict[str, np.ndarray]:
+        """Plan as dense arrays (for the scalar-prefetch kernel variant)."""
+        b = np.arange(self.n_bits, dtype=np.int32)
+        return {
+            "src_word": np.asarray(self.src_word, np.int32),
+            "src_shift": np.asarray(self.src_shift, np.int32),
+            "dst_word": b // 32,
+            "dst_shift": 31 - (b % 32),
+        }
+
+
+def make_plan(bitmap: np.ndarray, n_words_in: int | None = None) -> ExtractionPlan:
+    """Build the extraction plan from a D-bitmap (host-side)."""
+    bm = np.asarray(bitmap, dtype=np.uint32)
+    if n_words_in is None:
+        n_words_in = bm.shape[0]
+    pos = bitmap_to_positions(bm)
+    if len(pos) == 0:
+        # degenerate: all keys identical — keep one bit so shapes stay valid
+        pos = np.asarray([0], dtype=np.int32)
+    return ExtractionPlan(
+        positions=tuple(int(p) for p in pos),
+        src_word=tuple(int(p) // 32 for p in pos),
+        src_shift=tuple(31 - int(p) % 32 for p in pos),
+        n_words_in=int(n_words_in),
+        n_words_out=(len(pos) + 31) // 32,
+    )
+
+
+@partial(jax.jit, static_argnames=("plan",))
+def extract_bits(words: jnp.ndarray, plan: ExtractionPlan) -> jnp.ndarray:
+    """Vectorized compressed-key extraction, (n, W) uint32 -> (n, Wc) uint32.
+
+    One shift+mask+shift+or per planned bit, fully parallel over keys.  This
+    is the pure-jnp oracle for ``repro.kernels.pext``.
+    """
+    w = jnp.asarray(words, jnp.uint32)
+    n = w.shape[0]
+    out = [jnp.zeros((n,), jnp.uint32) for _ in range(plan.n_words_out)]
+    for b in range(plan.n_bits):
+        sw, ss = plan.src_word[b], plan.src_shift[b]
+        dw, ds = plan.dst(b)
+        bit = (w[:, sw] >> np.uint32(ss)) & jnp.uint32(1)
+        out[dw] = out[dw] | (bit << np.uint32(ds))
+    return jnp.stack(out, axis=1)
+
+
+@partial(jax.jit, static_argnames=("n_words_out",))
+def extract_bits_dynamic(
+    words: jnp.ndarray, bitmap: jnp.ndarray, n_words_out: int
+) -> jnp.ndarray:
+    """Dynamic-bitmap extraction (no host round-trip).
+
+    For runtime-updated D-bitmaps (e.g. after online inserts, §4.3) where
+    re-tracing per bitmap is undesirable.  Unpacks the key tile to a bit
+    matrix, ranks the selected columns with a cumulative popcount of the
+    bitmap, and packs via one-hot matmul — MXU-friendly, at the price of
+    materializing the (n, 32·W) bit matrix per block.
+    """
+    w = jnp.asarray(words, jnp.uint32)
+    n, W = w.shape
+    shifts = jnp.arange(31, -1, -1, dtype=jnp.uint32)
+    bits = ((w[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)).reshape(n, W * 32)
+    bmbits = ((bitmap[:, None] >> shifts[None, :]) & jnp.uint32(1)).reshape(W * 32)
+    # output slot of each source bit (ascending position order preserved)
+    slot = jnp.cumsum(bmbits) - 1
+    sel = bmbits.astype(bool)
+    B_out = n_words_out * 32
+    slot = jnp.where(sel, slot, B_out)  # parked: one past the packed range
+    packed = jnp.zeros((n, B_out + 1), jnp.uint32).at[:, slot].max(bits)
+    packed = packed[:, :B_out].reshape(n, n_words_out, 32)
+    weights = (jnp.uint32(1) << jnp.arange(31, -1, -1, dtype=jnp.uint32))
+    return jnp.sum(packed * weights[None, None, :], axis=-1, dtype=jnp.uint32)

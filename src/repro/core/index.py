@@ -1,0 +1,117 @@
+"""Online index wrapper: search / insert / delete + DS-metadata upkeep (§4.3).
+
+The bulk-built tree is immutable (SoA arrays); online mutations follow the
+main-memory-DBMS recipe the paper assumes: inserts land in a small sorted
+delta buffer, deletes set tombstones, DS-metadata is updated incrementally
+(insert rule) or not at all (delete rule — lazy, valid by Theorem 2), and a
+rebuild folds everything down via the compressed key sort.  This mirrors
+the paper's premise that indexes are cheap to *reconstruct* and therefore
+need neither logging nor eager maintenance of exact metadata.
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from .btree import BTreeConfig, search_batch
+from .keyformat import KeySet
+from .metadata import DSMeta, meta_on_delete, meta_on_insert
+from .reconstruct import ReconstructionResult, reconstruct_index
+
+__all__ = ["OnlineIndex"]
+
+
+@dataclass
+class OnlineIndex:
+    """A reconstructable index with an insert delta and delete tombstones."""
+
+    keyset: KeySet
+    result: ReconstructionResult
+    config: BTreeConfig = field(default_factory=BTreeConfig)
+    _delta: list = field(default_factory=list)  # sorted [(key_tuple, rid)]
+    _tombstones: set = field(default_factory=set)  # rids
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(keyset: KeySet, meta: DSMeta | None = None,
+              config: BTreeConfig = BTreeConfig()) -> "OnlineIndex":
+        res = reconstruct_index(keyset, meta=meta, config=config)
+        return OnlineIndex(keyset=keyset, result=res, config=config)
+
+    @property
+    def meta(self) -> DSMeta:
+        return self.result.meta
+
+    # ----------------------------------------------------------------- search
+    def search(self, query_words: np.ndarray) -> tuple[bool, int]:
+        """Point lookup for a single (W,) key; consults tree + delta - tombstones."""
+        q = jnp.asarray(query_words, jnp.uint32)[None, :]
+        found, rid, _ = search_batch(self.result.tree, q)
+        found, rid = bool(found[0]), int(rid[0])
+        if found and rid in self._tombstones:
+            found = False
+        if not found:
+            key_t = tuple(int(x) for x in np.asarray(query_words))
+            i = bisect.bisect_left(self._delta, (key_t, -1))
+            if i < len(self._delta) and self._delta[i][0] == key_t:
+                return True, self._delta[i][1]
+        return found, rid
+
+    # ----------------------------------------------------------------- insert
+    def insert(self, key_words: np.ndarray, rid: int) -> None:
+        """Insert K; update DS-metadata per §4.3 (set max(D(A,K), D(K,B)))."""
+        key = np.asarray(key_words, np.uint32)
+        key_t = tuple(int(x) for x in key)
+        # neighbors A, B in the *current* sorted order (tree + delta view)
+        a, b = self._neighbors(key_t)
+        new_meta = meta_on_insert(self.meta, a, key, b)
+        self.result.meta = new_meta
+        bisect.insort(self._delta, (key_t, int(rid)))
+
+    def delete(self, key_words: np.ndarray) -> bool:
+        """Delete K; DS-metadata untouched (lazy rule, valid by Theorem 2)."""
+        found, rid = self.search(np.asarray(key_words, np.uint32))
+        if not found:
+            return False
+        key_t = tuple(int(x) for x in np.asarray(key_words, np.uint32))
+        i = bisect.bisect_left(self._delta, (key_t, -1))
+        if i < len(self._delta) and self._delta[i][0] == key_t:
+            self._delta.pop(i)
+        else:
+            self._tombstones.add(rid)
+        self.result.meta = meta_on_delete(self.meta)
+        return True
+
+    def _neighbors(self, key_t: tuple) -> tuple[np.ndarray | None, np.ndarray | None]:
+        sf = np.asarray(self.result.tree.sorted_full)
+        keys = [tuple(int(x) for x in r) for r in sf]
+        for k, _ in self._delta:
+            bisect.insort(keys, k)
+        i = bisect.bisect_left(keys, key_t)
+        a = np.asarray(keys[i - 1], np.uint32) if i > 0 else None
+        b = np.asarray(keys[i], np.uint32) if i < len(keys) else None
+        return a, b
+
+    # ---------------------------------------------------------------- rebuild
+    def rebuild(self) -> "OnlineIndex":
+        """Fold delta/tombstones into the base table and reconstruct with the
+        *current* (possibly stale-bit) DS-metadata — the paper's recovery path."""
+        sf = np.asarray(self.keyset.words)
+        lengths = list(np.asarray(self.keyset.lengths))
+        rids = list(np.asarray(self.keyset.rids))
+        rows = [r for r in zip(sf, lengths, rids) if int(r[2]) not in self._tombstones]
+        for key_t, rid in self._delta:
+            rows.append((np.asarray(key_t, np.uint32), len(key_t) * 4, rid))
+        words = np.stack([r[0] for r in rows])
+        ks = KeySet(
+            words=words,
+            lengths=np.asarray([r[1] for r in rows], np.int32),
+            rids=np.asarray([r[2] for r in rows], np.uint32),
+        )
+        # key compression with the current bitmap (extended positions OK)
+        res = reconstruct_index(ks, meta=self.meta, config=self.config)
+        return OnlineIndex(keyset=ks, result=res, config=self.config)

@@ -1,0 +1,104 @@
+"""Deterministic sharded data pipeline.
+
+Epoch shuffling and dedup both run through the compressed key sort
+(DESIGN.md §4.4):
+
+  * shuffle: sort documents by ``(fnv1a(seed || doc_id) || doc_id)`` — a
+    keyed permutation that any worker can reproduce locally, so a restarted
+    or straggling worker re-derives exactly its shard without coordination
+    (straggler/restart safety comes from determinism, not state);
+  * dedup: equal compressed keys => equal keys when the D-bitmap covers the
+    dataset (Theorem 2 corollary) — adjacent-equality scan post-sort.
+
+Batches are yielded as (step, batch) with a monotone step id; resuming from
+checkpoint step N skips exactly N batches by arithmetic, not by replay.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.compress import make_plan
+from repro.core.dbits import compute_dbitmap
+from repro.core.sortkeys import compressed_key_sort
+
+__all__ = ["shuffle_order", "dedup_tokens", "TokenPipeline"]
+
+
+def _fnv1a_vec(x: np.ndarray, seed: int) -> np.ndarray:
+    h = np.full(x.shape, (0xCBF29CE484222325 ^ seed) & 0xFFFFFFFF, np.uint64)
+    v = x.astype(np.uint64)
+    for shift in (0, 8, 16, 24):
+        h = (h ^ ((v >> shift) & 0xFF)) * np.uint64(0x01000193)
+        h &= np.uint64(0xFFFFFFFF)
+    return h.astype(np.uint32)
+
+
+def shuffle_order(n_docs: int, seed: int) -> np.ndarray:
+    """Keyed shuffle permutation via compressed key sort."""
+    import jax.numpy as jnp
+
+    doc = np.arange(n_docs, dtype=np.uint32)
+    words = np.stack([_fnv1a_vec(doc, seed), doc], axis=1)  # (n, 2) uint32
+    bm = compute_dbitmap(jnp.asarray(words))
+    plan = make_plan(np.asarray(bm), 2)
+    res = compressed_key_sort(jnp.asarray(words), jnp.asarray(doc), plan)
+    return np.asarray(res.rids)
+
+
+def dedup_tokens(docs: np.ndarray) -> np.ndarray:
+    """Drop exact-duplicate rows of (n, L) int32 token docs via sorted
+    compressed keys (adjacent-equal scan)."""
+    import jax.numpy as jnp
+
+    words = np.ascontiguousarray(docs.astype(np.uint32))
+    bm = compute_dbitmap(jnp.asarray(words))
+    plan = make_plan(np.asarray(bm), words.shape[1])
+    res = compressed_key_sort(
+        jnp.asarray(words), jnp.arange(len(words), dtype=jnp.uint32), plan
+    )
+    keys = np.asarray(res.keys)
+    rids = np.asarray(res.rids)
+    keep = np.ones(len(keys), bool)
+    keep[1:] = (keys[1:] != keys[:-1]).any(axis=1)
+    return np.sort(rids[keep])
+
+
+@dataclass
+class TokenPipeline:
+    """Sharded, resumable LM batch source over a document array."""
+
+    docs: np.ndarray  # (n_docs, doc_len) int32
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.docs.shape[1] >= self.seq_len + 1
+        self.n_docs = self.docs.shape[0]
+        self.per_epoch = self.n_docs // self.global_batch
+        self._order_cache: dict[int, np.ndarray] = {}
+
+    def _epoch_order(self, epoch: int) -> np.ndarray:
+        if epoch not in self._order_cache:
+            self._order_cache[epoch] = shuffle_order(self.n_docs, self.seed + epoch)
+        return self._order_cache[epoch]
+
+    def batch_at(self, step: int) -> dict:
+        """Deterministic random access — the resume/straggler-safety hook."""
+        epoch, off = divmod(step, self.per_epoch)
+        order = self._epoch_order(epoch)
+        rows = order[off * self.global_batch : (off + 1) * self.global_batch]
+        toks = self.docs[rows]
+        return {
+            "tokens": toks[:, : self.seq_len].astype(np.int32),
+            "labels": toks[:, 1 : self.seq_len + 1].astype(np.int32),
+        }
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield step, self.batch_at(step)
+            step += 1

@@ -1,0 +1,1 @@
+from . import ctx, sharding  # noqa: F401

@@ -1,0 +1,113 @@
+"""Sharding-rule engine: param path -> PartitionSpec.
+
+Policy (DESIGN.md §6):
+  * tensor-parallel dims (attention heads, FFN hidden, vocab, experts,
+    SSM inner dim) -> "model" axis;
+  * one remaining large dim -> "data" axis (FSDP / ZeRO-style; the
+    optimizer state inherits the same specs, giving ZeRO-1 for free);
+  * the "pod" axis (multi-pod mesh) carries ONLY the batch — parameter
+    all-gathers stay on intra-pod ICI, and just the gradient all-reduce
+    crosses pods (the slow axis);
+  * stacked-layer leading dims (from the scan-over-layers transform) are
+    never sharded.
+
+Rules are keyed on parameter *leaf names* — the model zoo uses a fixed
+naming convention (wq/wk/wv/wo, w1/w2/w3, embed, lm_head, router, A_log,
+in_proj/out_proj, ...), so the engine needs no per-arch tables.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_spec", "param_specs", "param_shardings", "batch_spec"]
+
+# leaf name -> spec for the *unstacked* param; None entries = replicated dim.
+# Convention: weights are (in_dim, out_dim); "model" goes on the TP dim,
+# "data" on the other large dim (FSDP).
+_RULES: list[tuple[tuple[str, ...], tuple]] = [
+    # embedding: FEATURE-sharded (gather over a vocab-sharded table forces
+    # SPMD full rematerialization; feature sharding keeps the gather local).
+    (("embed",), (None, "model")),
+    (("lm_head",), ("data", "model")),  # (d, V): vocab-sharded -> chunked loss
+
+    # attention projections
+    (("wq", "wk", "wv"), ("data", "model")),  # (d, heads*hd)
+    (("wo",), ("model", "data")),  # (heads*hd, d)
+    # dense FFN
+    (("w1", "w3"), ("data", "model")),  # (d, ff)
+    (("w2",), ("model", "data")),  # (ff, d)
+    # MoE: expert dim on model (EP), then FSDP on d
+    (("moe_w1", "moe_w3"), ("model", "data", None)),  # (E, d, ff)
+    (("moe_w2",), ("model", "data", None)),  # (E, ff, d)
+    (("router",), (None, "model")),  # (d, E)
+    # Mamba
+    (("in_proj",), ("data", "model")),  # (d, 2*di)
+    (("out_proj",), ("model", "data")),  # (di, d)
+    (("x_proj",), ("model", None)),  # (di, dt_rank + 2N)
+    (("dt_proj",), (None, "model")),  # (dt_rank, di)
+    (("conv_w",), ("model", None)),  # (di, k)
+    (("A_log",), ("model", None)),  # (di, N)
+    (("D", "dt_bias", "conv_b"), ("model",)),  # (di,)
+    # xLSTM
+    (("w_up",), ("data", "model")),  # (d, 2*di)
+    (("w_down",), ("model", "data")),  # (di, d)
+    (("wq_l", "wk_l", "wv_l"), ("model", None)),  # (di, di) inner
+    (("wi", "wf", "wog"), ("model", None)),  # (di, H)
+    (("r_i", "r_f", "r_z", "r_o"), (None, "model", None)),  # (H, dh, dh)
+    (("sw_i", "sw_f", "sw_z", "sw_o"), ("data", "model")),  # (d, d)
+    # norms, gates, biases: replicated
+    (("ln", "q_norm", "k_norm", "final_norm", "gate", "bias", "b_i", "b_f"), None),
+]
+
+
+def _rule_for(name: str):
+    for names, spec in _RULES:
+        if name in names:
+            return spec
+    return None  # default: replicate
+
+
+def param_spec(path: tuple, leaf: jax.ShapeDtypeStruct | None = None) -> P:
+    """Spec for one param addressed by its key path (pytree path tuple)."""
+    name = None
+    stacked = False
+    for k in path:
+        ks = k.key if hasattr(k, "key") else str(k)
+        if ks == "blocks":
+            stacked = True  # scan-stacked: leading layer dim, never sharded
+        name = ks
+    rule = _rule_for(name)
+    if rule is None:
+        return P()
+    dims = list(rule)
+    if stacked:
+        dims = [None] + dims
+    if leaf is not None:
+        # guard: never shard a dim the rule names if the leaf is lower-rank
+        dims = dims[: len(leaf.shape)] if len(dims) > len(leaf.shape) else dims
+        while len(dims) < len(leaf.shape):
+            dims.append(None)
+    return P(*dims)
+
+
+def param_specs(params_tree) -> dict:
+    """Pytree of PartitionSpec matching a params (or ShapeDtypeStruct) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf), params_tree
+    )
+
+
+def param_shardings(params_tree, mesh: Mesh) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_tree),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Batch dim over every data-parallel axis present ('pod' included)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return P(tuple(axes)) if len(axes) > 1 else P(axes[0])

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: in-VMEM bitonic block sort of multiword keys.
+
+This is the VMEM analogue of the paper's ``basic_sort`` (Appendix A, step
+3.1): the row-column sort keeps each base block inside the per-core L3
+slice and quicksorts it.  Quicksort's data-dependent branches are hostile
+to a vector unit, so the TPU-native block sort is a **bitonic network**:
+O(log^2 T) compare-exchange substages, each a static permutation + select —
+branch-free, fully lane-parallel, and entirely VMEM-resident.
+
+Keys are (W, T) uint32 word planes plus a (1, T) payload plane (record id).
+The comparator is the multiword lexicographic order (word 0 most
+significant) — the same comparator the paper's sort uses, so compressing
+keys shrinks ``W`` and with it the cost of *every* substage.
+
+The partner exchange ``idx ^ j`` is a static permutation per substage; we
+express it with `jnp.take` along the lane axis (interpret-validated; on
+real TPU hardware Mosaic lowers power-of-two strided gathers to cheap
+in-register shuffles for j >= 128-lane strides and VMEM swizzles below).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 512
+
+
+def _lex_cmp_planes(a, b, n_key_words: int):
+    """a, b: (W, T) planes -> ((T,) a<b, (T,) a==b) lexicographic over key words."""
+    less = jnp.zeros(a.shape[1], jnp.bool_)
+    eq = jnp.ones(a.shape[1], jnp.bool_)
+    for w in range(n_key_words):
+        less = less | (eq & (a[w] < b[w]))
+        eq = eq & (a[w] == b[w])
+    return less, eq
+
+
+def _bitonic_kernel(n_key_words: int, block: int, x_ref, o_ref):
+    """x_ref/o_ref: (W+1, block) planes — key words + rid payload plane.
+
+    Per substage, every lane decides *keep mine vs take partner's* from a
+    lane-local comparison.  With ``want_le = (is_lo == ascending)``:
+        keep = want_le ? (x <= p) : (x > p)   [ > as !(<=) with eq split ]
+    Ties keep both lanes' own entries (no payload duplication).
+    """
+    x = x_ref[...]
+    # iota must be materialized in-kernel (captured constants are rejected)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    log_t = int(np.log2(block))
+    for stage in range(1, log_t + 1):
+        k = 1 << stage
+        for sub in range(stage - 1, -1, -1):
+            j = 1 << sub
+            partner = idx ^ j
+            px = jnp.take(x, partner, axis=1)
+            ascending = (idx & k) == 0
+            is_lo = (idx & j) == 0
+            lt, eq = _lex_cmp_planes(x, px, n_key_words)
+            le = lt | eq
+            want_le = is_lo == ascending
+            keep = jnp.where(want_le, le, ~lt)
+            x = jnp.where(keep[None, :], x, px)
+    o_ref[...] = x
+
+
+@partial(jax.jit, static_argnames=("n_key_words", "block", "interpret"))
+def bitonic_block_sort_planes(
+    planes: jnp.ndarray,
+    n_key_words: int,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Sort each block of ``block`` lanes independently.
+
+    planes: (W+1, n) uint32 — key word planes then one rid plane; ``n`` a
+    multiple of ``block``.  Returns same shape, each block sorted by the
+    first ``n_key_words`` planes (stably w.r.t. nothing — ties broken by
+    nothing; pad rid plane participates only as payload).
+    """
+    wp, n = planes.shape
+    assert n % block == 0 and (block & (block - 1)) == 0, (n, block)
+    grid = (n // block,)
+    return pl.pallas_call(
+        partial(_bitonic_kernel, n_key_words, block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((wp, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((wp, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((wp, n), jnp.uint32),
+        interpret=interpret,
+    )(planes)

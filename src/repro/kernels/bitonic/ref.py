@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the bitonic block sort: per-block ``lax.sort``."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.dbits import sort_words
+
+
+def block_sort_ref(
+    words: jnp.ndarray, rids: jnp.ndarray, block: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(n, W) keys + (n,) rids -> each block of `block` rows sorted."""
+    n, w = words.shape
+    assert n % block == 0
+    outs_w, outs_r = [], []
+    for s in range(0, n, block):
+        sw, sr = sort_words(words[s : s + block], rids[s : s + block])
+        outs_w.append(sw)
+        outs_r.append(sr)
+    return jnp.concatenate(outs_w, axis=0), jnp.concatenate(outs_r, axis=0)

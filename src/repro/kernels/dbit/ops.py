@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the adjacent-dbit kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_TILE, dbit_planes
+
+
+def adjacent_dbits(
+    sorted_words: jnp.ndarray, tile: int = DEFAULT_TILE, interpret: bool = True
+) -> jnp.ndarray:
+    """(n, W) sorted keys -> (n-1,) adjacent distinction bit positions."""
+    n, w = sorted_words.shape
+    planes = jnp.asarray(sorted_words, jnp.uint32).T  # (W, n)
+    prev = planes[:, : n - 1]
+    cur = planes[:, 1:]
+    m = n - 1
+    pad = (-m) % tile
+    if pad:
+        z = jnp.zeros((w, pad), jnp.uint32)
+        prev = jnp.concatenate([prev, z], axis=1)
+        cur = jnp.concatenate([cur, z], axis=1)
+    out = dbit_planes(prev, cur, tile=tile, interpret=interpret)
+    return out[:m]

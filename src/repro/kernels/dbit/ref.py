@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: `repro.core.dbits.adjacent_dbit_positions`."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.dbits import adjacent_dbit_positions
+
+
+def adjacent_dbits_ref(sorted_words: jnp.ndarray) -> jnp.ndarray:
+    """(n, W) sorted keys -> (n-1,) int32 adjacent distinction bit positions."""
+    return adjacent_dbit_positions(sorted_words)

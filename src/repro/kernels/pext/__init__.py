@@ -1,0 +1,2 @@
+from . import ops, ref  # noqa: F401
+from .ops import pext, pext_planes  # noqa: F401

@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the pext kernel (row-major in/out, padding)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.compress import ExtractionPlan
+
+from .kernel import DEFAULT_TILE, pext_planes
+
+
+def pext(
+    words: jnp.ndarray,
+    plan: ExtractionPlan,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(n, W) uint32 keys -> (n, Wc) uint32 compressed keys.
+
+    Pads the key axis to a tile multiple, runs the plane kernel, strips the
+    padding.  A planes-native pipeline should call ``pext_planes`` directly
+    and skip both transposes.
+    """
+    n, w = words.shape
+    pad = (-n) % tile
+    planes = jnp.asarray(words, jnp.uint32).T
+    if pad:
+        planes = jnp.concatenate(
+            [planes, jnp.zeros((w, pad), jnp.uint32)], axis=1
+        )
+    out = pext_planes(planes, plan, tile=tile, interpret=interpret)
+    return out[:, :n].T

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the pext kernel: `repro.core.compress.extract_bits`
+on the row-major layout, transposed to planes."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.compress import ExtractionPlan, extract_bits
+
+
+def pext_ref(words: jnp.ndarray, plan: ExtractionPlan) -> jnp.ndarray:
+    """(n, W) uint32 -> (n, Wc) uint32 compressed keys."""
+    return extract_bits(words, plan)
+
+
+def pext_planes_ref(planes: jnp.ndarray, plan: ExtractionPlan) -> jnp.ndarray:
+    """(W, n) -> (Wc, n), plane layout."""
+    return extract_bits(planes.T, plan).T

@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the real step function (train_step /
+prefill / decode_step), lowers it against ShapeDtypeStruct inputs with the
+production shardings (no allocation), compiles it for the 256-chip
+single-pod mesh and the 512-chip multi-pod mesh, and records:
+
+  * memory_analysis()        — proves the program fits per device,
+  * cost_analysis()          — HLO FLOPs / bytes for §Roofline,
+  * collective byte volumes  — parsed from the post-SPMD HLO text,
+
+into ``experiments/dryrun/<mesh>/<arch>__<shape>.json`` (incremental: cells
+already on disk are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod1|pod2]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_arch, get_shape, shape_applies
+from repro.models.lm import LM, input_specs
+from repro.train.optim import OptConfig, adamw_init
+from repro.train.trainstep import make_train_step
+
+from .mesh import make_production_mesh
+from .shardings import (
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    params_shardings,
+    replicated,
+)
+
+OUT_ROOT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape literal like 'bf16[16,1024]'. 0 if unknown."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO.
+
+    Methodology note (EXPERIMENTS.md §Roofline): we count the *result*
+    operand size per op; ring-algorithm on-wire factors ((n-1)/n for
+    all-gather/reduce-scatter, 2(n-1)/n for all-reduce) are applied in the
+    roofline stage, not here.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        # e.g.:  %ag = bf16[8,512]{1,0} all-gather(...)  /  tuple results
+        m = re.search(r"=\s+(.+?)\s+(" + "|".join(_COLLECTIVES) + r")[\(\-]", s)
+        if not m:
+            continue
+        shapes_str, op = m.groups()
+        if "start" in s.split(op)[1][:8]:
+            pass  # async start counted; done-ops produce no new bytes
+        total = 0
+        for sh in _SHAPE_RE.finditer(shapes_str):
+            total += _shape_bytes(sh.group(0))
+        # skip the matching *-done ops (tuple forwarding, zero new bytes)
+        if f"{op}-done" in s:
+            continue
+        out[op] += total
+        counts[op] += 1
+    return {"bytes": out, "counts": counts}
+
+
+def _apply_overrides(cfg, overrides: dict | None):
+    if not overrides:
+        return cfg
+    import dataclasses
+
+    typed = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            typed[k] = v in ("1", "true", "True", True)
+        elif isinstance(cur, int):
+            typed[k] = int(v)
+        elif isinstance(cur, float):
+            typed[k] = float(v)
+        else:
+            typed[k] = v
+    return dataclasses.replace(cfg, **typed)
+
+
+def build_cell(arch_name: str, shape_name: str, mesh, serve_dtype=jnp.bfloat16,
+               overrides: dict | None = None, serve_tp_only: bool = False):
+    """Return (fn, args_sds) for one cell."""
+    cfg = _apply_overrides(get_arch(arch_name), overrides)
+    shape = get_shape(shape_name)
+    model = LM(cfg)
+    params_sds = model.param_struct()
+    p_sh = params_shardings(
+        mesh, params_sds,
+        serve_tp_only=serve_tp_only and shape.kind != "train",
+    )
+    batch_sds = input_specs(cfg, shape)
+    b_sh = batch_shardings(mesh, batch_sds)
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        o_sh = opt_shardings(mesh, opt_sds, p_sh)
+        step = make_train_step(
+            model, OptConfig(), accum=shape.accum, param_shardings=p_sh
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, replicated(mesh)),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_sds, opt_sds, batch_sds)
+
+    # serving cells run bf16 weights
+    sp_sds = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, serve_dtype if (s.dtype == jnp.float32 and len(s.shape) >= 2) else s.dtype
+        ),
+        params_sds,
+    )
+    cache_sds = model.cache_struct(shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(mesh, cfg, cache_sds)
+
+    if shape.kind == "prefill":
+        fn = jax.jit(
+            model.prefill,
+            in_shardings=(p_sh, b_sh, c_sh),
+            out_shardings=(c_sh, replicated(mesh)),
+            donate_argnums=(2,),
+        )
+        return fn, (sp_sds, batch_sds, cache_sds)
+
+    fn = jax.jit(
+        model.decode_step,
+        in_shardings=(p_sh, c_sh, b_sh),
+        out_shardings=(c_sh, replicated(mesh)),
+        donate_argnums=(1,),
+    )
+    return fn, (sp_sds, cache_sds, batch_sds)
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str, force: bool = False,
+             keep_hlo: bool = False, overrides: dict | None = None,
+             suffix: str = "", mesh_ctx: bool = False,
+             serve_tp_only: bool = False) -> dict:
+    out_dir = OUT_ROOT / mesh_name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_file = out_dir / f"{arch_name}__{shape_name}{suffix}.json"
+    if out_file.exists() and not force:
+        return json.loads(out_file.read_text())
+
+    cfg = _apply_overrides(get_arch(arch_name), overrides)
+    shape = get_shape(shape_name)
+    ok, why = shape_applies(cfg, shape)
+    if not ok:
+        rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": why}
+        out_file.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+    t0 = time.time()
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "n_devices": mesh.size, "overrides": overrides or {},
+           "mesh_ctx": mesh_ctx}
+    try:
+        fn, args = build_cell(arch_name, shape_name, mesh, overrides=overrides,
+                              serve_tp_only=serve_tp_only)
+        import contextlib
+
+        from repro.distributed.ctx import use_mesh
+
+        ctx = (
+            use_mesh(mesh, data_axes=tuple(
+                a for a in ("pod", "data") if a in mesh.axis_names))
+            if mesh_ctx
+            else jax.set_mesh(mesh)
+        )
+        with ctx:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        from .hloanalysis import analyze_hlo
+
+        hlo_summary = analyze_hlo(hlo).as_dict()
+        rec.update(
+            status="ok",
+            t_lower_s=round(t_lower, 2),
+            t_compile_s=round(t_compile, 2),
+            flops=float(cost.get("flops", -1)) if cost else -1,
+            bytes_accessed=float(cost.get("bytes accessed", -1)) if cost else -1,
+            cost_analysis={k: float(v) for k, v in (cost or {}).items()
+                           if isinstance(v, (int, float)) and not k.startswith("utilization")},
+            memory_analysis=_mem_dict(mem),
+            collectives=coll,
+            hlo_summary=hlo_summary,
+            hlo_lines=hlo.count("\n"),
+            params_total=cfg.total_params(),
+            params_active=cfg.active_params(),
+            tokens_per_step=shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1),
+            kind=shape.kind,
+            # scan structure: XLA CPU cost_analysis counts while-loop bodies
+            # ONCE; the roofline stage needs these static trip counts plus an
+            # analytic workload model (launch/roofline.py) to reconstruct
+            # whole-step numbers.
+            scan_trips={
+                "accum": shape.accum if shape.kind == "train" else 1,
+                "n_superblocks": cfg.n_superblocks,
+                "pattern": list(map(list, cfg.pattern)),
+            },
+        )
+        if keep_hlo:
+            (out_dir / f"{arch_name}__{shape_name}{suffix}.hlo.txt").write_text(hlo)
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_file.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "host_argument_size_in_bytes",
+              "host_output_size_in_bytes", "host_temp_size_in_bytes",
+              "peak_memory_in_bytes", "serialized_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ArchConfig override key=value (repeatable); "
+                    "used by §Perf hillclimb iterations")
+    ap.add_argument("--out-suffix", default="",
+                    help="artifact filename suffix (keeps baselines intact)")
+    ap.add_argument("--mesh-ctx", action="store_true",
+                    help="activate in-model sharding constraints (ctx.use_mesh)")
+    ap.add_argument("--serve-tp-only", action="store_true",
+                    help="serving cells: params TP-sharded only (no FSDP dim)")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+    if not (args.all or args.arch or args.shape):
+        ap.error("pass --all or --arch/--shape")
+
+    n_ok = n_skip = n_err = 0
+    for mesh_name in meshes:
+        for a in archs:
+            for s in shapes:
+                t0 = time.time()
+                rec = run_cell(a, s, mesh_name, force=args.force,
+                               keep_hlo=args.keep_hlo, overrides=overrides,
+                               suffix=args.out_suffix, mesh_ctx=args.mesh_ctx,
+                               serve_tp_only=args.serve_tp_only)
+                dt = time.time() - t0
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+                extra = ""
+                if st == "ok":
+                    mem = rec.get("memory_analysis", {})
+                    extra = (f"flops={rec['flops']:.3e} "
+                             f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                             f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+                elif st == "error":
+                    extra = rec.get("error", "")[:200]
+                print(f"[{mesh_name}] {a:28s} {s:12s} {st:8s} {dt:7.1f}s {extra}",
+                      flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Concrete NamedShardings for dry-run/train/serve step signatures.
+
+Centralizes divisibility-guarded placement of params, optimizer state,
+batches, and caches onto the production mesh (rules in
+``repro.distributed.sharding``; guards here because e.g. long_500k has
+global_batch=1, which no axis may shard)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import param_spec
+
+__all__ = [
+    "guard_spec",
+    "params_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "replicated",
+]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def guard_spec(mesh: Mesh, spec: P, shape: tuple) -> P:
+    """Drop sharded dims that don't divide evenly (GSPMD tolerates uneven,
+    but even placement keeps the roofline accounting clean and shard_map
+    compatible)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for d, s in zip(dims, shape):
+        if d is not None and s % _axis_size(mesh, d) != 0:
+            d = None
+        out.append(d)
+    return P(*out)
+
+
+def _data_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def params_shardings(mesh: Mesh, params_tree, serve_tp_only: bool = False):
+    """Rule-engine specs, divisibility-guarded, as NamedShardings.
+
+    serve_tp_only: drop the FSDP ("data"/"pod") dims — for serving, params
+    must be resident per TP group, or every decode step all-gathers the
+    full weight set over ICI (§Perf decode iteration)."""
+
+    def one(path, leaf):
+        spec = param_spec(path, leaf)
+        if serve_tp_only:
+            spec = P(*[None if d in ("data", "pod") else d for d in spec])
+        return NamedSharding(mesh, guard_spec(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def opt_shardings(mesh: Mesh, opt_tree, params_shardings_tree):
+    """m/v mirror the param shardings; step is replicated."""
+    rep = NamedSharding(mesh, P())
+
+    def build(tree):
+        return jax.tree_util.tree_map(lambda s: s, params_shardings_tree)
+
+    return {
+        "m": build(opt_tree["m"]),
+        "v": build(opt_tree["v"]),
+        "step": rep,
+    }
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    dp = _data_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            spec = P()
+        else:
+            spec = P(*([dp] + [None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, guard_spec(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cfg: ArchConfig, cache_tree):
+    """Cache layout: (nsb, B, ...) — batch over data axes, the widest inner
+    feature dim over model."""
+    dp = _data_axes(mesh)
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = leaf.ndim
+        if name in ("k", "v"):  # (nsb, B, G, S, hd): S over model —
+            # flash-decoding segments stay device-local (§Perf decode)
+            spec = P(None, dp, None, "model", None)
+        elif name in ("k_img", "v_img"):  # (nsb, B, G, n_img, hd)
+            spec = P(None, dp, None, None, "model")
+        elif name == "h" and nd == 4:  # mamba (nsb, B, di, N)
+            spec = P(None, dp, "model", None)
+        elif name == "conv":  # (nsb, B, cw-1, di)
+            spec = P(None, dp, None, "model")
+        elif name == "C":  # mlstm (nsb, B, H, dh, dh)
+            spec = P(None, dp, None, "model", None)
+        elif nd == 4:  # mlstm/slstm vectors (nsb, B, H, dh)
+            spec = P(None, dp, None, "model")
+        elif nd == 3:  # (nsb, B, H)
+            spec = P(None, dp, None)
+        else:
+            spec = P()
+        return NamedSharding(mesh, guard_spec(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,1 @@
+from . import layers, lm, moe, ssm, xlstm  # noqa: F401

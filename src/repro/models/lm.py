@@ -1,0 +1,488 @@
+"""The LM model zoo: one builder covering all ten assigned architectures.
+
+A model is a stack of *superblocks* — the config's ``pattern`` of
+(mixer, ffn) sublayers — scanned with stacked parameters, so compile time
+is O(|pattern|) regardless of depth (94-layer qwen3 compiles one
+superblock).  Three modes share the same forward code:
+
+  train    — causal forward over (B, S), chunked-vocab loss, no cache;
+  prefill  — causal forward that also fills the KV/state caches;
+  decode   — single-token step against the caches (B, 1).
+
+Caches are stacked pytrees (leading superblock dim) consumed/produced as
+scan xs/ys.  All parameter leaf names follow the sharding-rule convention
+in ``repro.distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.ctx import constrain
+
+from .layers import (
+    apply_rope,
+    chunked_softmax_xent,
+    decode_attention,
+    flash_attention,
+    rms_norm,
+    silu,
+)
+from .moe import moe_ffn
+from .ssm import mamba_mix
+from .xlstm import mlstm_mix, slstm_mix
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _lin(key, fan_in, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, dtype) * (fan_in ** -0.5)).astype(dtype)
+
+
+def _init_sublayer(cfg: ArchConfig, mixer: str, ffn: str, key) -> dict:
+    d, hd, H, G = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = iter(jax.random.split(key, 32))
+    p: dict = {"ln": jnp.ones((d,), jnp.float32)}
+    if mixer in ("attn", "xattn"):
+        p.update(
+            wq=_lin(next(ks), d, (d, H * hd)),
+            wk=_lin(next(ks), d, (d, G * hd)),
+            wv=_lin(next(ks), d, (d, G * hd)),
+            wo=_lin(next(ks), H * hd, (H * hd, d)),
+        )
+        if cfg.qk_norm:
+            p.update(q_norm=jnp.ones((hd,)), k_norm=jnp.ones((hd,)))
+        if mixer == "xattn":
+            p.update(gate=jnp.zeros(()), ln_kv=jnp.ones((d,)))
+    elif mixer == "mamba":
+        di, N, r_ = cfg.ssm_expand * d, cfg.ssm_state, cfg.dt_rank
+        p.update(
+            in_proj=_lin(next(ks), d, (d, 2 * di)),
+            conv_w=_lin(next(ks), cfg.ssm_conv, (di, cfg.ssm_conv)),
+            conv_b=jnp.zeros((di,)),
+            x_proj=_lin(next(ks), di, (di, r_ + 2 * N)),
+            dt_proj=_lin(next(ks), r_, (r_, di)),
+            dt_bias=jnp.log(
+                jnp.exp(
+                    jax.random.uniform(next(ks), (di,), minval=1e-3, maxval=0.1)
+                ) - 1.0
+            ),
+            A_log=jnp.log(
+                jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+            ),
+            D=jnp.ones((di,)),
+            out_proj=_lin(next(ks), di, (di, d)),
+        )
+    elif mixer == "mlstm":
+        di = cfg.xlstm_expand * d
+        p.update(
+            w_up=_lin(next(ks), d, (d, 2 * di)),
+            wq_l=_lin(next(ks), di, (di, di)),
+            wk_l=_lin(next(ks), di, (di, di)),
+            wv_l=_lin(next(ks), di, (di, di)),
+            wi=_lin(next(ks), di, (di, cfg.xlstm_heads)),
+            wf=_lin(next(ks), di, (di, cfg.xlstm_heads)),
+            w_down=_lin(next(ks), di, (di, d)),
+        )
+    elif mixer == "slstm":
+        Hx = cfg.xlstm_heads
+        dh = d // Hx
+        p.update(
+            sw_i=_lin(next(ks), d, (d, d)),
+            sw_f=_lin(next(ks), d, (d, d)),
+            sw_z=_lin(next(ks), d, (d, d)),
+            sw_o=_lin(next(ks), d, (d, d)),
+            r_i=_lin(next(ks), dh, (Hx, dh, dh)),
+            r_f=_lin(next(ks), dh, (Hx, dh, dh)),
+            r_z=_lin(next(ks), dh, (Hx, dh, dh)),
+            r_o=_lin(next(ks), dh, (Hx, dh, dh)),
+            b_i=jnp.zeros((d,)),
+            b_f=jnp.ones((d,)),  # forget-gate bias init > 0
+        )
+    else:
+        raise ValueError(mixer)
+
+    if ffn == "dense":
+        p.update(
+            ln2=jnp.ones((d,)),
+            w1=_lin(next(ks), d, (d, cfg.d_ff)),
+            w3=_lin(next(ks), d, (d, cfg.d_ff)),
+            w2=_lin(next(ks), cfg.d_ff, (cfg.d_ff, d)),
+        )
+    elif ffn == "moe":
+        E, f = cfg.n_experts, cfg.moe_d_ff
+        p.update(
+            ln2=jnp.ones((d,)),
+            router=_lin(next(ks), d, (d, E)),
+            moe_w1=_lin(next(ks), d, (E, d, f)),
+            moe_w3=_lin(next(ks), d, (E, d, f)),
+            moe_w2=_lin(next(ks), f, (E, f, d)),
+        )
+        if cfg.shared_expert:
+            p.update(
+                w1=_lin(next(ks), d, (d, cfg.d_ff)),
+                w3=_lin(next(ks), d, (d, cfg.d_ff)),
+                w2=_lin(next(ks), cfg.d_ff, (cfg.d_ff, d)),
+            )
+    elif ffn != "none":
+        raise ValueError(ffn)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LM:
+    cfg: ArchConfig
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    remat: bool = True
+
+    # ----------------------------------------------------------------- init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_embed, k_blocks, k_head = jax.random.split(key, 3)
+        params: dict = {}
+        params["embed"] = _lin(k_embed, cfg.d_model, (cfg.vocab_size, cfg.d_model))
+        sb_keys = jax.random.split(k_blocks, cfg.n_superblocks)
+
+        def one_sb(k):
+            kk = jax.random.split(k, len(cfg.pattern))
+            return {
+                str(i): _init_sublayer(cfg, mixer, ffn, kk[i])
+                for i, (mixer, ffn) in enumerate(cfg.pattern)
+            }
+
+        params["blocks"] = jax.vmap(one_sb)(sb_keys)
+        params["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = _lin(k_head, cfg.d_model, (cfg.d_model, cfg.vocab_size))
+        return params
+
+    def param_struct(self) -> dict:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # ---------------------------------------------------------------- pieces
+    def _lm_head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def _embed(self, params, batch) -> jnp.ndarray:
+        if self.cfg.embed_input:
+            # cast-then-gather: the bf16 table halves gather traffic and the
+            # cast fuses; the table is feature-sharded so the gather is local
+            return params["embed"].astype(self.compute_dtype)[batch["tokens"]]
+        return batch["frames"].astype(self.compute_dtype)  # audio stub frontend
+
+    def _attn(self, p, h, mode, pos, kv_cache):
+        cfg = self.cfg
+        B, T, d = h.shape
+        H, G, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        x = rms_norm(h, p["ln"], cfg.norm_eps)
+        q = (x @ p["wq"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        k = (x @ p["wk"]).reshape(B, T, G, hd).transpose(0, 2, 1, 3)
+        v = (x @ p["wv"]).reshape(B, T, G, hd).transpose(0, 2, 1, 3)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if cfg.rope_theta > 0:
+            positions = pos + jnp.arange(T)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        # §Perf: materialize KV at full head count for the flash compute so
+        # the head dim shards evenly over the model axis (the cache itself
+        # stays G-wide; see EXPERIMENTS.md §Perf)
+        rep = (
+            (lambda x: jnp.repeat(x, H // G, axis=1))
+            if (cfg.attn_repeat_kv and G < H)
+            else (lambda x: x)
+        )
+        new_cache = None
+        if mode == "train":
+            o = flash_attention(
+                q, rep(k), rep(v), causal=True,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            )
+        elif mode == "prefill":
+            ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, 0, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, 0, axis=2)
+            new_cache = {"k": ck, "v": cv}
+            o = flash_attention(
+                q, rep(k), rep(v), causal=True,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            )
+        else:  # decode
+            ck = jax.lax.dynamic_update_slice(
+                kv_cache["k"], k, (0, 0, pos, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                kv_cache["v"], v, (0, 0, pos, 0)
+            )
+            new_cache = {"k": ck, "v": cv}
+            o = decode_attention(q, ck, cv, pos + 1, kv_chunk=cfg.kv_chunk)
+        o = o.transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+        return h + (o @ p["wo"]).astype(h.dtype), new_cache
+
+    def _xattn(self, p, h, mode, img_embeds, cache):
+        cfg = self.cfg
+        B, T, d = h.shape
+        H, G, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        x = rms_norm(h, p["ln"], cfg.norm_eps)
+        q = (x @ p["wq"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        if mode == "decode" and cache is not None:
+            k, v = cache["k_img"], cache["v_img"]
+            new_cache = cache
+        else:
+            y = rms_norm(img_embeds.astype(h.dtype), p["ln_kv"], cfg.norm_eps)
+            n_img = y.shape[1]
+            k = (y @ p["wk"]).reshape(B, n_img, G, hd).transpose(0, 2, 1, 3)
+            v = (y @ p["wv"]).reshape(B, n_img, G, hd).transpose(0, 2, 1, 3)
+            new_cache = {"k_img": k, "v_img": v} if mode != "train" else None
+        o = flash_attention(
+            q, k, v, causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+        )
+        o = o.transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+        return h + jnp.tanh(p["gate"]).astype(h.dtype) * (o @ p["wo"]).astype(h.dtype), new_cache
+
+    def _dense_ffn(self, p, h):
+        x = rms_norm(h, p["ln2"], self.cfg.norm_eps)
+        y = (silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+        return h + y.astype(h.dtype)
+
+    def _moe_ffn(self, p, h):
+        cfg = self.cfg
+        x = rms_norm(h, p["ln2"], cfg.norm_eps)
+        y, aux = moe_ffn(
+            p,
+            x,
+            n_experts=cfg.n_experts,
+            top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+            dispatch_mode=cfg.dispatch_mode,
+            shared_expert=cfg.shared_expert,
+        )
+        return h + y.astype(h.dtype), aux
+
+    # --------------------------------------------------------------- forward
+    def _forward(self, params, h, *, mode, pos, cache, img_embeds):
+        cfg = self.cfg
+        cast = lambda t: jax.tree_util.tree_map(
+            lambda x: x.astype(self.compute_dtype)
+            if x.dtype == jnp.float32 and x.ndim >= 2
+            else x,
+            t,
+        )
+
+        def superblock(h, xs):
+            p_sb, cache_sb = xs
+            p_sb = cast(p_sb)
+            new_cache = {}
+            aux = {"lb_loss": jnp.float32(0), "z_loss": jnp.float32(0),
+                   "dropped_frac": jnp.float32(0)}
+            for i, (mixer, ffn) in enumerate(cfg.pattern):
+                pm = p_sb[str(i)]
+                csl = cache_sb.get(str(i)) if cache_sb else None
+                if mixer == "attn":
+                    h, nc = self._attn(pm, h, mode, pos, csl)
+                elif mixer == "xattn":
+                    h, nc = self._xattn(pm, h, mode, img_embeds, csl)
+                elif mixer == "mamba":
+                    x = rms_norm(h, pm["ln"], cfg.norm_eps)
+                    y, st = mamba_mix(pm, x, csl if mode == "decode" else None,
+                                      chunk=cfg.ssm_chunk)
+                    h = h + y.astype(h.dtype)
+                    nc = st if mode != "train" else None
+                elif mixer == "mlstm":
+                    x = rms_norm(h, pm["ln"], cfg.norm_eps)
+                    y, st = mlstm_mix(pm, x, csl if mode == "decode" else None,
+                                      n_heads=cfg.xlstm_heads)
+                    h = h + y.astype(h.dtype)
+                    nc = st if mode != "train" else None
+                elif mixer == "slstm":
+                    x = rms_norm(h, pm["ln"], cfg.norm_eps)
+                    y, st = slstm_mix(pm, x, csl if mode == "decode" else None,
+                                      n_heads=cfg.xlstm_heads)
+                    h = h + y.astype(h.dtype)
+                    nc = st if mode != "train" else None
+                if nc is not None:
+                    new_cache[str(i)] = nc
+                if ffn == "dense":
+                    h = self._dense_ffn(pm, h)
+                elif ffn == "moe":
+                    h, a = self._moe_ffn(pm, h)
+                    aux = {k: aux[k] + a[k] for k in aux}
+            # NOTE: no blanket constraint on h here — batch sharding
+            # propagates from the inputs, and pinning (B,T,d) replicated-d
+            # trips an XLA SPMD dynamic-slice bug against the
+            # feature-sharded embedding gather (see EXPERIMENTS.md §Perf i1)
+            return h, (new_cache, aux)
+
+        fn = superblock
+        if self.remat and mode == "train":
+            fn = jax.checkpoint(
+                superblock,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        if cache is None:
+            cache = {}
+        h, (new_caches, auxs) = jax.lax.scan(fn, h, (params["blocks"], cache))
+        aux = jax.tree_util.tree_map(lambda a: jnp.sum(a) / cfg.n_superblocks, auxs)
+        return h, new_caches, aux
+
+    # ------------------------------------------------------------------ API
+    def loss(self, params, batch) -> tuple[jnp.ndarray, dict]:
+        cfg = self.cfg
+        h = self._embed(params, batch)
+        img = batch.get("img_embeds")
+        h, _, aux = self._forward(
+            params, h, mode="train", pos=jnp.int32(0), cache=None, img_embeds=img
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        head = self._lm_head(params).astype(self.compute_dtype)
+        mask = batch.get("mask")
+        xent = chunked_softmax_xent(
+            h, head, batch["labels"], mask=mask, chunk=cfg.loss_chunk
+        )
+        loss = xent
+        if cfg.n_experts:
+            loss = loss + 0.01 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+        metrics = {"xent": xent, **aux}
+        return loss, metrics
+
+    def prefill(self, params, batch, cache) -> tuple[dict, jnp.ndarray]:
+        cfg = self.cfg
+        h = self._embed(params, batch)
+        img = batch.get("img_embeds")
+        h, new_cache, _ = self._forward(
+            params, h, mode="prefill", pos=jnp.int32(0), cache=cache, img_embeds=img
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bd,dv->bv", h[:, -1], self._lm_head(params).astype(h.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return new_cache, logits
+
+    def decode_step(self, params, cache, batch) -> tuple[dict, jnp.ndarray]:
+        """batch: {token: (B,) | frame: (B, d), pos: ()} -> (cache, logits)."""
+        cfg = self.cfg
+        pos = batch["pos"]
+        if cfg.embed_input:
+            h = params["embed"][batch["token"]][:, None].astype(self.compute_dtype)
+        else:
+            h = batch["frame"][:, None].astype(self.compute_dtype)
+        img = batch.get("img_embeds")
+        h, new_cache, _ = self._forward(
+            params, h, mode="decode", pos=pos, cache=cache, img_embeds=img
+        )
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bd,dv->bv", h[:, 0], self._lm_head(params).astype(h.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return new_cache, logits
+
+    # ---------------------------------------------------------------- caches
+    def init_cache(self, batch_size: int, max_seq: int) -> dict:
+        """Zero caches, stacked over superblocks (scan xs layout)."""
+        cfg = self.cfg
+        B, S = batch_size, max_seq
+        G, hd, d = cfg.n_kv_heads, cfg.hd, cfg.d_model
+        nsb = cfg.n_superblocks
+        out: dict = {}
+        for i, (mixer, _ffn) in enumerate(cfg.pattern):
+            if mixer == "attn":
+                out[str(i)] = {
+                    "k": jnp.zeros((nsb, B, G, S, hd), self.compute_dtype),
+                    "v": jnp.zeros((nsb, B, G, S, hd), self.compute_dtype),
+                }
+            elif mixer == "xattn":
+                n_img = cfg.n_img_tokens
+                out[str(i)] = {
+                    "k_img": jnp.zeros((nsb, B, G, n_img, hd), self.compute_dtype),
+                    "v_img": jnp.zeros((nsb, B, G, n_img, hd), self.compute_dtype),
+                }
+            elif mixer == "mamba":
+                di, N, cw = cfg.ssm_expand * d, cfg.ssm_state, cfg.ssm_conv
+                out[str(i)] = {
+                    "h": jnp.zeros((nsb, B, di, N), jnp.float32),
+                    "conv": jnp.zeros((nsb, B, cw - 1, di), self.compute_dtype),
+                }
+            elif mixer == "mlstm":
+                di, Hx = cfg.xlstm_expand * d, cfg.xlstm_heads
+                dh = di // Hx
+                out[str(i)] = {
+                    "C": jnp.zeros((nsb, B, Hx, dh, dh), jnp.float32),
+                    "n": jnp.zeros((nsb, B, Hx, dh), jnp.float32),
+                    "m": jnp.full((nsb, B, Hx), -jnp.inf, jnp.float32),
+                }
+            elif mixer == "slstm":
+                Hx = cfg.xlstm_heads
+                dh = d // Hx
+                out[str(i)] = {
+                    "h": jnp.zeros((nsb, B, Hx, dh), jnp.float32),
+                    "c": jnp.zeros((nsb, B, Hx, dh), jnp.float32),
+                    "n": jnp.ones((nsb, B, Hx, dh), jnp.float32),
+                    "m": jnp.zeros((nsb, B, Hx, dh), jnp.float32),
+                }
+        return out
+
+    def cache_struct(self, batch_size: int, max_seq: int) -> dict:
+        return jax.eval_shape(lambda: self.init_cache(batch_size, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    Weak-type-correct, shardable, no device allocation (the modality
+    frontends of [audio]/[vlm] archs are stubs: precomputed frame/patch
+    embeddings appear here as inputs).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    bf16, i32 = jnp.bfloat16, jnp.int32
+    d = cfg.d_model
+    if shape.kind == "train":
+        batch: dict = {}
+        if cfg.embed_input:
+            batch["tokens"] = sds((B, S), i32)
+        else:
+            batch["frames"] = sds((B, S, d), bf16)
+        batch["labels"] = sds((B, S), i32)
+        if cfg.n_img_tokens:
+            batch["img_embeds"] = sds((B, cfg.n_img_tokens, d), bf16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.embed_input:
+            batch["tokens"] = sds((B, S), i32)
+        else:
+            batch["frames"] = sds((B, S, d), bf16)
+        if cfg.n_img_tokens:
+            batch["img_embeds"] = sds((B, cfg.n_img_tokens, d), bf16)
+        return batch
+    # decode
+    batch = {"pos": sds((), i32)}
+    if cfg.embed_input:
+        batch["token"] = sds((B,), i32)
+    else:
+        batch["frame"] = sds((B, d), bf16)
+    if cfg.n_img_tokens:
+        batch["img_embeds"] = sds((B, cfg.n_img_tokens, d), bf16)
+    return batch

@@ -1,0 +1,153 @@
+"""Mixture-of-Experts layer with compressed-key-sort dispatch.
+
+Token -> expert dispatch is a *sort problem*: entries keyed by
+``(expert_id, arrival order)`` must be grouped by expert with a stable
+order.  This is where the paper's technique is a first-class feature of the
+framework (DESIGN.md §4.1): the dispatch sort key packs
+``expert_id || flat position`` into ``ceil(log2 E) + ceil(log2 N·k)`` bits —
+Theorem 2 applied to a key domain known at trace time.  The full 64-bit key
+would need two uint32 sort words; the compressed key fits **one**, halving
+every comparator stage of the dispatch sort (the paper's sort-key ratio,
+at trace time instead of from a measured D-bitmap).
+
+Two dispatch modes:
+  * ``sort``   — compressed-key sort of (expert, position) entries, then
+    capacity-bucket scatter.  Runs under jit; on a sharded token axis XLA
+    lowers the sort to a distributed merge exchange.
+  * ``einsum`` — GShard-style cumsum-over-one-hot positions (no sort).
+    Default for the giant dry-run cells.
+Both produce identical (E, C, d) dispatch buffers (tested).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.ctx import constrain
+
+from .layers import silu
+
+
+def _bits_for(n: int) -> int:
+    return max(1, int(np.ceil(np.log2(max(n, 2)))))
+
+
+def dispatch_indices_sort(expert_id: jnp.ndarray, n_experts: int):
+    """Stable grouping by expert via the compressed key sort.
+
+    expert_id: (M,) int32 (M = N * top_k flat entries).  Returns
+    (position_in_expert (M,), sort permutation (M,)) where positions count
+    0.. within each expert in arrival order.
+
+    The sort key is the trace-time-compressed ``expert_id || arrival``:
+    provably order-equivalent to the 64-bit wide key (Theorem 2 — every
+    distinction bit of the domain lies in the low ``be + bm`` bits).
+    """
+    m = expert_id.shape[0]
+    be, bm = _bits_for(n_experts), _bits_for(m)
+    if be + bm <= 32:
+        key = (expert_id.astype(jnp.uint32) << np.uint32(bm)) | jnp.arange(
+            m, dtype=jnp.uint32
+        )
+        sorted_key = jax.lax.sort(key)  # single-word comparator
+        perm = (sorted_key & jnp.uint32((1 << bm) - 1)).astype(jnp.int32)
+        eid_sorted = (sorted_key >> np.uint32(bm)).astype(jnp.int32)
+    else:  # fall back to two-word lexicographic sort
+        eid_s, perm = jax.lax.sort(
+            (expert_id.astype(jnp.uint32), jnp.arange(m, dtype=jnp.uint32)), num_keys=1
+        )
+        eid_sorted, perm = eid_s.astype(jnp.int32), perm.astype(jnp.int32)
+    start = jnp.searchsorted(eid_sorted, jnp.arange(n_experts))
+    pos_sorted = jnp.arange(m, dtype=jnp.int32) - start[eid_sorted]
+    pos = jnp.zeros((m,), jnp.int32).at[perm].set(pos_sorted)
+    return pos, perm
+
+
+def dispatch_indices_cumsum(expert_onehot: jnp.ndarray):
+    """GShard-style positions: cumulative sum of the one-hot matrix.
+
+    expert_onehot: (M, E) {0,1}.  Returns position_in_expert (M,).
+    """
+    pos = (jnp.cumsum(expert_onehot, axis=0) - 1) * expert_onehot
+    return jnp.sum(pos, axis=1).astype(jnp.int32)
+
+
+def moe_ffn(
+    p: dict,
+    x: jnp.ndarray,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dispatch_mode: str = "einsum",
+    shared_expert: bool = False,
+) -> tuple[jnp.ndarray, dict]:
+    """x: (B, T, d) -> (B, T, d), plus aux metrics/losses.
+
+    Experts are sharded over the "model" axis (EP); the (E, C, d) dispatch
+    buffer is constrained accordingly.
+    """
+    B, T, d = x.shape
+    n = B * T
+    xf = x.reshape(n, d)
+
+    logits = jnp.einsum(
+        "nd,de->ne", xf, p["router"], preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, top_k)  # (n, k)
+    if top_k > 1:
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # flatten k-major so first choices win capacity contention
+    e_flat = eidx.T.reshape(-1).astype(jnp.int32)  # (k*n,)
+    g_flat = gate.T.reshape(-1)
+    t_flat = jnp.tile(jnp.arange(n, dtype=jnp.int32), (top_k,))
+    m = n * top_k
+    cap = max(8, int(np.ceil(n * top_k / n_experts * capacity_factor)))
+
+    if dispatch_mode == "sort":
+        pos, _ = dispatch_indices_sort(e_flat, n_experts)
+    else:
+        onehot = jax.nn.one_hot(e_flat, n_experts, dtype=jnp.int32)
+        pos = dispatch_indices_cumsum(onehot)
+
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)  # cap = out-of-bounds -> dropped
+
+    buf = jnp.zeros((n_experts, cap, d), x.dtype)
+    buf = buf.at[e_flat, slot].add(xf[t_flat], mode="drop")
+    # NOTE: do NOT pin (E, C, d) shardings here — with scatter-built
+    # dispatch, forcing E over "model" makes GSPMD materialize a replicated
+    # buffer and all-reduce it per layer (measured 7.5x total collective
+    # blow-up, EXPERIMENTS.md §Perf qwen3 i1); XLA's propagated sharding
+    # (tokens stay data-sharded) is strictly better.
+
+    h1 = jnp.einsum("ecd,edf->ecf", buf, p["moe_w1"])
+    h3 = jnp.einsum("ecd,edf->ecf", buf, p["moe_w3"])
+    h = silu(h1) * h3
+    y = jnp.einsum("ecf,efd->ecd", h, p["moe_w2"])
+
+    # combine: gather each kept entry's expert output, weight by its gate
+    out_e = y[e_flat, slot]  # (m, d); dropped entries read slot `cap`... guard:
+    out_e = jnp.where(keep[:, None], out_e, 0)
+    contrib = out_e * g_flat[:, None].astype(out_e.dtype)
+    out = jnp.zeros((n, d), x.dtype).at[t_flat].add(contrib.astype(x.dtype))
+
+    if shared_expert:
+        hs = silu(jnp.einsum("nd,df->nf", xf, p["w1"])) * jnp.einsum(
+            "nd,df->nf", xf, p["w3"]
+        )
+        out = out + jnp.einsum("nf,fd->nd", hs, p["w2"])
+
+    # aux: load-balance (Switch) + router z-loss
+    me = jnp.mean(jax.nn.one_hot(eidx[:, 0], n_experts, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = {
+        "lb_loss": n_experts * jnp.sum(me * ce),
+        "z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.reshape(B, T, d), aux

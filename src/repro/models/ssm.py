@@ -1,0 +1,107 @@
+"""Selective SSM (Mamba) block — chunked associative scan.
+
+Training/prefill materializes per-chunk (B, c, di, N) discretized states and
+carries the (B, di, N) hidden state across chunks with a first-order
+associative scan, bounding peak memory at one chunk.  Decode is the O(1)
+single-step recurrence with a rolling conv cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import silu
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 cache: jnp.ndarray | None = None):
+    """Depthwise causal conv.  x: (B, T, di); w: (di, k); b: (di,).
+
+    cache: (B, k-1, di) trailing context from the previous segment (decode /
+    chunked prefill); returns (y, new_cache).
+    """
+    B, T, di = x.shape
+    k = w.shape[1]
+    if cache is None:
+        cache = jnp.zeros((B, k - 1, di), x.dtype)
+    xx = jnp.concatenate([cache, x], axis=1)  # (B, T+k-1, di)
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + xx[:, i : i + T, :] * w[None, None, :, i]
+    new_cache = xx[:, T:, :] if k > 1 else cache
+    return y + b[None, None, :], new_cache
+
+
+def mamba_mix(p: dict, x: jnp.ndarray, state: dict | None = None,
+              chunk: int = 256) -> tuple[jnp.ndarray, dict]:
+    """x: (B, T, d) -> (B, T, d).  state carries {h, conv} for decode.
+
+    p: in_proj (d, 2di), conv_w (di, k), conv_b (di,), x_proj (di, r+2N),
+       dt_proj (r, di), dt_bias (di,), A_log (di, N), D (di,),
+       out_proj (di, d).
+    """
+    B, T, d = x.shape
+    di = p["A_log"].shape[0]
+    N = p["A_log"].shape[1]
+    r = p["dt_proj"].shape[0]
+
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    x1, z = jnp.split(xz, 2, axis=-1)  # (B, T, di)
+
+    conv_cache = None if state is None else state["conv"]
+    x1, new_conv = _causal_conv(x1, p["conv_w"], p["conv_b"], conv_cache)
+    x1 = silu(x1)
+
+    xdbc = jnp.einsum("bte,ef->btf", x1, p["x_proj"])
+    dt_r, B_, C_ = jnp.split(xdbc, [r, r + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,re->bte", dt_r, p["dt_proj"]) + p["dt_bias"]
+    ).astype(jnp.float32)  # (B, T, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, N)
+
+    h0 = (
+        jnp.zeros((B, di, N), jnp.float32)
+        if state is None or "h" not in state
+        else state["h"]
+    )
+
+    if T == 1:  # decode fast path
+        dA = jnp.exp(dt[:, 0, :, None] * A[None])  # (B, di, N)
+        dBx = (
+            dt[:, 0, :, None]
+            * B_[:, 0, None, :].astype(jnp.float32)
+            * x1[:, 0, :, None].astype(jnp.float32)
+        )
+        h = dA * h0 + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_[:, 0].astype(jnp.float32))[:, None]
+        h_last = h
+    else:
+        chunk = min(chunk, T)
+        assert T % chunk == 0
+        nc = T // chunk
+
+        def step(h_in, idx):
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, idx * chunk, chunk, 1)
+            dt_c, B_c, C_c, x_c = sl(dt), sl(B_), sl(C_), sl(x1)
+            dA = jnp.exp(dt_c[..., None] * A[None, None])  # (B, c, di, N)
+            dBx = (
+                dt_c[..., None]
+                * B_c[:, :, None, :].astype(jnp.float32)
+                * x_c[..., None].astype(jnp.float32)
+            )
+
+            def comb(a, b):
+                return (a[0] * b[0], b[0] * a[1] + b[1])
+
+            cumA, cumB = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+            h_all = cumA * h_in[:, None] + cumB  # (B, c, di, N)
+            y_c = jnp.einsum("bcdn,bcn->bcd", h_all, C_c.astype(jnp.float32))
+            return h_all[:, -1], y_c
+
+        h_last, ys = jax.lax.scan(step, h0, jnp.arange(nc))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, T, di)
+
+    y = y + x1.astype(jnp.float32) * p["D"][None, None]
+    out = (y.astype(x.dtype) * silu(z)) @ p["out_proj"]
+    return out, {"h": h_last, "conv": new_conv}

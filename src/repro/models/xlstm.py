@@ -1,0 +1,122 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential recurrence).
+
+Both use stabilized exponential gating (the m-state max-trick).  mLSTM here
+runs as a time scan carrying (C, n, m) — correct for train/prefill/decode
+alike; the chunkwise-parallel production form is a §Perf candidate.  sLSTM
+has data-dependent recurrence (h feeds the gates) and cannot be
+parallelized over time (the paper says as much), so a scan is the honest
+implementation; its block-diagonal recurrent weights keep the per-step cost
+at (H, dh, dh).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import silu
+
+
+def mlstm_mix(p: dict, x: jnp.ndarray, state: dict | None = None,
+              n_heads: int = 4) -> tuple[jnp.ndarray, dict]:
+    """mLSTM block.  x: (B, T, d).
+
+    p: w_up (d, 2di), wq_l/wk_l/wv_l (di, di), wi/wf (di, H), w_down (di, d).
+    state: {C: (B,H,dh,dh), n: (B,H,dh), m: (B,H)}.
+    """
+    B, T, d = x.shape
+    di = p["wq_l"].shape[0]
+    H = n_heads
+    dh = di // H
+
+    xz = jnp.einsum("btd,de->bte", x, p["w_up"])
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, T, di)
+
+    def heads(w):
+        return jnp.einsum("bte,ef->btf", xi, w).reshape(B, T, H, dh)
+
+    q, k, v = heads(p["wq_l"]), heads(p["wk_l"]), heads(p["wv_l"])
+    k = k / jnp.sqrt(jnp.float32(dh)).astype(k.dtype)
+    ig = jnp.einsum("bte,eh->bth", xi, p["wi"]).astype(jnp.float32)  # log-space
+    fg = jnp.einsum("bte,eh->bth", xi, p["wf"]).astype(jnp.float32)
+    fg = jax.nn.log_sigmoid(fg)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, t):
+        C, n, m = carry
+        qt = jax.lax.dynamic_slice_in_dim(q, t, 1, 1)[:, 0].astype(jnp.float32)
+        kt = jax.lax.dynamic_slice_in_dim(k, t, 1, 1)[:, 0].astype(jnp.float32)
+        vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 1)[:, 0].astype(jnp.float32)
+        it = jax.lax.dynamic_slice_in_dim(ig, t, 1, 1)[:, 0]
+        ft = jax.lax.dynamic_slice_in_dim(fg, t, 1, 1)[:, 0]
+        m_new = jnp.maximum(ft + m, it)
+        fs = jnp.exp(ft + jnp.where(jnp.isfinite(m), m, -jnp.inf) - m_new)
+        is_ = jnp.exp(it - m_new)
+        C = fs[..., None, None] * C + is_[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = fs[..., None] * n + is_[..., None] * kt
+        num = jnp.einsum("bhde,bhd->bhe", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), jnp.arange(T))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, di).astype(x.dtype)  # (B,T,H,dh)->
+    out = jnp.einsum("bte,ed->btd", h * silu(z), p["w_down"])
+    return out, {"C": C, "n": n, "m": m}
+
+
+def slstm_mix(p: dict, x: jnp.ndarray, state: dict | None = None,
+              n_heads: int = 4) -> tuple[jnp.ndarray, dict]:
+    """sLSTM block.  x: (B, T, d) with d == hidden width (post-LN residual).
+
+    p: sw_i/sw_f/sw_z/sw_o (d, d), r_i/r_f/r_z/r_o (H, dh, dh),
+       b_i/b_f (d,).  state: {h, c, n, m} each (B, H, dh).
+    """
+    B, T, d = x.shape
+    H = n_heads
+    dh = d // H
+
+    wx_i = jnp.einsum("btd,de->bte", x, p["sw_i"]).astype(jnp.float32) + p["b_i"]
+    wx_f = jnp.einsum("btd,de->bte", x, p["sw_f"]).astype(jnp.float32) + p["b_f"]
+    wx_z = jnp.einsum("btd,de->bte", x, p["sw_z"]).astype(jnp.float32)
+    wx_o = jnp.einsum("btd,de->bte", x, p["sw_o"]).astype(jnp.float32)
+
+    if state is None:
+        h0 = jnp.zeros((B, H, dh), jnp.float32)
+        c0 = jnp.zeros((B, H, dh), jnp.float32)
+        n0 = jnp.ones((B, H, dh), jnp.float32)
+        m0 = jnp.zeros((B, H, dh), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+
+    def rec(h, r):  # block-diagonal recurrent matmul
+        return jnp.einsum("bhd,hde->bhe", h, r)
+
+    def step(carry, t):
+        h, c, n, m = carry
+        g = lambda wx: jax.lax.dynamic_slice_in_dim(wx, t, 1, 1)[:, 0].reshape(B, H, dh)
+        it = g(wx_i) + rec(h, p["r_i"])
+        ft = g(wx_f) + rec(h, p["r_f"])
+        zt = jnp.tanh(g(wx_z) + rec(h, p["r_z"]))
+        ot = jax.nn.sigmoid(g(wx_o) + rec(h, p["r_o"]))
+        lf = jax.nn.log_sigmoid(ft)  # forget in log space (sigmoid variant)
+        m_new = jnp.maximum(lf + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c = f_ * c + i_ * zt
+        n = f_ * n + i_
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0), jnp.arange(T))
+    out = jnp.moveaxis(hs, 0, 1).reshape(B, T, d).astype(x.dtype)
+    return out, {"h": h, "c": c, "n": n, "m": m}

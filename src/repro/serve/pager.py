@@ -1,0 +1,101 @@
+"""Paged KV-cache manager whose page index is a reconstructable B-tree.
+
+Pages of ``page_tokens`` KV slots are allocated from a free list; the page
+table maps ``(seq_id, page_no) -> physical page``.  Exactly like the
+paper's main-memory indexes, the *search index* over the page table is
+never persisted: on engine restart (or replica bring-up) it is rebuilt from
+the table rows with the compressed key sort — `(seq_id << bits) || page_no`
+keys compress to their few distinction bits, and the bulk build produces
+the lookup tree.  ``rebuild_index`` *is* ``repro.core.reconstruct`` on this
+table.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.btree import search_batch
+from repro.core.keyformat import KeySet
+from repro.core.reconstruct import ReconstructionResult, reconstruct_index
+
+__all__ = ["PagedKVManager"]
+
+
+def _pack_key(seq_id: int, page_no: int) -> np.ndarray:
+    """(seq_id, page_no) -> (2,) uint32 key words (word 0 most significant)."""
+    return np.asarray([seq_id, page_no], dtype=np.uint32)
+
+
+@dataclass
+class PagedKVManager:
+    n_pages: int
+    page_tokens: int
+    _free: list = field(default_factory=list)
+    _table: dict = field(default_factory=dict)  # (seq, page_no) -> phys page
+    _index: ReconstructionResult | None = None
+    _index_dirty: bool = True
+
+    def __post_init__(self):
+        self._free = list(range(self.n_pages - 1, -1, -1))
+
+    # ------------------------------------------------------------- mutation
+    def alloc(self, seq_id: int, page_no: int) -> int:
+        if not self._free:
+            raise MemoryError("KV pager out of pages")
+        phys = self._free.pop()
+        self._table[(seq_id, page_no)] = phys
+        self._index_dirty = True
+        return phys
+
+    def free_seq(self, seq_id: int) -> int:
+        gone = [k for k in self._table if k[0] == seq_id]
+        for k in gone:
+            self._free.append(self._table.pop(k))
+        self._index_dirty = True
+        return len(gone)
+
+    def pages_for(self, seq_id: int, n_tokens: int) -> list[int]:
+        """Ensure pages covering n_tokens exist; returns physical page list."""
+        need = -(-n_tokens // self.page_tokens)
+        out = []
+        for p in range(need):
+            if (seq_id, p) not in self._table:
+                self.alloc(seq_id, p)
+            out.append(self._table[(seq_id, p)])
+        return out
+
+    # ---------------------------------------------------------------- index
+    def rebuild_index(self) -> ReconstructionResult:
+        """Reconstruct the page-table B-tree (the paper's recovery path)."""
+        if not self._table:
+            raise ValueError("empty page table")
+        items = sorted(self._table.items())
+        words = np.stack([_pack_key(s, p) for (s, p), _ in items])
+        rids = np.asarray([phys for _, phys in items], np.uint32)
+        ks = KeySet(words=words, lengths=np.full(len(items), 8, np.int32), rids=rids)
+        self._index = reconstruct_index(ks)
+        self._index_dirty = False
+        return self._index
+
+    def lookup(self, seq_id: int, page_no: int) -> int | None:
+        """Index-backed point lookup (tree search, not the dict)."""
+        if self._index is None or self._index_dirty:
+            self.rebuild_index()
+        import jax.numpy as jnp
+
+        q = jnp.asarray(_pack_key(seq_id, page_no))[None, :]
+        found, rid, _ = search_batch(self._index.tree, q)
+        return int(rid[0]) if bool(found[0]) else None
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "pages_used": self.n_pages - len(self._free),
+            "pages_free": len(self._free),
+            "index_keys": len(self._table),
+            "compression_ratio": (
+                self._index.stats.get("compression_ratio") if self._index else None
+            ),
+        }

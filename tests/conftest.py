@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — smoke tests and
+benches must see 1 device; multi-device tests spawn subprocesses."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_masked_words(rng, n, w, mask=None, seed_offset=0):
+    """Random keys with limited variant bit positions (realistic tables)."""
+    if mask is None:
+        mask = rng.integers(0, 2**32, size=w, dtype=np.uint32)
+    return rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.asarray(
+        mask, np.uint32
+    )

@@ -1,0 +1,166 @@
+"""B-tree construction/search/online-mutation tests (§4.2-4.3, §5.3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.btree import BTreeConfig, search_batch, search_batch_partial
+from repro.core.index import OnlineIndex
+from repro.core.keyformat import KeySet, encode_int32, encode_varchar, encode_multicolumn, keys_to_words
+from repro.core.metadata import meta_from_keys, meta_on_insert
+from repro.core.reconstruct import full_key_reconstruct, reconstruct_index
+
+
+def _make_keyset(rng, n=500, w=3, mask=0x0FFF0FFF):
+    arr = np.unique(
+        rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(mask), axis=0
+    )
+    rng.shuffle(arr)
+    return KeySet(
+        words=arr,
+        lengths=np.full(len(arr), w * 4, np.int32),
+        rids=np.arange(len(arr), dtype=np.uint32),
+    )
+
+
+def test_tree_geometry(rng):
+    """Node geometry per §5.3: fanouts 14/9, fill 0.9 -> 12/8."""
+    cfg = BTreeConfig()
+    assert cfg.leaf_cap == 12 and cfg.nonleaf_cap == 8
+    ks = _make_keyset(rng, 3000)
+    res = reconstruct_index(ks)
+    npl = res.tree.nodes_per_level()
+    n = ks.n
+    assert npl[-1] == -(-n // 12)
+    for lvl in range(len(npl) - 1):
+        assert npl[lvl] == -(-npl[lvl + 1] // 8)
+    assert npl[0] == 1  # root
+
+
+def test_search_hits_and_misses(rng):
+    ks = _make_keyset(rng, 800)
+    res = reconstruct_index(ks)
+    q = jnp.asarray(ks.words)
+    found, rid, pos = search_batch(res.tree, q)
+    assert bool(found.all())
+    assert (np.asarray(ks.words)[np.asarray(rid)] == np.asarray(ks.words)).all()
+    # misses: flip low bits of existing keys to values not present
+    missing = np.asarray(ks.words).copy()
+    missing[:, -1] ^= np.uint32(0xF0000000)  # outside mask -> absent
+    f2, _, _ = search_batch(res.tree, jnp.asarray(missing))
+    assert not bool(f2.any())
+
+
+def test_partial_key_search_equivalence(rng):
+    ks = _make_keyset(rng, 1200)
+    res = reconstruct_index(ks)
+    q = jnp.asarray(ks.words)
+    f1, r1, _ = search_batch(res.tree, q)
+    f2, r2, nderef = search_batch_partial(res.tree, q)
+    assert (np.asarray(f1) == np.asarray(f2)).all()
+    assert (np.asarray(r1) == np.asarray(r2)).all()
+    # partial keys screen to ~1 deref (vs leaf_cap full compares)
+    assert float(np.asarray(nderef).mean()) < 3.0
+
+
+def test_compressed_equals_full_reconstruction(rng):
+    ks = _make_keyset(rng, 700)
+    a = reconstruct_index(ks)
+    b = full_key_reconstruct(ks)
+    assert (np.asarray(a.rid_sorted) == np.asarray(b.rid_sorted)).all()
+    assert a.tree.height == b.tree.height
+    qa = search_batch(a.tree, jnp.asarray(ks.words))
+    qb = search_batch(b.tree, jnp.asarray(ks.words))
+    assert (np.asarray(qa[1]) == np.asarray(qb[1])).all()
+
+
+def test_non_arange_record_ids(rng):
+    """Record ids are labels, not row positions (rebuild-after-delete path)."""
+    ks0 = _make_keyset(rng, 300)
+    rids = rng.permutation(10_000)[: ks0.n].astype(np.uint32)
+    ks = KeySet(words=ks0.words, lengths=ks0.lengths, rids=rids)
+    res = reconstruct_index(ks)
+    found, rid, _ = search_batch(res.tree, jnp.asarray(ks.words))
+    assert bool(found.all())
+    assert (np.asarray(rid) == rids).all()
+
+
+def test_insert_delete_search_and_metadata(rng):
+    ks = _make_keyset(rng, 400)
+    oi = OnlineIndex.build(ks)
+    meta0_bits = oi.meta.n_dbits
+    new_key = (np.asarray(ks.words[0]) ^ np.uint32([0, 0, 0x40])).astype(np.uint32)
+    oi.insert(new_key, rid=99999)
+    assert oi.meta.n_dbits >= meta0_bits  # insert may add 1 position
+    f, r = oi.search(new_key)
+    assert f and r == 99999
+    # delete: bitmap unchanged (lazy)
+    bits_before = oi.meta.n_dbits
+    assert oi.delete(np.asarray(ks.words[5]))
+    assert oi.meta.n_dbits == bits_before
+    f, _ = oi.search(np.asarray(ks.words[5]))
+    assert not f
+
+
+def test_rebuild_with_stale_bitmap_is_correct(rng):
+    """Delete half the keys; D-bitmap keeps stale bits; rebuild with the
+    stale bitmap still sorts/searches correctly (Theorem 2) and the rebuild
+    sheds stale positions (§4.3)."""
+    ks = _make_keyset(rng, 600)
+    oi = OnlineIndex.build(ks)
+    kill = [np.asarray(ks.words[i]) for i in range(0, 300)]
+    for k in kill:
+        assert oi.delete(k)
+    stale_bits = oi.meta.n_dbits
+    oi2 = oi.rebuild()
+    assert oi2.meta.n_dbits <= stale_bits  # shed stale positions
+    # correctness after rebuild
+    for i in range(300, 350):
+        f, rid = oi2.search(np.asarray(ks.words[i]))
+        assert f and rid == i
+    for k in kill[:25]:
+        f, _ = oi2.search(k)
+        assert not f
+
+
+@given(st.integers(0, 2**20))
+@settings(max_examples=20, deadline=None)
+def test_insert_rule_lemma1(seed):
+    """meta_on_insert sets exactly max(D(A,K), D(K,B)) (§4.3 insert)."""
+    rng = np.random.default_rng(seed)
+    arr = np.unique(
+        rng.integers(0, 2**32, size=(50, 2), dtype=np.uint32) & np.uint32(0xFFF000FF),
+        axis=0,
+    )
+    if len(arr) < 3:
+        return
+    meta = meta_from_keys(arr)
+    # insert a key between two neighbors
+    srt = arr[np.lexsort(arr.T[::-1])]
+    a, b = srt[10], srt[11]
+    k = a.copy()
+    k[-1] ^= np.uint32(0x1)  # differs from a in the last bit
+    if tuple(k) == tuple(b) or not (tuple(a) < tuple(k) < tuple(b)):
+        return
+    m2 = meta_on_insert(meta, a, k, b)
+    from repro.core.metadata import _np_dbit
+
+    expected = max(_np_dbit(a, k), _np_dbit(k, b))
+    w, bit = expected // 32, 31 - expected % 32
+    assert (int(m2.dbitmap[w]) >> bit) & 1 == 1
+
+
+def test_multicolumn_index_end_to_end(rng):
+    names = ["".join(chr(97 + int(c)) for c in rng.integers(0, 26, size=int(rng.integers(3, 10))))
+             for _ in range(500)]
+    keys = list(dict.fromkeys(
+        encode_multicolumn([encode_int32(int(rng.integers(0, 40))), encode_varchar(nm, 15)])
+        for nm in names
+    ))
+    ks = keys_to_words(keys)
+    res = reconstruct_index(ks)
+    found, _, _ = search_batch(res.tree, jnp.asarray(ks.words))
+    assert bool(found.all())
+    assert res.stats["compression_ratio"] > 1.5

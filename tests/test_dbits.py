@@ -1,0 +1,143 @@
+"""Theory tests: Lemma 1, Theorem 1, Theorem 2 (paper §3) as properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import compress as C
+from repro.core import dbits as D
+
+
+def _keyset(draw_ints, n_words):
+    return np.asarray(draw_ints, dtype=np.uint32).reshape(-1, n_words)
+
+
+@st.composite
+def key_arrays(draw, max_n=64, max_w=4):
+    w = draw(st.integers(1, max_w))
+    n = draw(st.integers(2, max_n))
+    # limited variant positions make duplicates + structure likely
+    mask = draw(st.integers(1, 2**32 - 1))
+    vals = draw(
+        st.lists(st.integers(0, 2**32 - 1), min_size=n * w, max_size=n * w)
+    )
+    arr = _keyset(vals, w) & np.uint32(mask)
+    return arr
+
+
+@given(key_arrays())
+@settings(max_examples=60, deadline=None)
+def test_theorem1_pairwise_dbits_subset_of_adjacent(arr):
+    """D_all == D_adj (Theorem 1): every pairwise distinction bit position
+    appears among adjacent-pair positions of the sorted order."""
+    arr = np.unique(arr, axis=0)
+    if arr.shape[0] < 2:
+        return
+    jw = jnp.asarray(arr)
+    (sw,) = D.sort_words(jw)
+    adj = np.asarray(D.adjacent_dbit_positions(sw))
+    adj_set = set(int(p) for p in adj if p != D.NO_DBIT)
+    n = arr.shape[0]
+    ii, jj = np.triu_indices(n, k=1)  # ALL pairs (n <= 64)
+    pw = np.asarray(D.dbit_position_pairwise(sw[ii], sw[jj]))
+    pw_set = set(int(p) for p in pw if p != D.NO_DBIT)
+    assert pw_set <= adj_set  # D_all ⊆ D_adj
+    assert adj_set <= pw_set  # D_adj ⊆ D_all (trivially, but checks both)
+
+
+@given(key_arrays())
+@settings(max_examples=60, deadline=None)
+def test_theorem2_compressed_sort_equals_full_sort(arr):
+    """Sorting by the distinction-bit slice reproduces the full-key order."""
+    arr = np.unique(arr, axis=0)
+    if arr.shape[0] < 2:
+        return
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(arr.shape[0])
+    arr = arr[perm]
+    jw = jnp.asarray(arr)
+    bm = D.compute_dbitmap(jw)
+    plan = C.make_plan(np.asarray(bm), arr.shape[1])
+    comp = C.extract_bits(jw, plan)
+    (_, p_comp) = D.sort_words(comp, jnp.arange(arr.shape[0], dtype=jnp.uint32))
+    full_sorted_by_comp = arr[np.asarray(p_comp)]
+    as_tuples = [tuple(r) for r in full_sorted_by_comp]
+    assert as_tuples == sorted(as_tuples)
+
+
+@given(key_arrays(), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_theorem2_extended_positions_also_sort(arr, extra_mask):
+    """Extended distinction bit positions (any superset) still sort correctly
+    — the basis for lazy deletes (§4.3)."""
+    arr = np.unique(arr, axis=0)
+    if arr.shape[0] < 2:
+        return
+    jw = jnp.asarray(arr)
+    bm = np.asarray(D.compute_dbitmap(jw))
+    bm = bm.copy()
+    bm[0] |= np.uint32(extra_mask)  # superset: extra stale/invalid bits
+    plan = C.make_plan(bm, arr.shape[1])
+    comp = C.extract_bits(jw, plan)
+    (_, p) = D.sort_words(comp, jnp.arange(arr.shape[0], dtype=jnp.uint32))
+    out = [tuple(r) for r in arr[np.asarray(p)]]
+    assert out == sorted(out)
+
+
+def test_lemma1_min_of_adjacent(rng):
+    """D-bit(key_i, key_j) == min_{i<k<=j} D_k (Lemma 1)."""
+    arr = np.unique(
+        rng.integers(0, 2**32, size=(40, 2), dtype=np.uint32) & np.uint32(0xFF3C0FF0),
+        axis=0,
+    )
+    jw = jnp.asarray(arr)
+    (sw,) = D.sort_words(jw)
+    adj = np.asarray(D.adjacent_dbit_positions(sw))
+    n = sw.shape[0]
+    for i in range(n - 1):
+        for j in range(i + 1, n):
+            got = int(D.dbit_position_pairwise(sw[i][None], sw[j][None])[0])
+            want = int(min(adj[i:j]))
+            assert got == want, (i, j, got, want)
+
+
+def test_figure2_example():
+    """The worked example of Figure 2: 12-bit keys, positions as in text."""
+    rows = [
+        "000010100100",  # key0
+        "000011101100",  # key1 (D1=5)
+        "010000100110",  # key2 (D2=1)
+        "010000110110",  # key3 (D3=7)
+    ]
+    # build keys whose adjacent dbits are D1=5, D2=1, D3=7 as in the text
+    arr = np.asarray(
+        [[int(r, 2) << 20] for r in rows], dtype=np.uint32
+    )  # left-align 12 bits
+    jw = jnp.asarray(arr)
+    adj = np.asarray(D.adjacent_dbit_positions(jw))
+    assert list(adj) == [5, 1, 7]
+    # Lemma-1 spot checks from the paper text
+    assert int(D.dbit_position_pairwise(jw[1], jw[3])) == 1  # min(D2,D3)=1
+    assert int(D.dbit_position_pairwise(jw[0], jw[2])) == 1  # min(D1,D2)=1
+
+
+def test_bitmap_roundtrip(rng):
+    pos = np.unique(rng.integers(0, 96, size=20)).astype(np.int32)
+    bm = D.positions_to_bitmap(jnp.asarray(pos), 3)
+    back = D.bitmap_to_positions(np.asarray(bm))
+    assert list(back) == sorted(pos.tolist())
+    assert int(D.bitmap_popcount(bm)) == len(pos)
+
+
+def test_variant_bitmap_covers_dbitmap(rng):
+    arr = rng.integers(0, 2**32, size=(100, 3), dtype=np.uint32) & np.uint32(
+        0x0FF0F00F
+    )
+    jw = jnp.asarray(arr)
+    dbm = np.asarray(D.compute_dbitmap(jw))
+    var, _ = D.compute_variant_bitmap(jw)
+    var = np.asarray(var)
+    # distinction bits are variant bits (§3.1)
+    assert all((d & v) == d for d, v in zip(dbm, var))

@@ -1,0 +1,203 @@
+"""Per-arch smoke tests (reduced configs, deliverable (f)) + layer units."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.layers import chunked_softmax_xent, decode_attention, flash_attention
+from repro.models.lm import LM
+from repro.models.moe import dispatch_indices_cumsum, dispatch_indices_sort, moe_ffn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32, key=KEY):
+    b = {}
+    if cfg.embed_input:
+        b["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        b["frames"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+    b["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.n_img_tokens:
+        b["img_embeds"] = jax.random.normal(
+            key, (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return b
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch):
+    """One reduced forward/train step on CPU: output shapes + no NaNs."""
+    cfg = ARCHS[arch].reduced()
+    m = LM(cfg, remat=False)
+    params = m.init(KEY)
+    loss, metrics = jax.jit(m.loss)(params, _batch(cfg))
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: m.loss(p, _batch(cfg))[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_prefill_decode_consistency(arch):
+    """Prefill-then-decode logits == teacher-forced forward logits."""
+    cfg = ARCHS[arch].reduced()
+    m = LM(cfg, remat=False)
+    params = m.init(KEY)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+    cache = m.init_cache(B, S + 16)
+
+    # prefill S tokens, then decode the next one
+    pb = {k: v for k, v in batch.items() if k != "labels"}
+    cache, logits_prefill = jax.jit(m.prefill)(params, pb, cache)
+    assert logits_prefill.shape == (B, cfg.vocab_size)
+    db = {"pos": jnp.int32(S)}
+    if cfg.embed_input:
+        db["token"] = jnp.argmax(logits_prefill, -1).astype(jnp.int32)
+    else:
+        db["frame"] = jnp.zeros((B, cfg.d_model), jnp.bfloat16)
+    if cfg.n_img_tokens:
+        db["img_embeds"] = batch["img_embeds"]
+    cache, logits_decode = jax.jit(m.decode_step)(params, cache, db)
+    assert logits_decode.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits_decode)).all()
+
+
+def test_flash_attention_matches_naive():
+    B, H, G, T, dh = 2, 8, 4, 64, 16
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, H, T, dh), jnp.float32)
+    k = jax.random.normal(k2, (B, G, T, dh), jnp.float32)
+    v = jax.random.normal(k3, (B, G, T, dh), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    # naive reference
+    r = H // G
+    qg = q.reshape(B, G, r, T, dh)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k) / np.sqrt(dh)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    ref = jnp.einsum("bgrqk,bgkd->bgrqd", jax.nn.softmax(s, -1), v).reshape(
+        B, H, T, dh
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_attention_rectangular_and_noncausal():
+    B, H, G, Tq, Tk, dh = 1, 4, 2, 32, 64, 8
+    q = jax.random.normal(KEY, (B, H, Tq, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, G, Tk, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, G, Tk, dh))
+    out = flash_attention(q, k, v, causal=False, q_chunk=16, kv_chunk=16)
+    r = H // G
+    qg = q.reshape(B, G, r, Tq, dh)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k) / np.sqrt(dh)
+    ref = jnp.einsum("bgrqk,bgkd->bgrqd", jax.nn.softmax(s, -1), v).reshape(
+        B, H, Tq, dh
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_attention_matches_flash_row():
+    B, H, G, S, dh = 2, 8, 2, 64, 16
+    q = jax.random.normal(KEY, (B, H, 1, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, G, S, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, G, S, dh))
+    L = 40
+    out = decode_attention(q, k, v, jnp.int32(L), kv_chunk=16)
+    r = H // G
+    qg = q.reshape(B, G, r, 1, dh)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k[:, :, :L]) / np.sqrt(dh)
+    ref = jnp.einsum(
+        "bgrqk,bgkd->bgrqd", jax.nn.softmax(s, -1), v[:, :, :L]
+    ).reshape(B, H, 1, dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_chunked_xent_matches_dense():
+    B, T, d, V = 2, 64, 16, 97  # V deliberately not chunk-aligned
+    h = jax.random.normal(KEY, (B, T, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, V))
+    y = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0, V)
+    got = chunked_softmax_xent(h, w, y, chunk=16)
+    logits = h @ w
+    ref = jnp.mean(
+        jax.nn.logsumexp(logits, -1)
+        - jnp.take_along_axis(logits, y[..., None], -1)[..., 0]
+    )
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)
+
+
+def test_moe_dispatch_sort_equals_cumsum():
+    """The compressed-key-sort dispatch and the GShard cumsum dispatch give
+    identical expert positions (same arrival order)."""
+    rng = np.random.default_rng(0)
+    for E, M in [(8, 256), (32, 1000), (128, 4096)]:
+        eid = jnp.asarray(rng.integers(0, E, M), jnp.int32)
+        pos_sort, _ = dispatch_indices_sort(eid, E)
+        pos_cum = dispatch_indices_cumsum(jax.nn.one_hot(eid, E, dtype=jnp.int32))
+        np.testing.assert_array_equal(np.asarray(pos_sort), np.asarray(pos_cum))
+
+
+def test_moe_ffn_modes_agree():
+    """einsum vs sort dispatch: identical layer output."""
+    E, k, d, f, B, T = 8, 2, 16, 32, 2, 24
+    keys = jax.random.split(KEY, 5)
+    p = {
+        "router": jax.random.normal(keys[0], (d, E)) * 0.1,
+        "moe_w1": jax.random.normal(keys[1], (E, d, f)) * 0.1,
+        "moe_w3": jax.random.normal(keys[2], (E, d, f)) * 0.1,
+        "moe_w2": jax.random.normal(keys[3], (E, f, d)) * 0.1,
+    }
+    x = jax.random.normal(keys[4], (B, T, d))
+    y1, a1 = moe_ffn(p, x, n_experts=E, top_k=k, dispatch_mode="einsum")
+    y2, a2 = moe_ffn(p, x, n_experts=E, top_k=k, dispatch_mode="sort")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+    assert float(a1["dropped_frac"]) == float(a2["dropped_frac"])
+
+
+def test_moe_capacity_drops_are_bounded():
+    E, k, d, f = 4, 1, 8, 16
+    p = {
+        "router": jnp.zeros((d, E)).at[:, 0].set(10.0),  # all route to expert 0
+        "moe_w1": jnp.ones((E, d, f)) * 0.01,
+        "moe_w3": jnp.ones((E, d, f)) * 0.01,
+        "moe_w2": jnp.ones((E, f, d)) * 0.01,
+    }
+    x = jnp.ones((1, 64, d))
+    y, aux = moe_ffn(p, x, n_experts=E, top_k=k, capacity_factor=1.0)
+    # capacity = 64/4 = 16 slots on expert 0 -> 48/64 dropped
+    assert 0.70 <= float(aux["dropped_frac"]) <= 0.80
+
+
+def test_active_vs_total_params_moe():
+    cfg = ARCHS["qwen3-moe-235b-a22b"]
+    assert cfg.total_params() > 200e9
+    assert 15e9 < cfg.active_params() < 30e9  # ~22B active
+
+
+def test_all_assigned_configs_exact():
+    """Spec table values survive in the registry."""
+    a = ARCHS
+    q = a["qwen3-moe-235b-a22b"]
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads) == (94, 4096, 64, 4)
+    assert (q.n_experts, q.top_k, q.moe_d_ff, q.vocab_size) == (128, 8, 1536, 151936)
+    j = a["jamba-v0.1-52b"]
+    assert (j.n_layers, j.d_ff, j.n_experts, j.top_k) == (32, 14336, 16, 2)
+    mixers = [m for m, _ in j.pattern]
+    assert mixers.count("attn") == 1 and mixers.count("mamba") == 7  # 1:7
+    x = a["xlstm-1.3b"]
+    assert x.d_ff == 0 and x.vocab_size == 50304
+    v = a["llama-3.2-vision-90b"]
+    assert v.n_layers == 100 and v.d_ff == 28672
+    assert [m for m, _ in v.pattern].count("xattn") == 1 and len(v.pattern) == 5
+    g = a["granite-34b"]
+    assert g.n_kv_heads == 1 and g.n_layers == 88
+    mt = a["minitron-4b"]
+    assert mt.vocab_size == 256000
+    assert a["llama3-8b"].d_ff == 14336
+    assert a["internlm2-20b"].d_model == 6144
+    assert a["musicgen-large"].embed_input is False
+    assert a["llama4-scout-17b-a16e"].shared_expert is True
