@@ -21,38 +21,43 @@ from .common import emit
 _WORKER = """
 import json, time
 import numpy as np, jax, jax.numpy as jnp
+from repro.backends import get_backend
+from repro.compat import make_mesh
 from repro.configs.paper_index import DATASETS
-from repro.core import compress as C, dbits as D
-from repro.core.distsort import sample_sort, make_sample_sort
+from repro.core import dbits as D
 from repro.data.synthetic import dataset_keys
 from dataclasses import replace
 
 p = len(jax.devices())
-mesh = jax.make_mesh((p,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((p,), ("data",))
 cfg = replace(DATASETS["INDBTAB"], n_keys=131072)
 ks = dataset_keys(cfg, seed=0)
 n = (ks.n // p) * p
-words = jnp.asarray(ks.words[:n]); rids = jnp.arange(n, dtype=jnp.uint32)
-bm = D.compute_dbitmap(words)
-plan = C.make_plan(np.asarray(bm), ks.n_words)
+words = jnp.asarray(ks.words[:n]); rows = jnp.arange(n, dtype=jnp.uint32)
+from repro.core.metadata import meta_from_keys
+plan = meta_from_keys(np.asarray(words)).plan()
+
+# the pipeline's distributed backend: extract runs before the all_to_all,
+# so only compressed sort keys cross the (simulated) interconnect
+be = get_backend("distributed", mesh=mesh)
 
 def timeit(fn, *a, iters=3):
     fn(*a)  # warm
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter(); r = fn(*a)
-        jax.block_until_ready(r.keys); ts.append(time.perf_counter() - t0)
+        # device-side timing: block on the DistSortResult's arrays
+        jax.block_until_ready((r.keys, r.rids, r.valid))
+        ts.append(time.perf_counter() - t0)
     return sorted(ts)[len(ts)//2]
 
-full_fn = make_sample_sort(mesh, "data", n // p, ks.n_words)
-t_full = timeit(full_fn, words, rids)
+t_full = timeit(be.sample_sort_raw, words, rows)
 
-comp = C.extract_bits(words, plan)
-comp_fn = make_sample_sort(mesh, "data", n // p, int(comp.shape[1]))
+comp = be.extract(words, plan)
 t_extract_start = time.perf_counter()
-comp2 = C.extract_bits(words, plan); comp2.block_until_ready()
+comp2 = be.extract(words, plan); comp2.block_until_ready()
 t_extract = time.perf_counter() - t_extract_start
-t_comp = timeit(comp_fn, comp, rids)
+t_comp = timeit(be.sample_sort_raw, comp, rows)
 
 print(json.dumps({"p": p, "n": int(n), "t_full": t_full,
                   "t_extract": t_extract, "t_comp": t_comp}))

@@ -1,0 +1,79 @@
+"""Pipeline smoke benchmark: every registered backend, per-stage timings.
+
+Runs the identical keyset through ``ReconstructionPipeline`` on each
+registered execution backend (plus the jnp fused fast path) and emits the
+extract / sort / build / refresh stage breakdown — the Figure 9 axes, per
+backend.  This is the ``--json BENCH_pipeline.json`` smoke target that
+seeds the perf-trajectory files; it also cross-checks that every backend
+returns the identical rid permutation (a cheap parity tripwire outside the
+test suite).
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from repro.backends import available_backends
+from repro.configs.paper_index import DATASETS
+from repro.core.pipeline import ReconstructionPipeline
+from repro.data.synthetic import dataset_keys
+
+from .common import emit
+
+
+def run(scale: float = 0.1) -> list[dict]:
+    print("# Pipeline: per-backend, per-stage reconstruction timings")
+    cfg = replace(
+        DATASETS["INDBTAB"], n_keys=max(2000, int(DATASETS["INDBTAB"].n_keys * scale))
+    )
+    ks = dataset_keys(cfg, seed=0)
+
+    # jnp first: it is the parity reference for every other backend
+    names = ["jnp"] + [n for n in available_backends() if n != "jnp"]
+    variants = [(name, False) for name in names]
+    variants.append(("jnp", True))  # the fused extract+sort fast path
+
+    rows: list[dict] = []
+    ref_rids = None
+    for name, fused in variants:
+        pipe = ReconstructionPipeline(backend=name, fused=fused)
+        pipe.run(ks)  # warm (jit/trace)
+        res = pipe.run(ks)
+        rids = np.asarray(res.rid_sorted)
+        if ref_rids is None:
+            ref_rids = rids
+        parity = bool(np.array_equal(rids, ref_rids))
+        tm = res.timings
+        label = f"{name}+fused" if fused else name
+        derived = (
+            f"extract={tm['extract']:.4f}s;sort={tm['sort']:.4f}s;"
+            f"build={tm['build']:.4f}s;refresh={tm['refresh_meta']:.4f}s;"
+            f"total={tm['total']:.4f}s;parity={parity}"
+        )
+        emit(f"pipeline/{label}", tm["total"], derived)
+        rows.append(
+            {
+                "name": f"pipeline/{label}",
+                "backend": name,
+                "fused": fused,
+                "n_keys": ks.n,
+                "timings": {k: tm[k] for k in
+                            ("meta", "extract", "sort", "build",
+                             "refresh_meta", "total")},
+                "stats": {
+                    k: res.stats[k]
+                    for k in ("compression_ratio", "sort_key_ratio",
+                              "word_comparison_ratio")
+                },
+                "parity_with_jnp": parity,
+            }
+        )
+        if not parity:
+            print(f"# WARNING: backend {label} diverged from jnp rid order")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -20,22 +20,21 @@ from .common import emit
 _WORKER = """
 import json, time
 import numpy as np, jax, jax.numpy as jnp
+from repro.backends import get_backend
+from repro.compat import make_mesh
 from repro.core import dbits as D
-from repro.core.distsort import make_sample_sort
 
 p = len(jax.devices())
-mesh = jax.make_mesh((p,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((p,), ("data",))
 rng = np.random.default_rng(0)
 n, W = 131072, 6  # 48B full sort keys, INDBTAB-like
 words = jnp.asarray(rng.integers(0, 2**32, size=(n, W), dtype=np.uint32))
 rids = jnp.arange(n, dtype=jnp.uint32)
 
 def block(r):
-    # DistSortResult is not a pytree: block on its fields explicitly
-    for attr in ("keys", "rids", "valid"):
-        if hasattr(r, attr):
-            getattr(r, attr).block_until_ready()
-    if isinstance(r, tuple):
+    if hasattr(r, "keys"):  # DistSortResult: block on its device arrays
+        jax.block_until_ready((r.keys, r.rids, r.valid))
+    else:
         jax.block_until_ready(r)
 
 def timeit(fn, *a, iters=3):
@@ -53,9 +52,10 @@ sharded = jax.device_put(words, NamedSharding(mesh, P("data", None)))
 lib = jax.jit(lambda w, r: D.sort_words(w, r))
 t_lib = timeit(lib, sharded, rids)
 
-# row-column analogue: sample sort
-rc = make_sample_sort(mesh, "data", n // p, W)
-t_rc = timeit(rc, words, rids)
+# row-column analogue: the pipeline's distributed backend (sample sort,
+# device-side — comparable to the sharded lax.sort baseline above)
+be = get_backend("distributed", mesh=mesh)
+t_rc = timeit(be.sample_sort_raw, words, rids)
 print(json.dumps({"p": p, "t_library": t_lib, "t_rowcolumn": t_rc}))
 """
 

@@ -1,8 +1,15 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# ``--json PATH`` additionally writes the structured rows returned by suites
+# that produce them (currently the per-backend pipeline suite) — the perf
+# trajectory files, e.g.:
+#
+#   python -m benchmarks.run --only pipeline --fast --json BENCH_pipeline.json
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
@@ -10,8 +17,12 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table2,table3,table4,table5,table6,apps")
+                    help="comma list: pipeline,table1,table2,table3,table4,"
+                         "table5,table6,apps")
     ap.add_argument("--fast", action="store_true", help="smaller datasets")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured suite results (timings per stage "
+                         "and backend) to PATH")
     args = ap.parse_args()
 
     from . import (
@@ -20,12 +31,14 @@ def main() -> None:
         bench_datasets,
         bench_dbit_distribution,
         bench_parallel_scaling,
+        bench_pipeline,
         bench_sort_comparison,
         bench_zipf_sensitivity,
     )
 
     scale = 0.05 if args.fast else 0.1
     suites = {
+        "pipeline": lambda: bench_pipeline.run(scale=scale),
         "table1": lambda: bench_construction.run(scale=scale),
         "table2": lambda: bench_datasets.run(scale=scale),
         "table3": bench_dbit_distribution.run,
@@ -37,17 +50,36 @@ def main() -> None:
         "apps": bench_applications.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
+    unknown = only - set(suites)
+    if unknown:
+        ap.error(f"unknown suite(s): {','.join(sorted(unknown))} "
+                 f"(choose from {','.join(suites)})")
+    if args.json:
+        # fail before spending minutes benchmarking, not after
+        try:
+            open(args.json, "a").close()
+        except OSError as e:
+            ap.error(f"cannot write --json target: {e}")
+    payload: dict = {"suites": {}, "fast": args.fast}
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         if name not in only:
             continue
         t0 = time.time()
         try:
-            fn()
+            rows = fn()
+            if isinstance(rows, list):
+                payload["suites"][name] = rows
         except Exception:
             print(f"# SUITE {name} FAILED")
             traceback.print_exc()
+            payload["suites"][name] = {"error": traceback.format_exc()}
         print(f"# suite {name} took {time.time() - t0:.1f}s", flush=True)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

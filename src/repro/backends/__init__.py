@@ -1,0 +1,24 @@
+# Pluggable execution backends for the reconstruction pipeline.
+#
+# A backend implements the extract and sort stages (the data-parallel hot
+# path); registering one here makes it addressable by name from every
+# pipeline call site — core, serving, checkpointing, benchmarks.  See
+# base.py for the interface + determinism contract and README.md for how
+# to add a backend.
+
+from .base import (
+    ExecutionBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from . import jnp_backend  # noqa: F401  (self-registers "jnp")
+from . import pallas_backend  # noqa: F401  (self-registers "pallas")
+from . import distributed  # noqa: F401  (self-registers "distributed")
+
+__all__ = [
+    "ExecutionBackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+]

@@ -1,0 +1,116 @@
+"""Execution-backend interface + registry for the reconstruction pipeline.
+
+A backend supplies the two data-parallel stages of the paper's pipeline —
+compressed-key **extract** (§5.1) and parallel **sort** (§5.2) — behind one
+interface, so ``repro.core.pipeline`` can run the identical scan → extract →
+sort → build → refresh flow on the pure-jnp oracle path, the Pallas kernels,
+or a mesh-distributed sample sort without any call-site branching (the
+encoder/executor split HOPE and Upscaledb argue for).
+
+Determinism contract: ``sort`` orders rows by the lexicographic pair
+``(key, row)`` — ties between equal keys break on the ascending row id.
+Every backend honours it, which is what makes the sorted compressed keys and
+rid permutations *byte-identical* across backends (and what the parity tests
+assert).  All three built-in backends realize it the same way: the row id is
+carried as an extra least-significant sort-key word (the paper's sort key is
+literally the (compressed key, rid) pair).  Rows are the pipeline's row
+*positions* — distinct values in ``[0, n)``; the distributed backend
+validates this because its shard padding occupies ids ``>= n``.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import TYPE_CHECKING, Callable, Type
+
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # real import stays lazy: repro.core.__init__ imports the
+    # pipeline, which imports this package — a module-level import here
+    # would close that cycle before the registry names exist
+    from repro.core.compress import ExtractionPlan
+
+__all__ = [
+    "ExecutionBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+_REGISTRY: dict[str, Type["ExecutionBackend"]] = {}
+
+
+def register_backend(name: str) -> Callable[[type], type]:
+    """Class decorator: register an ExecutionBackend under ``name``."""
+
+    def deco(cls: type) -> type:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_backend(name: str, **opts) -> "ExecutionBackend":
+    """Instantiate a registered backend (options are backend-specific)."""
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name](**opts)
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+class ExecutionBackend(abc.ABC):
+    """One execution substrate for the pipeline's extract and sort stages.
+
+    ``last_info`` holds backend-specific facts about the most recent sort
+    (e.g. distsort overflow retries); the pipeline folds it into
+    ``ReconstructionResult.stats``.
+    """
+
+    name: str = "?"
+    #: backend can run extract+sort as one fused program (the compressed
+    #: array is never materialized between the stages)
+    supports_fused: bool = False
+    #: backend's extract+sort can be vmapped over a stacked batch of
+    #: same-shape keysets (single-device jnp semantics; the pipeline's
+    #: run_many uses this for the batched fast path)
+    supports_batched: bool = False
+
+    def __init__(self) -> None:
+        self.last_info: dict = {}
+
+    # ------------------------------------------------------------ extract
+    @abc.abstractmethod
+    def extract(self, words: jnp.ndarray, plan: "ExtractionPlan") -> jnp.ndarray:
+        """(n, W) uint32 full keys -> (n, Wc) uint32 compressed keys."""
+
+    def extract_dynamic(
+        self, words: jnp.ndarray, bitmap: jnp.ndarray, n_words_out: int
+    ) -> jnp.ndarray:
+        """Runtime-bitmap extraction (no per-bitmap retrace); jnp fallback."""
+        from repro.core.compress import extract_bits_dynamic
+
+        return extract_bits_dynamic(words, bitmap, n_words_out)
+
+    # --------------------------------------------------------------- sort
+    @abc.abstractmethod
+    def sort(
+        self, keys: jnp.ndarray, rows: jnp.ndarray
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Sort (n, W) keys with (n,) distinct row positions in [0, n).
+
+        Returns (keys_sorted, rows_sorted) in ascending (key, row) order —
+        see the determinism contract in the module docstring.
+        """
+
+    # -------------------------------------------------------- fused path
+    def fused_extract_sort(
+        self, words: jnp.ndarray, plan: ExtractionPlan, rows: jnp.ndarray
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """extract+sort as one program; only if ``supports_fused``."""
+        raise NotImplementedError(f"backend {self.name} has no fused path")

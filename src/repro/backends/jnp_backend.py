@@ -1,0 +1,48 @@
+"""The pure-jnp oracle backend: ``extract_bits`` + multiword ``lax.sort``.
+
+This is the reference semantics every other backend is tested against.  The
+fused path jits extract+sort as one program so XLA fuses the bit-gather into
+the sort's operand production and the compressed array is never written back
+to HBM between the stages.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compress import ExtractionPlan, extract_bits
+from repro.core.dbits import sort_words_keyed
+
+from .base import ExecutionBackend, register_backend
+
+__all__ = ["JnpBackend"]
+
+
+@partial(jax.jit, static_argnames=("plan",))
+def _fused_extract_sort(words: jnp.ndarray, rows: jnp.ndarray, plan: ExtractionPlan):
+    comp = extract_bits(words, plan)
+    return sort_words_keyed(comp, rows)
+
+
+@register_backend("jnp")
+class JnpBackend(ExecutionBackend):
+    """Vectorized jnp ops on the default device — the oracle path."""
+
+    supports_fused = True
+    supports_batched = True
+
+    def extract(self, words: jnp.ndarray, plan: ExtractionPlan) -> jnp.ndarray:
+        return extract_bits(words, plan)
+
+    def sort(self, keys, rows):
+        return sort_words_keyed(
+            jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32)
+        )
+
+    def fused_extract_sort(self, words, plan, rows):
+        return _fused_extract_sort(
+            jnp.asarray(words, jnp.uint32), jnp.asarray(rows, jnp.uint32), plan
+        )

@@ -1,0 +1,69 @@
+"""Pallas-kernel backend: PEXT plane extraction + bitonic VMEM block sort.
+
+Extraction runs through ``repro.kernels.pext`` (the static shift/mask
+schedule over word planes); the sort runs the paper's row-column structure
+on one device: ``repro.kernels.bitonic`` sorts VMEM-sized blocks, then one
+``lax.sort`` merges the block runs (Appendix A step 3.2's multiway merge).
+
+``interpret`` is auto-selected from the platform: on TPU the kernels are
+compiled by Mosaic; elsewhere the kernel *bodies* execute under the Pallas
+interpreter so the same code path is validated on CPU CI.
+
+The merge carries the row id as an extra least-significant key word: the
+bitonic network is not stable, so ties must be re-broken on the row id to
+meet the backend determinism contract (byte-identical output vs the jnp
+oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compress import ExtractionPlan
+from repro.core.dbits import sort_words_keyed
+from repro.kernels.bitonic import ops as bitonic_ops
+from repro.kernels.bitonic.kernel import DEFAULT_BLOCK
+from repro.kernels.pext import ops as pext_ops
+from repro.kernels.pext.kernel import DEFAULT_TILE
+
+from .base import ExecutionBackend, register_backend
+
+__all__ = ["PallasBackend"]
+
+
+@register_backend("pallas")
+class PallasBackend(ExecutionBackend):
+    """kernels/pext extraction + kernels/bitonic block sort."""
+
+    def __init__(
+        self,
+        interpret: bool | None = None,
+        tile: int = DEFAULT_TILE,
+        block: int = DEFAULT_BLOCK,
+    ) -> None:
+        super().__init__()
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+        self.tile = int(tile)
+        self.block = int(block)
+        self.last_info = {"interpret": self.interpret}
+
+    def extract(self, words: jnp.ndarray, plan: ExtractionPlan) -> jnp.ndarray:
+        return pext_ops.pext(
+            jnp.asarray(words, jnp.uint32),
+            plan,
+            tile=self.tile,
+            interpret=self.interpret,
+        )
+
+    def sort(self, keys, rows):
+        keys = jnp.asarray(keys, jnp.uint32)
+        rows = jnp.asarray(rows, jnp.uint32)
+        bk, brow = bitonic_ops.block_sort(
+            keys, rows, block=self.block, interpret=self.interpret
+        )
+        # merge of block-sorted runs; the keyed sort restores the (key, row)
+        # order the unstable bitonic network does not guarantee
+        return sort_words_keyed(bk, brow)

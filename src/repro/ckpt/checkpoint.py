@@ -37,7 +37,8 @@ import numpy as np
 
 from repro.core.keyformat import KeySet
 from repro.core.metadata import DSMeta
-from repro.core.reconstruct import ReconstructionResult, reconstruct_index
+from repro.core.pipeline import ReconstructionPipeline
+from repro.core.reconstruct import ReconstructionResult
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointIndex"]
 
@@ -119,7 +120,7 @@ def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
 class CheckpointIndex:
     """The reconstructed manifest index: hashed-path point lookups."""
 
-    def __init__(self, step_dir: Path):
+    def __init__(self, step_dir: Path, backend: str = "jnp"):
         self.dir = step_dir
         m = np.load(step_dir / "manifest.npz")
         self.keys = m["keys"].astype(np.uint32)
@@ -132,7 +133,8 @@ class CheckpointIndex:
             rids=np.arange(len(self.files), dtype=np.uint32),
         )
         # THE paper pipeline: extract by persisted D-bitmap -> sort -> build
-        self.result: ReconstructionResult = reconstruct_index(ks, meta=meta)
+        pipe = ReconstructionPipeline(backend=backend)
+        self.result: ReconstructionResult = pipe.run(ks, meta=meta)
 
     def lookup(self, name: str) -> str:
         from repro.core.btree import search_batch

@@ -10,6 +10,7 @@ from . import (
     index,
     keyformat,
     metadata,
+    pipeline,
     reconstruct,
     sortkeys,
 )
@@ -22,6 +23,7 @@ __all__ = [
     "index",
     "keyformat",
     "metadata",
+    "pipeline",
     "reconstruct",
     "sortkeys",
 ]

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dbits import bitmap_to_positions
+from .dbits import dbit_positions_nonempty
 
 __all__ = ["ExtractionPlan", "make_plan", "extract_bits", "extract_bits_dynamic"]
 
@@ -75,10 +75,7 @@ def make_plan(bitmap: np.ndarray, n_words_in: int | None = None) -> ExtractionPl
     bm = np.asarray(bitmap, dtype=np.uint32)
     if n_words_in is None:
         n_words_in = bm.shape[0]
-    pos = bitmap_to_positions(bm)
-    if len(pos) == 0:
-        # degenerate: all keys identical — keep one bit so shapes stay valid
-        pos = np.asarray([0], dtype=np.int32)
+    pos = dbit_positions_nonempty(bm)
     return ExtractionPlan(
         positions=tuple(int(p) for p in pos),
         src_word=tuple(int(p) // 32 for p in pos),

@@ -29,10 +29,12 @@ __all__ = [
     "lex_less",
     "lex_compare_le",
     "sort_words",
+    "sort_words_keyed",
     "adjacent_dbit_positions",
     "dbit_position_pairwise",
     "positions_to_bitmap",
     "bitmap_to_positions",
+    "dbit_positions_nonempty",
     "bitmap_popcount",
     "compute_dbitmap",
     "compute_variant_bitmap",
@@ -65,6 +67,25 @@ def lex_less(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 def lex_compare_le(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     eq = jnp.all(a == b, axis=-1)
     return lex_less(a, b) | eq
+
+
+def sort_words_keyed(
+    keys: jnp.ndarray, rows: jnp.ndarray, *payloads: jnp.ndarray
+) -> tuple[jnp.ndarray, ...]:
+    """Sort (n, W) keys with (n,) rows as the least-significant key word.
+
+    The paper's sort key is literally the (compressed key, rid) pair; making
+    the row a key word (not a stable-sort payload) is THE definition of the
+    backend determinism contract — ascending (key, row) order regardless of
+    input order — shared by every backend and the distributed merges.
+    Returns (keys_sorted, rows_sorted, *payloads_sorted).
+    """
+    w = keys.shape[1]
+    keyed = jnp.concatenate(
+        [keys, jnp.asarray(rows, jnp.uint32)[:, None]], axis=1
+    )
+    out = sort_words(keyed, *payloads)
+    return (out[0][:, :w], out[0][:, w]) + tuple(out[1:])
 
 
 def sort_words(
@@ -150,6 +171,19 @@ def bitmap_to_positions(bitmap: np.ndarray) -> np.ndarray:
             if w & (1 << (31 - b)):
                 out.append(wi * 32 + b)
     return np.asarray(out, dtype=np.int32)
+
+
+def dbit_positions_nonempty(bitmap: np.ndarray) -> np.ndarray:
+    """``bitmap_to_positions`` with the degenerate-bitmap convention.
+
+    An empty D-bitmap (all keys identical) yields the single position 0 so
+    extraction plans, D-offset tables and tree builds all keep one-bit
+    shapes — the ONE place this convention is defined.
+    """
+    pos = bitmap_to_positions(bitmap)
+    if len(pos) == 0:
+        pos = np.asarray([0], dtype=np.int32)
+    return pos
 
 
 def bitmap_popcount(bitmap: jnp.ndarray) -> jnp.ndarray:

@@ -34,7 +34,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from .dbits import sort_words
+from repro.compat import shard_map
+
+from .dbits import sort_words, sort_words_keyed
 
 __all__ = ["DistSortResult", "sample_sort", "make_sample_sort"]
 
@@ -66,9 +68,11 @@ class DistSortResult:
 
 
 def _local_shard_sort(words, rids):
-    iota_valid = jnp.ones(words.shape[0], dtype=jnp.uint32)
-    sw, srid, _ = sort_words(words, rids, iota_valid)
-    return sw, srid
+    # Keyed sort: ties between equal keys break on the rid everywhere in
+    # this module, so the global output order is the deterministic
+    # (key, rid) order regardless of how the exchange interleaves equal
+    # keys across shards.
+    return sort_words_keyed(words, rids)
 
 
 def make_sample_sort(mesh: Mesh, axis_name: str, n_per_shard: int, n_words: int,
@@ -165,12 +169,13 @@ def make_sample_sort(mesh: Mesh, axis_name: str, n_per_shard: int, n_words: int,
         rk = recv_keys.reshape(recv, n_words)
         rr = recv_rids.reshape(recv)
         rv = recv_valid.reshape(recv)
-        # invalid rows carry sentinels already; sort once more (merge of p runs)
-        mk, mr, mv = sort_words(rk, rr, rv.astype(jnp.uint32))
+        # invalid rows carry sentinels already; sort once more (merge of p
+        # runs), rid again a key word so equal keys land in (key, rid) order
+        mk, mr, mv = sort_words_keyed(rk, rr, rv.astype(jnp.uint32))
         total_overflow = jax.lax.psum(overflow, axis_name)
         return mk, mr, mv.astype(jnp.bool_), total_overflow
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(P(axis_name, None), P(axis_name)),

@@ -7,6 +7,10 @@ delta buffer, deletes set tombstones, DS-metadata is updated incrementally
 rebuild folds everything down via the compressed key sort.  This mirrors
 the paper's premise that indexes are cheap to *reconstruct* and therefore
 need neither logging nor eager maintenance of exact metadata.
+
+Rebuilds route through ``ReconstructionPipeline`` and honour the index's
+configured execution backend, so an online index on a mesh rebuilds with
+the distributed sample sort while its mutation path stays host-side.
 """
 
 from __future__ import annotations
@@ -20,6 +24,7 @@ import numpy as np
 from .btree import BTreeConfig, search_batch
 from .keyformat import KeySet
 from .metadata import DSMeta, meta_on_delete, meta_on_insert
+from .pipeline import ReconstructionPipeline
 from .reconstruct import ReconstructionResult, reconstruct_index
 
 __all__ = ["OnlineIndex"]
@@ -32,15 +37,21 @@ class OnlineIndex:
     keyset: KeySet
     result: ReconstructionResult
     config: BTreeConfig = field(default_factory=BTreeConfig)
+    backend: str = "jnp"
     _delta: list = field(default_factory=list)  # sorted [(key_tuple, rid)]
     _tombstones: set = field(default_factory=set)  # rids
+    # sorted key-tuple cache for neighbor lookups: built lazily from the
+    # tree's sorted order, then maintained incrementally per insert/delete
+    # (the rebuild-per-insert it replaces was O(n log n) per mutation)
+    _sorted_keys: list | None = field(default=None, repr=False)
 
     # ------------------------------------------------------------------ build
     @staticmethod
     def build(keyset: KeySet, meta: DSMeta | None = None,
-              config: BTreeConfig = BTreeConfig()) -> "OnlineIndex":
-        res = reconstruct_index(keyset, meta=meta, config=config)
-        return OnlineIndex(keyset=keyset, result=res, config=config)
+              config: BTreeConfig = BTreeConfig(),
+              backend: str = "jnp") -> "OnlineIndex":
+        res = reconstruct_index(keyset, meta=meta, config=config, backend=backend)
+        return OnlineIndex(keyset=keyset, result=res, config=config, backend=backend)
 
     @property
     def meta(self) -> DSMeta:
@@ -71,6 +82,8 @@ class OnlineIndex:
         new_meta = meta_on_insert(self.meta, a, key, b)
         self.result.meta = new_meta
         bisect.insort(self._delta, (key_t, int(rid)))
+        if self._sorted_keys is not None:
+            bisect.insort(self._sorted_keys, key_t)
 
     def delete(self, key_words: np.ndarray) -> bool:
         """Delete K; DS-metadata untouched (lazy rule, valid by Theorem 2)."""
@@ -81,23 +94,38 @@ class OnlineIndex:
         i = bisect.bisect_left(self._delta, (key_t, -1))
         if i < len(self._delta) and self._delta[i][0] == key_t:
             self._delta.pop(i)
+            if self._sorted_keys is not None:
+                j = bisect.bisect_left(self._sorted_keys, key_t)
+                if j < len(self._sorted_keys) and self._sorted_keys[j] == key_t:
+                    self._sorted_keys.pop(j)
         else:
+            # tombstoned base rows stay in the neighbor view (as before):
+            # stale neighbors only ever *extend* the distinction bit set,
+            # which Theorem 2 permits
             self._tombstones.add(rid)
         self.result.meta = meta_on_delete(self.meta)
         return True
 
     def _neighbors(self, key_t: tuple) -> tuple[np.ndarray | None, np.ndarray | None]:
-        sf = np.asarray(self.result.tree.sorted_full)
-        keys = [tuple(int(x) for x in r) for r in sf]
-        for k, _ in self._delta:
-            bisect.insort(keys, k)
+        keys = self._sorted_view()
         i = bisect.bisect_left(keys, key_t)
         a = np.asarray(keys[i - 1], np.uint32) if i > 0 else None
         b = np.asarray(keys[i], np.uint32) if i < len(keys) else None
         return a, b
 
+    def _sorted_view(self) -> list:
+        """The sorted (base + delta) key tuples, built once then maintained
+        incrementally by insert/delete."""
+        if self._sorted_keys is None:
+            sf = np.asarray(self.result.tree.sorted_full)
+            keys = [tuple(int(x) for x in r) for r in sf]
+            for k, _ in self._delta:
+                bisect.insort(keys, k)
+            self._sorted_keys = keys
+        return self._sorted_keys
+
     # ---------------------------------------------------------------- rebuild
-    def rebuild(self) -> "OnlineIndex":
+    def rebuild(self, backend: str | None = None) -> "OnlineIndex":
         """Fold delta/tombstones into the base table and reconstruct with the
         *current* (possibly stale-bit) DS-metadata — the paper's recovery path."""
         sf = np.asarray(self.keyset.words)
@@ -113,5 +141,7 @@ class OnlineIndex:
             rids=np.asarray([r[2] for r in rows], np.uint32),
         )
         # key compression with the current bitmap (extended positions OK)
-        res = reconstruct_index(ks, meta=self.meta, config=self.config)
-        return OnlineIndex(keyset=ks, result=res, config=self.config)
+        name = backend or self.backend
+        pipe = ReconstructionPipeline(backend=name, config=self.config)
+        res = pipe.run(ks, meta=self.meta)
+        return OnlineIndex(keyset=ks, result=res, config=self.config, backend=name)

@@ -69,9 +69,9 @@ class DSMeta:
         """D-offset[i] = full-key position of the (i+1)-st 1 in the D-bitmap
         (paper §5.3) — maps compressed-key bit positions back to full-key
         positions for distinction-bit fields in tree entries."""
-        from .dbits import bitmap_to_positions
+        from .dbits import dbit_positions_nonempty
 
-        return bitmap_to_positions(self.dbitmap)
+        return dbit_positions_nonempty(self.dbitmap)
 
     # -- serialization (checkpoint manifest / replication payload) ----------
     def to_npz_dict(self) -> dict[str, np.ndarray]:

@@ -1,0 +1,341 @@
+"""Unified reconstruction pipeline (paper §5, Figure 7) over pluggable backends.
+
+    table (memory-resident) --scan--> extract compressed keys + rids
+        --parallel sort--> sorted (comp key, rid) pairs
+        --bottom-up build--> partial-key B+tree
+        (+ recompute DS-metadata for next time, §4.3)
+
+One pipeline, four explicit stages — ``extract``, ``sort``, ``build``,
+``refresh_meta`` — with per-stage wall timings (the paper's Figure 9
+breakdown) and per-run stats.  The two data-parallel stages dispatch to an
+``ExecutionBackend`` (``repro.backends``): ``jnp`` (oracle), ``pallas``
+(PEXT + bitonic kernels), ``distributed`` (mesh sample sort — extraction
+runs before the all_to_all, so the ICI byte volume shrinks by the sort-key
+ratio).  Every reconstruction call site in the repo — core, serving pager,
+checkpoint restore, examples, benchmarks — routes through this class;
+backends compose with all of them by construction.
+
+Extras over the plain flow:
+
+* **fused fast path** — when the backend supports it, extract+sort run as
+  one program and the compressed array is never materialized between the
+  stages (``fused=True``).
+* **batched multi-index reconstruction** — ``run_many`` rebuilds many
+  independent indexes (the replication scenario of §6): same-shape key sets
+  on the jnp backend are stacked and their extract+sort is one ``vmap``-ed
+  program using the dynamic-bitmap extractor; tree builds then loop
+  (host-side assembly).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends import ExecutionBackend, get_backend
+
+from .btree import BTree, BTreeConfig, build_btree
+from .compress import extract_bits_dynamic
+from .dbits import sort_words_keyed
+from .keyformat import KeySet
+from .metadata import DSMeta, meta_from_keys, meta_on_rebuild
+from .sortkeys import word_comparison_counts
+
+__all__ = ["ReconstructionResult", "ReconstructionPipeline", "identity_meta"]
+
+
+@dataclass
+class ReconstructionResult:
+    """What a reconstruction returns: the tree, refreshed DS-metadata, the
+    sorted compressed keys + rid permutation, and per-stage timings/stats."""
+
+    tree: BTree
+    meta: DSMeta
+    comp_sorted: jnp.ndarray
+    rid_sorted: jnp.ndarray
+    timings: dict = field(default_factory=dict)
+    stats: dict = field(default_factory=dict)
+    row_sorted: jnp.ndarray | None = None
+
+
+def identity_meta(keyset: KeySet) -> DSMeta:
+    """All-ones metadata: every bit position is a distinction bit — the
+    full-key baseline (Figure 1 top flow) expressed as a degenerate plan."""
+    return DSMeta(
+        dbitmap=np.full((keyset.n_words,), 0xFFFFFFFF, np.uint32),
+        varbitmap=np.full((keyset.n_words,), 0xFFFFFFFF, np.uint32),
+        refkey=np.asarray(keyset.words[0], np.uint32),
+        n_words=keyset.n_words,
+    )
+
+
+def _timed(fn, *args):
+    t0 = time.perf_counter()
+    out = fn(*args)
+    out = jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+        out,
+    )
+    return out, time.perf_counter() - t0
+
+
+class ReconstructionPipeline:
+    """The scan → extract → sort → build → refresh flow, backend-dispatched.
+
+    Parameters
+    ----------
+    backend:       a registered backend name (``"jnp"``, ``"pallas"``,
+                   ``"distributed"``) or an ``ExecutionBackend`` instance.
+    config:        B-tree geometry.
+    fused:         run extract+sort as one program when the backend supports
+                   it (extract time then reports 0 and folds into sort).
+    backend_opts:  forwarded to the backend constructor when ``backend`` is
+                   a name (e.g. ``{"interpret": False}`` for pallas on TPU,
+                   ``{"mesh": mesh, "capacity_factor": 2.0}`` for distributed).
+    """
+
+    def __init__(
+        self,
+        backend: str | ExecutionBackend = "jnp",
+        config: BTreeConfig = BTreeConfig(),
+        fused: bool = False,
+        backend_opts: dict | None = None,
+    ) -> None:
+        if isinstance(backend, ExecutionBackend):
+            self.backend = backend
+        else:
+            self.backend = get_backend(backend, **(backend_opts or {}))
+        self.config = config
+        self.fused = bool(fused)
+
+    # ------------------------------------------------------------- stages
+    def extract(self, words: jnp.ndarray, plan) -> jnp.ndarray:
+        """Stage 1 (§5.1): full keys -> compressed keys via the D-bitmap."""
+        return self.backend.extract(words, plan)
+
+    def sort(self, comp: jnp.ndarray, rows: jnp.ndarray):
+        """Stage 2 (§5.2): parallel sort of (comp key, row) pairs."""
+        return self.backend.sort(comp, rows)
+
+    def build(self, comp_sorted, row_sorted, meta, words, lengths, rids) -> BTree:
+        """Stage 3 (§5.3): bottom-up bulk build of the partial-key B+tree."""
+        return build_btree(
+            comp_sorted, row_sorted, meta, words, lengths, self.config, rids=rids
+        )
+
+    def refresh_meta(self, comp_sorted, meta: DSMeta, ref_key) -> DSMeta:
+        """Stage 4 (§4.3): recompute DS-metadata at the opportune time."""
+        return meta_on_rebuild(np.asarray(comp_sorted), meta, np.asarray(ref_key))
+
+    # ---------------------------------------------------------------- run
+    def run(
+        self,
+        keyset: KeySet,
+        meta: DSMeta | None = None,
+        full_keys: bool = False,
+    ) -> ReconstructionResult:
+        """Reconstruct one index.
+
+        ``full_keys=True`` runs the uncompressed baseline (Figure 1 top
+        flow): identity metadata, extraction skipped, the sort sees the full
+        key width.  DS-metadata is then left as-is (the baseline has none to
+        refresh).
+        """
+        words = jnp.asarray(keyset.words, jnp.uint32)
+        rids = jnp.asarray(keyset.rids, jnp.uint32)
+        lengths = jnp.asarray(keyset.lengths, jnp.int32)
+        rows = jnp.arange(keyset.n, dtype=jnp.uint32)
+
+        t_meta = 0.0
+        if full_keys:
+            meta = identity_meta(keyset)
+        elif meta is None:
+            t0 = time.perf_counter()
+            meta = meta_from_keys(keyset.words)
+            t_meta = time.perf_counter() - t0
+        plan = meta.plan()
+
+        # -- extract / sort (backend-dispatched, optionally fused) ---------
+        fused_used = False
+        if full_keys:
+            comp, t_extract = words, 0.0
+            (comp_sorted, row_sorted), t_sort = _timed(self.sort, comp, rows)
+        elif self.fused and self.backend.supports_fused:
+            fused_used = True
+            t_extract = 0.0
+            (comp_sorted, row_sorted), t_sort = _timed(
+                self.backend.fused_extract_sort, words, plan, rows
+            )
+        else:
+            comp, t_extract = _timed(self.extract, words, plan)
+            (comp_sorted, row_sorted), t_sort = _timed(self.sort, comp, rows)
+        row_sorted = jnp.asarray(row_sorted, jnp.uint32)
+        rid_sorted = rids[row_sorted]
+
+        # -- build ---------------------------------------------------------
+        tree, t_build = _timed(
+            self.build, comp_sorted, row_sorted, meta, words, lengths, rids
+        )
+
+        # -- refresh DS-metadata (opportune time, §4.3) ----------------------
+        t_refresh = 0.0
+        new_meta = meta
+        if not full_keys:
+            t0 = time.perf_counter()
+            new_meta = self.refresh_meta(comp_sorted, meta, keyset.words[0])
+            t_refresh = time.perf_counter() - t0
+
+        timings = {
+            "meta": t_meta,
+            "extract": t_extract,
+            "sort": t_sort,
+            "build": t_build,
+            "refresh_meta": t_refresh,
+            "total": t_extract + t_sort + t_build,
+        }
+        stats = self._stats(keyset, meta, comp_sorted, row_sorted, tree, fused_used)
+        return ReconstructionResult(
+            tree=tree,
+            meta=new_meta,
+            comp_sorted=comp_sorted,
+            rid_sorted=rid_sorted,
+            timings=timings,
+            stats=stats,
+            row_sorted=row_sorted,
+        )
+
+    def _stats(self, keyset, meta, comp_sorted, row_sorted, tree, fused_used):
+        full_bits = keyset.n_bits
+        # wcc over the *row*-permuted full keys: row_sorted indexes rows of
+        # the table; rids are labels, not positions.
+        full_sorted = jnp.asarray(keyset.words, jnp.uint32)[row_sorted]
+        stats = {
+            "backend": self.backend.name,
+            "fused": fused_used,
+            "n_keys": keyset.n,
+            "full_key_bits": full_bits,
+            "distinction_bits": meta.n_dbits,
+            "compression_ratio": full_bits / max(meta.n_dbits, 1),
+            "full_sort_key_words": keyset.n_words + 1,  # + rid word
+            "comp_sort_key_words": int(comp_sorted.shape[1]) + 1,
+            "sort_key_ratio": (keyset.n_words + 1) / (int(comp_sorted.shape[1]) + 1),
+            "wcc_full": float(word_comparison_counts(full_sorted)),
+            "wcc_comp": float(word_comparison_counts(comp_sorted)),
+            "tree_height": tree.height,
+            "tree_bytes": tree.memory_bytes(),
+        }
+        stats["word_comparison_ratio"] = stats["wcc_full"] / max(stats["wcc_comp"], 1e-9)
+        stats.update(self.backend.last_info)
+        return stats
+
+    # ----------------------------------------------------- batched (many)
+    def run_many(
+        self,
+        keysets: list[KeySet],
+        metas: list[DSMeta | None] | None = None,
+    ) -> list[ReconstructionResult]:
+        """Reconstruct many independent indexes (the replication scenario).
+
+        Same-shape key sets on a backend with ``supports_batched`` are
+        batched: one vmap-ed extract+sort over the stack (dynamic-bitmap
+        extraction, so one trace serves every index), then a per-index build
+        loop.  Heterogeneous shapes — and backends without the capability,
+        e.g. distributed, whose exchange owns the whole mesh — fall back to
+        sequential ``run``.
+        """
+        if metas is None:
+            metas = [None] * len(keysets)
+        if len(metas) != len(keysets):
+            raise ValueError("metas must align with keysets")
+
+        results: list[ReconstructionResult | None] = [None] * len(keysets)
+
+        if not self.backend.supports_batched:
+            return [self.run(ks, meta=m) for ks, m in zip(keysets, metas)]
+
+        # metadata first (it determines the compressed width), then group by
+        # (n, n_words, compressed width) so every member of a batch gets
+        # exactly the comp_sorted width its own single run would produce
+        t0 = time.perf_counter()
+        metas = [
+            m if m is not None else meta_from_keys(ks.words)
+            for ks, m in zip(keysets, metas)
+        ]
+        t_meta_total = time.perf_counter() - t0
+
+        groups: dict[tuple[int, int, int], list[int]] = {}
+        for i, (ks, m) in enumerate(zip(keysets, metas)):
+            groups.setdefault((ks.n, ks.n_words, m.plan().n_words_out), []).append(i)
+
+        t_meta = t_meta_total / max(len(keysets), 1)
+        for _, idxs in groups.items():
+            if len(idxs) < 2:
+                for i in idxs:
+                    results[i] = self.run(keysets[i], meta=metas[i])
+                continue
+            for i, res in zip(idxs, self._run_batched(
+                [keysets[i] for i in idxs], [metas[i] for i in idxs], t_meta
+            )):
+                results[i] = res
+        return results  # type: ignore[return-value]
+
+    def _run_batched(self, keysets, metas, t_meta) -> list[ReconstructionResult]:
+        k = len(keysets)
+        plans = [m.plan() for m in metas]
+        wc_out = plans[0].n_words_out  # equal within a group by construction
+        words = jnp.asarray(np.stack([ks.words for ks in keysets]), jnp.uint32)
+        bitmaps = jnp.asarray(np.stack([m.dbitmap for m in metas]), jnp.uint32)
+        n = keysets[0].n
+        rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32), (k, n))
+
+        # one program for the whole batch: dynamic-bitmap extract + keyed
+        # sort (the backend determinism contract), vmapped over the index
+        # axis
+        def one(w, bm, r):
+            comp = extract_bits_dynamic(w, bm, wc_out)
+            return sort_words_keyed(comp, r)
+
+        (comp_sorted, row_sorted), t_xs = _timed(
+            jax.jit(jax.vmap(one)), words, bitmaps, rows
+        )
+
+        out = []
+        for i, (ks, meta) in enumerate(zip(keysets, metas)):
+            cs, rs = comp_sorted[i], row_sorted[i]
+            rids = jnp.asarray(ks.rids, jnp.uint32)
+            lengths = jnp.asarray(ks.lengths, jnp.int32)
+            tree, t_build = _timed(
+                self.build, cs, rs, meta, jnp.asarray(ks.words, jnp.uint32),
+                lengths, rids,
+            )
+            t0 = time.perf_counter()
+            new_meta = self.refresh_meta(cs, meta, ks.words[0])
+            t_refresh = time.perf_counter() - t0
+            timings = {
+                "meta": t_meta,
+                "extract": 0.0,
+                "sort": t_xs / k,
+                "build": t_build,
+                "refresh_meta": t_refresh,
+                "total": t_xs / k + t_build,
+            }
+            # "batched" carries the batching fact; "fused" stays reserved
+            # for the backend's fused_extract_sort path
+            stats = self._stats(ks, meta, cs, rs, tree, fused_used=False)
+            stats["batched"] = k
+            out.append(
+                ReconstructionResult(
+                    tree=tree,
+                    meta=new_meta,
+                    comp_sorted=cs,
+                    rid_sorted=rids[rs],
+                    timings=timings,
+                    stats=stats,
+                    row_sorted=rs,
+                )
+            )
+        return out

@@ -1,51 +1,22 @@
-"""End-to-end index reconstruction (paper §5, Figure 7).
+"""End-to-end index reconstruction (paper §5, Figure 7) — thin wrappers.
 
-    table (memory-resident) --scan--> extract compressed keys + rids
-        --parallel sort--> sorted (comp key, rid) pairs
-        --bottom-up build--> partial-key B+tree
-        (+ recompute DS-metadata for next time, §4.3)
-
-Single-device and mesh-distributed (shard_map sample sort) paths.  Timings
-of the three phases (extract / sort / build) are reported to mirror the
-paper's Figure 9 breakdown.
+The actual pipeline — scan → compressed-key extract → parallel sort →
+bottom-up build → DS-metadata refresh, with per-stage timings (Figure 9) —
+lives in ``repro.core.pipeline.ReconstructionPipeline`` and dispatches its
+data-parallel stages to a registered execution backend (``repro.backends``:
+``jnp`` / ``pallas`` / ``distributed``).  These functions are the stable
+convenience entry points the rest of the repo and the paper-table
+benchmarks call.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from .btree import BTree, BTreeConfig, build_btree
-from .compress import extract_bits
-from .dbits import sort_words
+from .btree import BTreeConfig
 from .keyformat import KeySet
-from .metadata import DSMeta, meta_from_keys, meta_on_rebuild
-from .sortkeys import word_comparison_counts
+from .metadata import DSMeta
+from .pipeline import ReconstructionPipeline, ReconstructionResult
 
 __all__ = ["ReconstructionResult", "reconstruct_index", "full_key_reconstruct"]
-
-
-@dataclass
-class ReconstructionResult:
-    tree: BTree
-    meta: DSMeta
-    comp_sorted: jnp.ndarray
-    rid_sorted: jnp.ndarray
-    timings: dict = field(default_factory=dict)
-    stats: dict = field(default_factory=dict)
-
-
-def _timed(fn, *args):
-    t0 = time.perf_counter()
-    out = fn(*args)
-    out_c = jax.tree_util.tree_map(
-        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, out
-    )
-    return out_c, time.perf_counter() - t0
 
 
 def reconstruct_index(
@@ -54,115 +25,36 @@ def reconstruct_index(
     config: BTreeConfig = BTreeConfig(),
     use_kernel: bool = False,
     time_phases: bool = True,
+    backend: str | None = None,
+    backend_opts: dict | None = None,
+    fused: bool = False,
 ) -> ReconstructionResult:
-    """The compressed key sort pipeline of Figure 1 (bottom flow)."""
-    words = jnp.asarray(keyset.words, jnp.uint32)
-    rids = jnp.asarray(keyset.rids, jnp.uint32)
-    lengths = jnp.asarray(keyset.lengths, jnp.int32)
+    """The compressed key sort pipeline of Figure 1 (bottom flow).
 
-    t_meta = 0.0
-    if meta is None:
-        t0 = time.perf_counter()
-        meta = meta_from_keys(keyset.words)
-        t_meta = time.perf_counter() - t0
-    plan = meta.plan()
-
-    # -- extract ------------------------------------------------------------
-    if use_kernel:
-        from repro.kernels.pext import ops as pext_ops
-
-        extract = lambda w: pext_ops.pext(w, plan)
-    else:
-        extract = lambda w: extract_bits(w, plan)
-    comp, t_extract = _timed(extract, words)
-
-    # -- sort ---------------------------------------------------------------
-    rows = jnp.arange(keyset.n, dtype=jnp.uint32)
-
-    def _sort(c, r):
-        sw, srow = sort_words(c, r)
-        return sw, srow
-
-    (comp_sorted, row_sorted), t_sort = _timed(_sort, comp, rows)
-    rid_sorted = rids[row_sorted]
-
-    # -- build --------------------------------------------------------------
-    def _build():
-        return build_btree(
-            comp_sorted, row_sorted, meta, words, lengths, config, rids=rids
-        )
-
-    tree, t_build = _timed(_build)
-
-    # -- refresh DS-metadata (opportune time, §4.3) ---------------------------
-    new_meta = meta_on_rebuild(
-        np.asarray(comp_sorted), meta, np.asarray(keyset.words[0])
+    ``backend`` selects the execution substrate by name; ``use_kernel=True``
+    is the legacy spelling of ``backend="pallas"``.  ``fused=True`` takes
+    the fused extract+sort fast path on backends that support it.
+    """
+    del time_phases  # timings are always recorded by the pipeline
+    name = backend or ("pallas" if use_kernel else "jnp")
+    pipe = ReconstructionPipeline(
+        backend=name, config=config, fused=fused, backend_opts=backend_opts
     )
-
-    full_bits = keyset.n_bits
-    stats = {
-        "n_keys": keyset.n,
-        "full_key_bits": full_bits,
-        "distinction_bits": meta.n_dbits,
-        "compression_ratio": full_bits / max(meta.n_dbits, 1),
-        "full_sort_key_words": keyset.n_words + 1,  # + rid word
-        "comp_sort_key_words": comp.shape[1] + 1,
-        "sort_key_ratio": (keyset.n_words + 1) / (comp.shape[1] + 1),
-        "wcc_full": float(word_comparison_counts(jnp.asarray(keyset.words)[rid_sorted])),
-        "wcc_comp": float(word_comparison_counts(comp_sorted)),
-        "tree_height": tree.height,
-        "tree_bytes": tree.memory_bytes(),
-    }
-    stats["word_comparison_ratio"] = stats["wcc_full"] / max(stats["wcc_comp"], 1e-9)
-    timings = {
-        "meta": t_meta,
-        "extract": t_extract,
-        "sort": t_sort,
-        "build": t_build,
-        "total": t_extract + t_sort + t_build,
-    }
-    return ReconstructionResult(tree, new_meta, comp_sorted, rid_sorted, timings, stats)
+    return pipe.run(keyset, meta=meta)
 
 
 def full_key_reconstruct(
-    keyset: KeySet, config: BTreeConfig = BTreeConfig()
+    keyset: KeySet,
+    config: BTreeConfig = BTreeConfig(),
+    backend: str = "jnp",
+    backend_opts: dict | None = None,
 ) -> ReconstructionResult:
     """Baseline (Figure 1 top flow): full key sort, then build.
 
-    Uses the identity extraction plan — every bit position is treated as a
-    distinction bit — so the same build path runs uncompressed.
+    Identity metadata — every bit position is a distinction bit — so the
+    same build path runs uncompressed, on any backend.
     """
-    words = jnp.asarray(keyset.words, jnp.uint32)
-    rids = jnp.asarray(keyset.rids, jnp.uint32)
-    lengths = jnp.asarray(keyset.lengths, jnp.int32)
-
-    rows = jnp.arange(keyset.n, dtype=jnp.uint32)
-
-    def _sort(w, r):
-        return sort_words(w, r)
-
-    (full_sorted, row_sorted), t_sort = _timed(_sort, words, rows)
-    rid_sorted = rids[row_sorted]
-
-    # identity metadata: all-ones bitmap over the full width
-    ident = DSMeta(
-        dbitmap=np.full((keyset.n_words,), 0xFFFFFFFF, np.uint32),
-        varbitmap=np.full((keyset.n_words,), 0xFFFFFFFF, np.uint32),
-        refkey=np.asarray(keyset.words[0], np.uint32),
-        n_words=keyset.n_words,
+    pipe = ReconstructionPipeline(
+        backend=backend, config=config, backend_opts=backend_opts
     )
-
-    def _build():
-        return build_btree(
-            full_sorted, row_sorted, ident, words, lengths, config, rids=rids
-        )
-
-    tree, t_build = _timed(_build)
-    timings = {"extract": 0.0, "sort": t_sort, "build": t_build, "total": t_sort + t_build}
-    stats = {
-        "n_keys": keyset.n,
-        "wcc_full": float(word_comparison_counts(full_sorted)),
-        "tree_height": tree.height,
-        "tree_bytes": tree.memory_bytes(),
-    }
-    return ReconstructionResult(tree, ident, full_sorted, rid_sorted, timings, stats)
+    return pipe.run(keyset, full_keys=True)

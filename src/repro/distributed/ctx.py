@@ -18,6 +18,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import set_mesh
+
 _state = threading.local()
 
 
@@ -30,7 +32,7 @@ def use_mesh(mesh: Mesh, data_axes=("data",), model_axis: str = "model"):
     prev = getattr(_state, "ctx", None)
     _state.ctx = (mesh, tuple(data_axes), model_axis)
     try:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             yield mesh
     finally:
         _state.ctx = prev

@@ -9,7 +9,9 @@ initialization, and smoke tests/benches must keep seeing 1 device.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -17,13 +19,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     Multi-pod:  (2, 16, 16) ("pod", "data", "model") = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, axis: str = "data") -> Mesh:
     """Small mesh over whatever host devices exist (tests/benches)."""
     n = n or len(jax.devices())
-    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), (axis,))
 
 
 def data_axes(mesh: Mesh) -> tuple[str, ...]:

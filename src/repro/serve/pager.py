@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.core.btree import search_batch
 from repro.core.keyformat import KeySet
-from repro.core.reconstruct import ReconstructionResult, reconstruct_index
+from repro.core.pipeline import ReconstructionPipeline
+from repro.core.reconstruct import ReconstructionResult
 
 __all__ = ["PagedKVManager"]
 
@@ -32,6 +33,7 @@ def _pack_key(seq_id: int, page_no: int) -> np.ndarray:
 class PagedKVManager:
     n_pages: int
     page_tokens: int
+    backend: str = "jnp"  # execution backend for index reconstruction
     _free: list = field(default_factory=list)
     _table: dict = field(default_factory=dict)  # (seq, page_no) -> phys page
     _index: ReconstructionResult | None = None
@@ -67,7 +69,7 @@ class PagedKVManager:
         return out
 
     # ---------------------------------------------------------------- index
-    def rebuild_index(self) -> ReconstructionResult:
+    def rebuild_index(self, backend: str | None = None) -> ReconstructionResult:
         """Reconstruct the page-table B-tree (the paper's recovery path)."""
         if not self._table:
             raise ValueError("empty page table")
@@ -75,7 +77,8 @@ class PagedKVManager:
         words = np.stack([_pack_key(s, p) for (s, p), _ in items])
         rids = np.asarray([phys for _, phys in items], np.uint32)
         ks = KeySet(words=words, lengths=np.full(len(items), 8, np.int32), rids=rids)
-        self._index = reconstruct_index(ks)
+        pipe = ReconstructionPipeline(backend=backend or self.backend)
+        self._index = pipe.run(ks)
         self._index_dirty = False
         return self._index
 

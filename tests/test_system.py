@@ -259,8 +259,8 @@ def test_distributed_sample_sort_subprocess():
     out = _run_subprocess("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.core.distsort import sample_sort
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         n, W = 8 * 512, 2
         words = rng.integers(0, 2**32, size=(n, W), dtype=np.uint32)
@@ -291,8 +291,8 @@ def test_distributed_reconstruction_subprocess():
         bm = D.compute_dbitmap(words)
         plan = C.make_plan(np.asarray(bm), ks.n_words)
         comp = C.extract_bits(words, plan)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ("data",))
         # Zipf keys are heavily skewed -> raise bucket capacity (overflow is
         # detected, never silent)
         res = sample_sort(comp, rids, mesh, "data", capacity_factor=4.0)
@@ -312,11 +312,12 @@ def test_gradient_compression_subprocess():
         from functools import partial
         from repro.train.compression import compressed_allreduce_grads, ef_init
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((8,), ("pod",))
         g = {"w": jnp.arange(8*32, dtype=jnp.float32).reshape(8, 32) / 100.0}
         ef = ef_init(g)
-        fn = jax.shard_map(
+        from repro.compat import shard_map
+        fn = shard_map(
             partial(compressed_allreduce_grads, axis_name="pod"),
             mesh=mesh, in_specs=(P("pod"), P("pod")),
             out_specs=(P(), P("pod")))
@@ -342,8 +343,8 @@ def test_moe_sort_dispatch_under_mesh_subprocess():
                       dispatch_mode="sort")
         m = LM(cfg, remat=False)
         params = m.init(jax.random.PRNGKey(0))
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         batch = {"tokens": jnp.zeros((4, 32), jnp.int32),
                  "labels": jnp.zeros((4, 32), jnp.int32)}
         with use_mesh(mesh):
@@ -368,8 +369,8 @@ def test_elastic_restore_subprocess():
         params = m.init(jax.random.PRNGKey(0))
         d = tempfile.mkdtemp()
         save_checkpoint(d, 1, params)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         sh = params_shardings(mesh, jax.eval_shape(lambda: params))
         like = jax.tree_util.tree_map(np.zeros_like, params)
         got, stats = restore_checkpoint(d, 1, like, shardings=sh)
