@@ -1,0 +1,114 @@
+"""Incremental delta-merge vs full reconstruction (BENCH_incremental.json).
+
+The replication claim measured: with a delta that is a few percent of a
+large base, ``ReconstructionPipeline.run_incremental`` — filter + delta
+extract/sort + backend ``merge_sorted`` + rebuild — must beat the full
+``run`` (extract + resort of everything) while producing byte-identical
+sorted keys and rid permutations.  Rows record both paths' per-stage
+timings and the speedups; parity is asserted, not assumed.
+
+  python -m benchmarks.run --only incremental --json BENCH_incremental.json
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.keyformat import KeySet
+from repro.core.metadata import meta_from_keys
+from repro.core.pipeline import ReconstructionPipeline, fold_keyset
+
+from .common import timed, emit
+
+
+def run(
+    n_base: int = 65536,
+    delta_frac: float = 0.05,
+    backends: tuple[str, ...] = ("jnp",),
+    n_words: int = 3,
+) -> list[dict]:
+    print(f"# Incremental reconstruction: {n_base} base keys, "
+          f"{delta_frac:.0%} delta")
+    rng = np.random.default_rng(0)
+    n_delta = max(1, int(n_base * delta_frac))
+    words = rng.integers(
+        0, 2**32, size=(n_base + n_delta, n_words), dtype=np.uint32
+    ) & np.uint32(0x0FFF0FFF)
+    # union metadata: the realistic steady state where recent churn re-uses
+    # the standing distinction bits, so the incremental path actually runs
+    meta = meta_from_keys(words)
+    base = KeySet(
+        words=words[:n_base],
+        lengths=np.full(n_base, n_words * 4, np.int32),
+        rids=np.arange(n_base, dtype=np.uint32),
+    )
+    delta = KeySet(
+        words=words[n_base:],
+        lengths=np.full(n_delta, n_words * 4, np.int32),
+        rids=np.arange(n_base, n_base + n_delta, dtype=np.uint32),
+    )
+    rows: list[dict] = []
+    for name in backends:
+        pipe = ReconstructionPipeline(backend=name)
+        prev = pipe.run(base, meta=meta)
+        folded = fold_keyset(base, None, delta)
+
+        t_full, res_full = timed(lambda: pipe.run(folded, meta=meta))
+        t_inc, inc_out = timed(
+            lambda: pipe.run_incremental(prev, base, delta, meta=meta)
+        )
+        res_inc = inc_out[0]
+        assert res_inc.stats["incremental"] is True
+        parity = bool(
+            np.array_equal(
+                np.asarray(res_full.rid_sorted), np.asarray(res_inc.rid_sorted)
+            )
+            and np.array_equal(
+                np.asarray(res_full.comp_sorted), np.asarray(res_inc.comp_sorted)
+            )
+        )
+        tf, ti = res_full.timings, res_inc.timings
+        # the stages the delta path actually changes (build is shared)
+        sort_path_full = tf["extract"] + tf["sort"]
+        sort_path_inc = ti["filter"] + ti["extract"] + ti["sort"] + ti["merge"]
+        derived = (
+            f"full={t_full:.4f}s;incremental={t_inc:.4f}s;"
+            f"speedup={t_full / max(t_inc, 1e-9):.2f}x;"
+            f"sort_path_speedup={sort_path_full / max(sort_path_inc, 1e-9):.2f}x;"
+            f"parity={parity}"
+        )
+        emit(f"incremental/{name}", t_inc, derived)
+        for label, wall, res in (
+            ("full_run", t_full, res_full),
+            ("run_incremental", t_inc, res_inc),
+        ):
+            rows.append(
+                {
+                    "name": f"incremental/{name}/{label}",
+                    "backend": name,
+                    "n_base": n_base,
+                    "n_delta": n_delta,
+                    "wall_s": wall,
+                    "timings": dict(res.timings),
+                    "parity": parity,
+                    "incremental": bool(res.stats.get("incremental", False)),
+                }
+            )
+        rows.append(
+            {
+                "name": f"incremental/{name}/speedup",
+                "backend": name,
+                "n_base": n_base,
+                "n_delta": n_delta,
+                "total_speedup": t_full / max(t_inc, 1e-9),
+                "sort_path_speedup": sort_path_full / max(sort_path_inc, 1e-9),
+                "parity": parity,
+            }
+        )
+        if not parity:
+            print(f"# WARNING: incremental path diverged from full on {name}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

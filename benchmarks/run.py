@@ -17,8 +17,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: pipeline,table1,table2,table3,table4,"
-                         "table5,table6,apps")
+                    help="comma list: pipeline,incremental,table1,table2,"
+                         "table3,table4,table5,table6,apps")
     ap.add_argument("--fast", action="store_true", help="smaller datasets")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write structured suite results (timings per stage "
@@ -30,6 +30,7 @@ def main() -> None:
         bench_construction,
         bench_datasets,
         bench_dbit_distribution,
+        bench_incremental,
         bench_parallel_scaling,
         bench_pipeline,
         bench_sort_comparison,
@@ -39,6 +40,9 @@ def main() -> None:
     scale = 0.05 if args.fast else 0.1
     suites = {
         "pipeline": lambda: bench_pipeline.run(scale=scale),
+        "incremental": lambda: bench_incremental.run(
+            n_base=8192 if args.fast else 65536
+        ),
         "table1": lambda: bench_construction.run(scale=scale),
         "table2": lambda: bench_datasets.run(scale=scale),
         "table3": bench_dbit_distribution.run,

@@ -3,11 +3,18 @@
 A "master" trains and checkpoints; a "replica" node brings the state up by
 loading the table (checkpoint payload) and RECONSTRUCTING the search index
 from persisted DS-metadata — no index image ever crosses the wire, exactly
-as in main-memory DBMS replication.  Also demonstrates elastic restore
-(different logical mesh on the replica) and the replica bring-up of *many*
-indexes at once (§6): ``ReconstructionPipeline.run_many`` batches the
-extract+sort of same-shape key sets into one vmapped program, and the same
-bring-up runs unchanged on any registered execution backend.
+as in main-memory DBMS replication.  Also demonstrates:
+
+* **incremental log consumption**: the primary streams
+  ``repro.replication.ChangeLog`` batches; the replica folds each one
+  through ``run_incremental`` — only the delta is sorted and the backend
+  merges it into the standing run;
+* **delta checkpoints**: ``save_checkpoint_delta`` persists just the
+  changed leaves + the manifest change log, and restore replays the log
+  onto the base step;
+* elastic restore (different logical mesh on the replica) and the replica
+  bring-up of *many* indexes at once (§6): ``run_many`` batches the
+  extract+sort of same-shape key sets into one program on jnp and pallas.
 
   PYTHONPATH=src python examples/replication.py
 """
@@ -19,12 +26,18 @@ import jax
 import numpy as np
 
 from repro.backends import available_backends
-from repro.ckpt.checkpoint import CheckpointIndex, restore_checkpoint, save_checkpoint
+from repro.ckpt.checkpoint import (
+    CheckpointIndex,
+    restore_checkpoint,
+    save_checkpoint,
+    save_checkpoint_delta,
+)
 from repro.configs import ARCHS
 from repro.configs.paper_index import ZipfConfig
 from repro.core.pipeline import ReconstructionPipeline
 from repro.data.synthetic import zipf_keys
 from repro.models.lm import LM
+from repro.replication import ChangeLog, Replica
 
 
 def multi_index_bring_up(n_tables: int = 8, n_keys: int = 4096):
@@ -57,6 +70,34 @@ def multi_index_bring_up(n_tables: int = 8, n_keys: int = 4096):
         tm = res.timings
         print(f"     {name:12s} extract {tm['extract']*1e3:7.1f}ms  "
               f"sort {tm['sort']*1e3:7.1f}ms  build {tm['build']*1e3:7.1f}ms")
+
+
+def replica_log_stream(n_keys: int = 16384, n_batches: int = 3, batch: int = 400):
+    """Primary streams change-log batches; the replica merges, not resorts."""
+    print(f"== replica: incremental consumption of {n_batches} log batches ==")
+    rng = np.random.default_rng(0)
+    base = zipf_keys(ZipfConfig(1.5, 40, 0, n_keys=n_keys), seed=0)
+    rep = Replica(base)
+    next_rid = int(np.asarray(base.rids).max()) + 1
+    lsn = 0
+    for b in range(n_batches):
+        log = ChangeLog(base.n_words, start_lsn=lsn)
+        # inserts re-draw existing keys (the zipf head), deletes hit live rids
+        pick = rng.integers(0, rep.keyset.n, size=batch)
+        log.append_inserts(
+            np.asarray(rep.keyset.words)[pick],
+            np.arange(next_rid, next_rid + batch, dtype=np.uint32),
+        )
+        next_rid += batch
+        dead = rng.choice(np.asarray(rep.keyset.rids), size=batch // 4, replace=False)
+        log.append_deletes(dead)
+        lsn = log.next_lsn
+        st = rep.apply(log)
+        tm = st["timings"]
+        path = "incremental" if st["incremental"] else f"full ({st['fallback']})"
+        print(f"   batch {b}: {path:12s} +{st['n_delta']} -{st['n_deleted']} "
+              f"-> {st['n_keys']} keys; sort {tm['sort']*1e3:.1f}ms "
+              f"merge {tm.get('merge', 0.0)*1e3:.1f}ms build {tm['build']*1e3:.1f}ms")
 
 
 def main():
@@ -97,6 +138,27 @@ def main():
         print(f"   index rebuild took {stats['index_rebuild_s']*1e3:.1f}ms of "
               f"the restore path")
 
+        print("== master: delta checkpoint (changed leaves + change log) ==")
+        bumped = jax.tree_util.tree_map(lambda x: x, params)
+        leaves, tdef = jax.tree_util.tree_flatten(bumped)
+        leaves[0] = leaves[0] + 1.0  # one changed leaf
+        bumped = jax.tree_util.tree_unflatten(tdef, leaves)
+        t0 = time.perf_counter()
+        save_checkpoint_delta(d, step=1001, tree=bumped, base_step=1000)
+        print(f"   delta step saved in {time.perf_counter()-t0:.2f}s "
+              f"(1 changed leaf written; rest referenced from the base)")
+        restored2, stats2 = restore_checkpoint(d, 1001, like)
+        ok2 = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(
+                jax.tree_util.tree_leaves(bumped),
+                jax.tree_util.tree_leaves(restored2),
+            )
+        )
+        print(f"   replayed onto base: bit-exact {ok2}, "
+              f"incremental rebuild: {stats2['incremental']}")
+
+    replica_log_stream()
     multi_index_bring_up()
 
 

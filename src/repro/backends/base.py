@@ -16,6 +16,16 @@ carried as an extra least-significant sort-key word (the paper's sort key is
 literally the (compressed key, rid) pair).  Rows are the pipeline's row
 *positions* — distinct values in ``[0, n)``; the distributed backend
 validates this because its shard padding occupies ids ``>= n``.
+
+The incremental reconstruction path adds a third data-parallel op,
+``merge_sorted``: given two runs that are each ascending in (key, row) —
+the surviving base run and the freshly sorted delta — produce the merged
+run.  The contract extends naturally: the output must be byte-identical to
+``sort`` over the concatenated pairs (rows must be distinct *across* the two
+runs, so the (key, row) order is total).  Backends realize it differently —
+merge-path ranks on jnp, the tiled rank kernel on pallas, owner-shard
+routing + local merges on the distributed mesh — but the output bytes are
+the same everywhere.
 """
 
 from __future__ import annotations
@@ -114,3 +124,53 @@ class ExecutionBackend(abc.ABC):
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """extract+sort as one program; only if ``supports_fused``."""
         raise NotImplementedError(f"backend {self.name} has no fused path")
+
+    # -------------------------------------------------------------- merge
+    def merge_sorted(
+        self,
+        keys_a: jnp.ndarray,
+        rows_a: jnp.ndarray,
+        keys_b: jnp.ndarray,
+        rows_b: jnp.ndarray,
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Merge two ascending (key, row) runs into one.
+
+        Must be byte-identical to ``sort`` over the concatenated inputs;
+        rows must be distinct across both runs (see the module docstring).
+        The default is the jnp merge-path reference; backends override with
+        their native realization.
+        """
+        from repro.core.dbits import merge_words_keyed
+
+        return merge_words_keyed(keys_a, rows_a, keys_b, rows_b)
+
+    # ----------------------------------------------------- batched (many)
+    def batched_extract_sort(
+        self,
+        words: jnp.ndarray,
+        bitmaps: jnp.ndarray,
+        rows: jnp.ndarray,
+        plans: list["ExtractionPlan"],
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Extract+sort a stacked batch of same-shape keysets.
+
+        ``words``: (k, n, W); ``bitmaps``: (k, W) per-index D-bitmaps (all
+        with the same output width); ``rows``: (k, n); ``plans``: the static
+        per-index extraction plans (for backends whose extractor wants a
+        trace-time schedule).  Returns (comp_sorted (k, n, Wc), row_sorted
+        (k, n)).  Only called when ``supports_batched``; the default is the
+        vmapped dynamic-bitmap extract + keyed sort (single-device jnp
+        semantics).
+        """
+        import jax
+
+        from repro.core.compress import extract_bits_dynamic
+        from repro.core.dbits import sort_words_keyed
+
+        n_words_out = plans[0].n_words_out  # equal across the batch
+
+        def one(w, bm, r):
+            comp = extract_bits_dynamic(w, bm, n_words_out)
+            return sort_words_keyed(comp, r)
+
+        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0)))(words, bitmaps, rows)

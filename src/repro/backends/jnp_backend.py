@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compress import ExtractionPlan, extract_bits
-from repro.core.dbits import sort_words_keyed
+from repro.core.dbits import merge_words_keyed, sort_words_keyed
 
 from .base import ExecutionBackend, register_backend
 
@@ -25,6 +25,11 @@ __all__ = ["JnpBackend"]
 def _fused_extract_sort(words: jnp.ndarray, rows: jnp.ndarray, plan: ExtractionPlan):
     comp = extract_bits(words, plan)
     return sort_words_keyed(comp, rows)
+
+
+# merge-path merge: two rank passes (vectorized binary search) + permutation
+# scatter; one program so XLA fuses the compares with the scatter operands
+_merged = jax.jit(merge_words_keyed)
 
 
 @register_backend("jnp")
@@ -45,4 +50,12 @@ class JnpBackend(ExecutionBackend):
     def fused_extract_sort(self, words, plan, rows):
         return _fused_extract_sort(
             jnp.asarray(words, jnp.uint32), jnp.asarray(rows, jnp.uint32), plan
+        )
+
+    def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):
+        # shapes are static at trace time, so the empty-run short-circuits
+        # inside merge_words_keyed specialize correctly under jit
+        return _merged(
+            jnp.asarray(keys_a, jnp.uint32), jnp.asarray(rows_a, jnp.uint32),
+            jnp.asarray(keys_b, jnp.uint32), jnp.asarray(rows_b, jnp.uint32),
         )

@@ -24,6 +24,8 @@ from repro.core.compress import ExtractionPlan
 from repro.core.dbits import sort_words_keyed
 from repro.kernels.bitonic import ops as bitonic_ops
 from repro.kernels.bitonic.kernel import DEFAULT_BLOCK
+from repro.kernels.merge import ops as merge_ops
+from repro.kernels.merge.kernel import DEFAULT_TILE as MERGE_TILE
 from repro.kernels.pext import ops as pext_ops
 from repro.kernels.pext.kernel import DEFAULT_TILE
 
@@ -36,11 +38,14 @@ __all__ = ["PallasBackend"]
 class PallasBackend(ExecutionBackend):
     """kernels/pext extraction + kernels/bitonic block sort."""
 
+    supports_batched = True
+
     def __init__(
         self,
         interpret: bool | None = None,
         tile: int = DEFAULT_TILE,
         block: int = DEFAULT_BLOCK,
+        merge_tile: int = MERGE_TILE,
     ) -> None:
         super().__init__()
         if interpret is None:
@@ -48,6 +53,7 @@ class PallasBackend(ExecutionBackend):
         self.interpret = bool(interpret)
         self.tile = int(tile)
         self.block = int(block)
+        self.merge_tile = int(merge_tile)
         self.last_info = {"interpret": self.interpret}
 
     def extract(self, words: jnp.ndarray, plan: ExtractionPlan) -> jnp.ndarray:
@@ -67,3 +73,31 @@ class PallasBackend(ExecutionBackend):
         # merge of block-sorted runs; the keyed sort restores the (key, row)
         # order the unstable bitonic network does not guarantee
         return sort_words_keyed(bk, brow)
+
+    def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):
+        """kernels/merge tiled merge-path ranks + permutation scatter."""
+        return merge_ops.merge_sorted(
+            keys_a, rows_a, keys_b, rows_b,
+            tile=self.merge_tile, interpret=self.interpret,
+        )
+
+    def batched_extract_sort(self, words, bitmaps, rows, plans):
+        """Batched fast path: per-index pext extraction (each plan is a
+        static kernel schedule), then ONE vmapped program over the stacked
+        batch for the sort — the bitonic block-sort kernel vmaps by growing
+        its grid, and the run merge rides along inside the same trace."""
+        del bitmaps  # pext wants the static plans, not runtime bitmaps
+        comp = jnp.stack(
+            [
+                pext_ops.pext(words[i], p, tile=self.tile, interpret=self.interpret)
+                for i, p in enumerate(plans)
+            ]
+        )
+
+        def one(c, r):
+            bk, brow = bitonic_ops.block_sort(
+                c, r, block=self.block, interpret=self.interpret
+            )
+            return sort_words_keyed(bk, brow)
+
+        return jax.vmap(one)(comp, jnp.asarray(rows, jnp.uint32))

@@ -2,7 +2,7 @@
 
 Layout of a checkpoint directory:
 
-  step_<N>/
+  step_<N>/                          — a FULL (base) step
     manifest.npz       — the TABLE: rows of (key, file, shape, dtype)
                          where key = fnv1a(param path) || shard coords
     dsmeta.npz         — DS-metadata of the manifest keys (D-bitmap etc.)
@@ -10,19 +10,34 @@ Layout of a checkpoint directory:
                          restore re-places onto any mesh)
     DONE               — commit marker (atomic-rename protocol)
 
+  step_<M>/                          — a DELTA step (base step + log)
+    delta_log.npz      — a ``repro.replication.ChangeLog`` (LSN-stamped
+                         insert/delete entries over manifest keys) plus the
+                         delta file names and the base step number
+    dsmeta.npz         — base DS-metadata advanced by the §4.3 insert rule
+    <changed leaves>.npy — only leaves that changed vs the base
+    DONE
+
 Exactly as in the paper's main-memory DBMS setting, the *search index* over
 the manifest is never serialized — only the DS-metadata is — and restore
 begins by RECONSTRUCTING the key index with the compressed key sort
 (``repro.core.reconstruct``).  For thousand-node restores the manifest has
 one row per (leaf x shard) — millions of rows — and index rebuild cost is
-exactly the paper's Table 1 problem.
+exactly the paper's Table 1 problem.  Delta steps push the same premise one
+step further: restore replays the log onto the base manifest and rebuilds
+through ``ReconstructionPipeline.run_incremental`` — unchanged D-bitmap ⇒
+only the changed rows are sorted and merged into the base run.  Unchanged
+leaf payloads are read from the base step's directory (manifest file
+entries are step-relative paths), so a delta step stores only what moved.
 
 Fault-tolerance properties:
   * atomic commit (DONE marker written last; partial checkpoints ignored);
   * ``latest_step`` scans for the newest committed step -> crash-restart;
   * elastic resharding: arrays are saved unsharded and re-placed with
     ``jax.device_put`` under the *restoring* mesh's shardings, so a
-    checkpoint from mesh A restores onto mesh B (different axis sizes).
+    checkpoint from mesh A restores onto mesh B (different axis sizes);
+  * delta chains: a delta step's base may itself be a delta step — restore
+    folds the chain recursively.
 """
 
 from __future__ import annotations
@@ -40,7 +55,13 @@ from repro.core.metadata import DSMeta
 from repro.core.pipeline import ReconstructionPipeline
 from repro.core.reconstruct import ReconstructionResult
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointIndex"]
+__all__ = [
+    "save_checkpoint",
+    "save_checkpoint_delta",
+    "restore_checkpoint",
+    "latest_step",
+    "CheckpointIndex",
+]
 
 
 def _fnv1a(s: str) -> int:
@@ -105,6 +126,127 @@ def save_checkpoint(ckpt_dir: str | os.PathLike, step: int, tree,
     return final
 
 
+def _manifest_view(root: Path, step: int):
+    """The folded manifest of a step, host-side — no index reconstruction.
+
+    Returns ``(live_keys (n, 3), live_rids (n,), files_slots, names_slots)``
+    with file paths relative to the step's own directory.  Rids are *slot*
+    indices into the (append-only) files/names lists; delta chains fold
+    recursively through their logs.  This is the cheap manifest read the
+    save path uses; restores go through ``CheckpointIndex``, which also
+    rebuilds the search index.
+    """
+    step_dir = root / f"step_{step:08d}"
+    if (step_dir / "manifest.npz").exists():
+        m = np.load(step_dir / "manifest.npz")
+        files = [str(x) for x in m["files"]]
+        names = [str(x) for x in m["names"]]
+        keys = m["keys"].astype(np.uint32)
+        return keys, np.arange(len(files), dtype=np.uint32), files, names
+    from repro.replication import ChangeLog
+
+    with np.load(step_dir / "delta_log.npz") as z:
+        d = dict(z)
+    base_step = int(d["base_step"])
+    bkeys, brids, bfiles, bnames = _manifest_view(root, base_step)
+    log = ChangeLog.from_npz_dict(d)
+    keep, ins_words, _ins_lengths, ins_rids = log.fold(brids)
+    keys = np.concatenate([bkeys[keep], ins_words], axis=0)
+    rids = np.concatenate([brids[keep], ins_rids])
+    rel = f"../step_{base_step:08d}/"
+    files = [rel + f for f in bfiles] + [str(x) for x in d["files"]]
+    names = list(bnames) + [str(x) for x in d["names"]]
+    return keys, rids, files, names
+
+
+def save_checkpoint_delta(ckpt_dir: str | os.PathLike, step: int, tree,
+                          base_step: int, extra_meta: dict | None = None) -> Path:
+    """Delta checkpoint: the change log vs ``base_step`` plus changed leaves.
+
+    Only leaves whose payload differs from the base are written; unchanged
+    leaves stay referenced in the base step's directory.  Manifest changes
+    are recorded as an LSN-stamped ``ChangeLog``: a changed leaf is a
+    DELETE of its base manifest row + an INSERT of the same key with a new
+    slot; new/removed leaves are plain INSERTs/DELETEs.  The step's
+    DS-metadata is the base metadata advanced by the §4.3 insert rule, so a
+    restore that sees no new distinction bits replays the log through the
+    *incremental* reconstruction path.
+    """
+    import bisect
+
+    from repro.core.metadata import meta_on_insert
+    from repro.replication import ChangeLog
+
+    root = Path(ckpt_dir)
+    base_dir = root / f"step_{base_step:08d}"
+    if not (base_dir / "DONE").exists():
+        raise FileNotFoundError(f"no committed base checkpoint at {base_dir}")
+    # host-side manifest read — the save path never rebuilds the index
+    base_keys, base_rids, base_files, base_names = _manifest_view(root, base_step)
+    base_meta = DSMeta.from_npz_dict(dict(np.load(base_dir / "dsmeta.npz")))
+
+    final = root / f"step_{step:08d}"
+    tmp = root / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    live = {base_names[int(r)]: int(r) for r in base_rids}
+    n_slots = len(base_files)
+    log = ChangeLog(n_words=3)
+    delta_files: list[str] = []
+    delta_names: list[str] = []
+    inserted_keys: list[np.ndarray] = []
+    seen: set[str] = set()
+    for name, arr in _flatten(tree):
+        seen.add(name)
+        if name in live:
+            old = np.load(base_dir / base_files[live[name]])
+            if (old.shape == arr.shape and old.dtype == arr.dtype
+                    and np.array_equal(old, arr)):
+                continue  # unchanged: stays a base reference
+            log.append_deletes([live[name]])
+        fn = f"leaf_{len(delta_files):06d}.npy"
+        np.save(tmp / fn, arr)
+        key = _manifest_key(name)
+        log.append_inserts(key[None, :], [n_slots + len(delta_files)])
+        delta_files.append(fn)
+        delta_names.append(name)
+        inserted_keys.append(key)
+    for name, rid in live.items():
+        if name not in seen:
+            log.append_deletes([rid])
+
+    # DS-metadata: base + insert rule per inserted manifest key (host-side
+    # scalar work, as everywhere in the metadata layer)
+    skeys = sorted(tuple(int(x) for x in row) for row in base_keys)
+    meta = base_meta
+    for key in inserted_keys:
+        kt = tuple(int(x) for x in key)
+        i = bisect.bisect_left(skeys, kt)
+        a = np.asarray(skeys[i - 1], np.uint32) if i > 0 else None
+        b = np.asarray(skeys[i], np.uint32) if i < len(skeys) else None
+        meta = meta_on_insert(meta, a, key, b)
+        bisect.insort(skeys, kt)
+
+    np.savez(
+        tmp / "delta_log.npz",
+        **log.to_npz_dict(),
+        files=np.asarray(delta_files),
+        names=np.asarray(delta_names),
+        base_step=np.asarray(base_step, np.int64),
+    )
+    np.savez(tmp / "dsmeta.npz", **meta.to_npz_dict())
+    (tmp / "meta.json").write_text(
+        json.dumps({"step": step, "base_step": base_step, **(extra_meta or {})})
+    )
+    (tmp / "DONE").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+    return final
+
+
 def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
     root = Path(ckpt_dir)
     if not root.exists():
@@ -118,15 +260,28 @@ def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
 
 
 class CheckpointIndex:
-    """The reconstructed manifest index: hashed-path point lookups."""
+    """The reconstructed manifest index: hashed-path point lookups.
+
+    For a delta step the base manifest is folded through the persisted
+    change log and the index is rebuilt *incrementally* (base run merged
+    with the changed rows) whenever the persisted D-bitmap still matches
+    the base extraction — ``result.stats["incremental"]`` records which
+    path ran.  ``files``/``names`` are slot lists: record ids index into
+    them, and entries of a delta step refer into the base step's directory
+    by relative path.
+    """
 
     def __init__(self, step_dir: Path, backend: str = "jnp"):
-        self.dir = step_dir
-        m = np.load(step_dir / "manifest.npz")
+        self.dir = Path(step_dir)
+        self.backend = backend
+        meta = DSMeta.from_npz_dict(dict(np.load(self.dir / "dsmeta.npz")))
+        if (self.dir / "delta_log.npz").exists():
+            self._init_delta(meta)
+            return
+        m = np.load(self.dir / "manifest.npz")
         self.keys = m["keys"].astype(np.uint32)
         self.files = [str(x) for x in m["files"]]
         self.names = [str(x) for x in m["names"]]
-        meta = DSMeta.from_npz_dict(dict(np.load(step_dir / "dsmeta.npz")))
         ks = KeySet(
             words=self.keys,
             lengths=np.full(len(self.files), 12, np.int32),
@@ -135,6 +290,30 @@ class CheckpointIndex:
         # THE paper pipeline: extract by persisted D-bitmap -> sort -> build
         pipe = ReconstructionPipeline(backend=backend)
         self.result: ReconstructionResult = pipe.run(ks, meta=meta)
+        self._keyset = ks
+
+    def _init_delta(self, meta: DSMeta) -> None:
+        """Replay-on-restore: fold the base manifest through the log and
+        rebuild via the incremental pipeline path (full-path fallback when
+        the persisted bitmap grew past the base extraction)."""
+        from repro.replication import ChangeLog
+
+        with np.load(self.dir / "delta_log.npz") as z:
+            d = dict(z)
+        base_step = int(d["base_step"])
+        base = CheckpointIndex(
+            self.dir.parent / f"step_{base_step:08d}", backend=self.backend
+        )
+        log = ChangeLog.from_npz_dict(d)
+        keep_rows, delta = log.fold_keyset(base._keyset)
+        pipe = ReconstructionPipeline(backend=self.backend)
+        self.result, self._keyset = pipe.run_incremental(
+            base.result, base._keyset, delta, keep_rows=keep_rows, meta=meta
+        )
+        rel = f"../step_{base_step:08d}/"
+        self.files = [rel + f for f in base.files] + [str(x) for x in d["files"]]
+        self.names = list(base.names) + [str(x) for x in d["names"]]
+        self.keys = np.asarray(self._keyset.words, np.uint32)
 
     def lookup(self, name: str) -> str:
         from repro.core.btree import search_batch
@@ -148,17 +327,19 @@ class CheckpointIndex:
 
 
 def restore_checkpoint(ckpt_dir: str | os.PathLike, step: int, like_tree,
-                       shardings=None) -> tuple[dict, dict]:
+                       shardings=None, backend: str = "jnp") -> tuple[dict, dict]:
     """Restore a pytree; elastic re-placement under ``shardings`` if given.
 
     Every leaf is fetched through the reconstructed manifest index (point
     lookup by hashed path) — the restore path exercises the paper's index,
-    not a linear scan.
+    not a linear scan.  ``backend`` selects the execution substrate the
+    manifest index is reconstructed on (any registered backend name).
+    Delta steps replay their change log onto the base step transparently.
     """
     step_dir = Path(ckpt_dir) / f"step_{step:08d}"
     if not (step_dir / "DONE").exists():
         raise FileNotFoundError(f"no committed checkpoint at {step_dir}")
-    idx = CheckpointIndex(step_dir)
+    idx = CheckpointIndex(step_dir, backend=backend)
 
     flat, tdef = jax.tree_util.tree_flatten_with_path(like_tree)
     out = []
@@ -176,6 +357,8 @@ def restore_checkpoint(ckpt_dir: str | os.PathLike, step: int, like_tree,
         "index_height": idx.result.tree.height,
         "compression_ratio": idx.result.stats["compression_ratio"],
         "index_rebuild_s": idx.result.timings["total"],
+        "index_backend": idx.result.stats["backend"],
+        "incremental": bool(idx.result.stats.get("incremental", False)),
         "meta": json.loads((step_dir / "meta.json").read_text()),
     }
     return tree, stats

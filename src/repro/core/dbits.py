@@ -30,6 +30,9 @@ __all__ = [
     "lex_compare_le",
     "sort_words",
     "sort_words_keyed",
+    "rank_in_sorted_keyed",
+    "merge_from_ranks",
+    "merge_words_keyed",
     "adjacent_dbit_positions",
     "dbit_position_pairwise",
     "positions_to_bitmap",
@@ -106,6 +109,97 @@ def sort_words(
     out = jax.lax.sort(operands, num_keys=num_key_words)
     sorted_words = jnp.stack(out[:w], axis=1)
     return (sorted_words,) + tuple(out[w:])
+
+
+# ---------------------------------------------------------------------------
+# merge of sorted (key, row) runs
+# ---------------------------------------------------------------------------
+
+def rank_in_sorted_keyed(
+    keys_s: jnp.ndarray,
+    rows_s: jnp.ndarray,
+    keys_q: jnp.ndarray,
+    rows_q: jnp.ndarray,
+) -> jnp.ndarray:
+    """Rank of each query pair in a sorted run: #{i : (key_s, row_s)_i < q}.
+
+    ``(keys_s, rows_s)`` must be ascending in the (key, row) order of the
+    backend determinism contract.  The query pairs need not be sorted.  This
+    is the merge-path primitive: the output position of a run element in the
+    two-run merge is its own index plus its rank in the *other* run.
+    Vectorized binary search — log2(n_s) steps of whole-array lexicographic
+    compares, no host loop.
+    """
+    ns = int(keys_s.shape[0])
+    nq = int(keys_q.shape[0])
+    if ns == 0 or nq == 0:
+        return jnp.zeros((nq,), jnp.int32)
+    lo = jnp.zeros((nq,), jnp.int32)
+    hi = jnp.full((nq,), ns, jnp.int32)
+    for _ in range(max(1, ns.bit_length())):
+        mid = (lo + hi) // 2
+        midc = jnp.minimum(mid, ns - 1)
+        sk = keys_s[midc]
+        sr = rows_s[midc]
+        eq = jnp.all(sk == keys_q, axis=-1)
+        lt = lex_less(sk, keys_q) | (eq & (sr < rows_q))
+        lt = lt & (mid < ns)
+        lo = jnp.where(lt, mid + 1, lo)
+        hi = jnp.where(lt, hi, mid)
+    return lo
+
+
+def merge_from_ranks(
+    keys_a: jnp.ndarray,
+    rows_a: jnp.ndarray,
+    keys_b: jnp.ndarray,
+    rows_b: jnp.ndarray,
+    rank_fn=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge two ascending (key, row) runs given a rank primitive.
+
+    ``rank_fn(keys_s, rows_s, keys_q, rows_q)`` must return the rank of
+    each query pair in the sorted run (#{s < q}); the merge is then a
+    permutation scatter: each element's output position is its own index
+    plus its rank in the other run.  Rows must be distinct across the two
+    runs so the (key, row) order is total and the scatter collision-free.
+    The default primitive is ``rank_in_sorted_keyed``; the Pallas backend
+    passes its tiled rank kernel instead.
+    """
+    if rank_fn is None:
+        rank_fn = rank_in_sorted_keyed
+    keys_a = jnp.asarray(keys_a, jnp.uint32)
+    keys_b = jnp.asarray(keys_b, jnp.uint32)
+    rows_a = jnp.asarray(rows_a, jnp.uint32)
+    rows_b = jnp.asarray(rows_b, jnp.uint32)
+    na, nb = int(keys_a.shape[0]), int(keys_b.shape[0])
+    if na == 0:
+        return keys_b, rows_b
+    if nb == 0:
+        return keys_a, rows_a
+    pos_a = jnp.arange(na, dtype=jnp.int32) + rank_fn(keys_b, rows_b, keys_a, rows_a)
+    pos_b = jnp.arange(nb, dtype=jnp.int32) + rank_fn(keys_a, rows_a, keys_b, rows_b)
+    n, w = na + nb, int(keys_a.shape[1])
+    keys = jnp.zeros((n, w), jnp.uint32).at[pos_a].set(keys_a).at[pos_b].set(keys_b)
+    rows = jnp.zeros((n,), jnp.uint32).at[pos_a].set(rows_a).at[pos_b].set(rows_b)
+    return keys, rows
+
+
+def merge_words_keyed(
+    keys_a: jnp.ndarray,
+    rows_a: jnp.ndarray,
+    keys_b: jnp.ndarray,
+    rows_b: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge two runs that are each ascending in (key, row) order.
+
+    Byte-identical to ``sort_words_keyed`` over the concatenated pairs —
+    rows must be distinct across both runs, so the (key, row) order is total
+    and the merge is a permutation scatter (O(n log n) comparisons for the
+    ranks vs the full sort's network; O(n) data movement).  This is the jnp
+    reference semantics of the backend ``merge_sorted`` op.
+    """
+    return merge_from_ranks(keys_a, rows_a, keys_b, rows_b)
 
 
 # ---------------------------------------------------------------------------

@@ -6,17 +6,25 @@ delta buffer, deletes set tombstones, DS-metadata is updated incrementally
 (insert rule) or not at all (delete rule — lazy, valid by Theorem 2), and a
 rebuild folds everything down via the compressed key sort.  This mirrors
 the paper's premise that indexes are cheap to *reconstruct* and therefore
-need neither logging nor eager maintenance of exact metadata.
+need neither eager maintenance of exact metadata nor a durable index image.
 
-Rebuilds route through ``ReconstructionPipeline`` and honour the index's
-configured execution backend, so an online index on a mesh rebuilds with
-the distributed sample sort while its mutation path stays host-side.
+Mutations are double-entried: the sorted host-side delta/tombstone view
+serves point lookups and neighbor queries (the transaction path), while a
+``repro.replication.ChangeLog`` keeps the same mutations as LSN-stamped
+columnar arrays — the *rebuild* path never touches a per-row Python tuple.
+``rebuild`` folds the log with one vectorized mask + concatenate and goes
+through ``ReconstructionPipeline.run_incremental``: when the D-bitmap is
+unchanged since the last reconstruction only the delta is extracted and
+sorted and the backend merges it into the standing run; when an insert set
+a new distinction bit the pipeline falls back to the full resort.  Either
+way the output is byte-identical, and rebuilds honour the index's
+configured execution backend.
 """
 
 from __future__ import annotations
 
 import bisect
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax.numpy as jnp
 import numpy as np
@@ -44,6 +52,17 @@ class OnlineIndex:
     # tree's sorted order, then maintained incrementally per insert/delete
     # (the rebuild-per-insert it replaces was O(n log n) per mutation)
     _sorted_keys: list | None = field(default=None, repr=False)
+    # the same mutations as columnar LSN-stamped arrays — the rebuild path
+    # (fold + incremental merge) consumes this, never the tuple list
+    _log: object | None = field(default=None, repr=False)
+
+    @property
+    def log(self):
+        from repro.replication import ChangeLog
+
+        if self._log is None:
+            self._log = ChangeLog(self.keyset.n_words)
+        return self._log
 
     # ------------------------------------------------------------------ build
     @staticmethod
@@ -84,6 +103,7 @@ class OnlineIndex:
         bisect.insort(self._delta, (key_t, int(rid)))
         if self._sorted_keys is not None:
             bisect.insort(self._sorted_keys, key_t)
+        self.log.append_inserts(key[None, :], [int(rid)])
 
     def delete(self, key_words: np.ndarray) -> bool:
         """Delete K; DS-metadata untouched (lazy rule, valid by Theorem 2)."""
@@ -93,6 +113,7 @@ class OnlineIndex:
         key_t = tuple(int(x) for x in np.asarray(key_words, np.uint32))
         i = bisect.bisect_left(self._delta, (key_t, -1))
         if i < len(self._delta) and self._delta[i][0] == key_t:
+            rid = self._delta[i][1]
             self._delta.pop(i)
             if self._sorted_keys is not None:
                 j = bisect.bisect_left(self._sorted_keys, key_t)
@@ -103,6 +124,7 @@ class OnlineIndex:
             # stale neighbors only ever *extend* the distinction bit set,
             # which Theorem 2 permits
             self._tombstones.add(rid)
+        self.log.append_deletes([int(rid)])
         self.result.meta = meta_on_delete(self.meta)
         return True
 
@@ -126,22 +148,27 @@ class OnlineIndex:
 
     # ---------------------------------------------------------------- rebuild
     def rebuild(self, backend: str | None = None) -> "OnlineIndex":
-        """Fold delta/tombstones into the base table and reconstruct with the
-        *current* (possibly stale-bit) DS-metadata — the paper's recovery path."""
-        sf = np.asarray(self.keyset.words)
-        lengths = list(np.asarray(self.keyset.lengths))
-        rids = list(np.asarray(self.keyset.rids))
-        rows = [r for r in zip(sf, lengths, rids) if int(r[2]) not in self._tombstones]
-        for key_t, rid in self._delta:
-            rows.append((np.asarray(key_t, np.uint32), len(key_t) * 4, rid))
-        words = np.stack([r[0] for r in rows])
-        ks = KeySet(
-            words=words,
-            lengths=np.asarray([r[1] for r in rows], np.int32),
-            rids=np.asarray([r[2] for r in rows], np.uint32),
-        )
-        # key compression with the current bitmap (extended positions OK)
+        """Fold the change log into the base table and reconstruct with the
+        *current* (possibly stale-bit) DS-metadata — the paper's recovery path.
+
+        The fold is one vectorized mask + concatenate over the log's
+        columnar arrays, and reconstruction goes through
+        ``run_incremental``: unchanged D-bitmap ⇒ only the delta is
+        extracted/sorted and merged into the standing run; otherwise the
+        pipeline falls back to the byte-identical full resort (key
+        compression with the current bitmap — extended positions OK).
+        """
+        keep_rows, delta = self.log.fold_keyset(self.keyset)
         name = backend or self.backend
         pipe = ReconstructionPipeline(backend=name, config=self.config)
-        res = pipe.run(ks, meta=self.meta)
-        return OnlineIndex(keyset=ks, result=res, config=self.config, backend=name)
+        res, folded = pipe.run_incremental(
+            self.result, self.keyset, delta, keep_rows=keep_rows, meta=self.meta
+        )
+        # pin the carried bitmap to what the standing run was extracted
+        # under (a superset of the refreshed bitmap — valid by Theorem 2) so
+        # a quiet follow-up rebuild can merge instead of resort; see ROADMAP
+        # on shedding policy
+        res.meta = replace(
+            res.meta, dbitmap=np.array(res.extract_bitmap, np.uint32, copy=True)
+        )
+        return OnlineIndex(keyset=folded, result=res, config=self.config, backend=name)

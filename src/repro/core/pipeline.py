@@ -22,9 +22,17 @@ Extras over the plain flow:
   stages (``fused=True``).
 * **batched multi-index reconstruction** — ``run_many`` rebuilds many
   independent indexes (the replication scenario of §6): same-shape key sets
-  on the jnp backend are stacked and their extract+sort is one ``vmap``-ed
-  program using the dynamic-bitmap extractor; tree builds then loop
-  (host-side assembly).
+  on a backend with ``supports_batched`` are stacked and their extract+sort
+  is one batched program (vmapped dynamic-bitmap extraction on jnp, vmapped
+  kernels on pallas); tree builds then loop (host-side assembly).
+* **incremental delta-merge reconstruction** — ``run_incremental`` folds a
+  small change set (deletions as a keep-mask, insertions as a delta keyset)
+  into a previous reconstruction *without* re-sorting the base: filter the
+  surviving base run, extract+sort only the delta, ``merge_sorted`` the two
+  runs on the backend, and rebuild the tree bottom-up from the merged run.
+  Output is byte-identical to a full ``run`` over the folded keyset with the
+  same DS-metadata; when the D-bitmap changed since the previous extraction
+  (the compressed projection moved), it falls back to the full path.
 """
 
 from __future__ import annotations
@@ -39,19 +47,28 @@ import numpy as np
 from repro.backends import ExecutionBackend, get_backend
 
 from .btree import BTree, BTreeConfig, build_btree
-from .compress import extract_bits_dynamic
-from .dbits import sort_words_keyed
 from .keyformat import KeySet
 from .metadata import DSMeta, meta_from_keys, meta_on_rebuild
 from .sortkeys import word_comparison_counts
 
-__all__ = ["ReconstructionResult", "ReconstructionPipeline", "identity_meta"]
+__all__ = [
+    "ReconstructionResult",
+    "ReconstructionPipeline",
+    "identity_meta",
+    "fold_keyset",
+]
 
 
 @dataclass
 class ReconstructionResult:
     """What a reconstruction returns: the tree, refreshed DS-metadata, the
-    sorted compressed keys + rid permutation, and per-stage timings/stats."""
+    sorted compressed keys + rid permutation, and per-stage timings/stats.
+
+    ``extract_bitmap`` is the D-bitmap the compressed keys were *actually*
+    extracted under (the input metadata's bitmap — ``meta`` holds the
+    refreshed bitmap, which may have shed bits).  ``run_incremental`` merges
+    against ``comp_sorted`` only when the current bitmap still equals it.
+    """
 
     tree: BTree
     meta: DSMeta
@@ -60,6 +77,7 @@ class ReconstructionResult:
     timings: dict = field(default_factory=dict)
     stats: dict = field(default_factory=dict)
     row_sorted: jnp.ndarray | None = None
+    extract_bitmap: np.ndarray | None = None
 
 
 def identity_meta(keyset: KeySet) -> DSMeta:
@@ -71,6 +89,35 @@ def identity_meta(keyset: KeySet) -> DSMeta:
         refkey=np.asarray(keyset.words[0], np.uint32),
         n_words=keyset.n_words,
     )
+
+
+def fold_keyset(
+    base: KeySet,
+    keep_rows: np.ndarray | None = None,
+    delta: KeySet | None = None,
+) -> KeySet:
+    """The folded table: surviving base rows, then delta rows appended.
+
+    One boolean mask + one concatenate per column — the vectorized fold
+    every incremental call site shares (no per-row Python tuple loop).
+    ``keep_rows`` is a (base.n,) bool mask over base *row positions*;
+    ``delta`` rows keep their own rids.
+    """
+    words = np.asarray(base.words, np.uint32)
+    lengths = np.asarray(base.lengths, np.int32)
+    rids = np.asarray(base.rids, np.uint32)
+    if keep_rows is not None:
+        keep = np.asarray(keep_rows, bool)
+        if keep.shape != (base.n,):
+            raise ValueError(f"keep_rows must be ({base.n},), got {keep.shape}")
+        words, lengths, rids = words[keep], lengths[keep], rids[keep]
+    if delta is not None and delta.n:
+        words = np.concatenate([words, np.asarray(delta.words, np.uint32)], axis=0)
+        lengths = np.concatenate([lengths, np.asarray(delta.lengths, np.int32)])
+        rids = np.concatenate([rids, np.asarray(delta.rids, np.uint32)])
+    if words.shape[0] == 0:
+        raise ValueError("folded keyset is empty (all rows deleted, no delta)")
+    return KeySet(words=words, lengths=lengths, rids=rids)
 
 
 def _timed(fn, *args):
@@ -206,7 +253,142 @@ class ReconstructionPipeline:
             timings=timings,
             stats=stats,
             row_sorted=row_sorted,
+            extract_bitmap=np.array(meta.dbitmap, np.uint32, copy=True),
         )
+
+    # -------------------------------------------------- incremental (delta)
+    def run_incremental(
+        self,
+        prev: ReconstructionResult,
+        base_keyset: KeySet,
+        delta_keyset: KeySet | None = None,
+        *,
+        keep_rows: np.ndarray | None = None,
+        meta: DSMeta | None = None,
+    ) -> tuple[ReconstructionResult, KeySet]:
+        """Fold a change set into ``prev`` without re-sorting the base.
+
+        ``base_keyset`` must be the keyset ``prev`` was reconstructed from;
+        ``keep_rows`` masks deleted base row positions; ``delta_keyset``
+        holds inserted rows (appended after the surviving base rows, which
+        is exactly the row numbering a full ``run`` over the folded keyset
+        sees).  ``meta`` is the *current* DS-metadata — the caller maintains
+        it across mutations via the §4.3 insert rule (defaults to
+        ``prev.meta``).
+
+        Returns ``(result, folded_keyset)``.  The result is byte-identical —
+        sorted compressed keys, rid permutation, tree levels — to
+        ``self.run(folded_keyset, meta=meta)``:
+
+        * surviving base rows keep their relative (key, row) order because
+          deletion renumbers rows monotonically;
+        * the delta is extracted and sorted through the normal backend
+          stages, with row ids offset past the surviving base rows;
+        * ``backend.merge_sorted`` interleaves the two runs under the same
+          (key, row) contract the sort stage obeys.
+
+        Falls back to the full path (with ``stats["incremental"] = False``
+        and the reason in ``stats["incremental_fallback"]``) when the
+        D-bitmap changed since ``prev``'s extraction — the compressed
+        projection moved, so ``prev.comp_sorted`` can no longer be merged
+        against (e.g. an online insert set a new distinction bit and the
+        compressed width or bit set grew).
+        """
+        if meta is None:
+            meta = prev.meta
+        folded = fold_keyset(base_keyset, keep_rows, delta_keyset)
+        n_delta = 0 if delta_keyset is None else delta_keyset.n
+
+        fallback = None
+        if prev.extract_bitmap is None:
+            fallback = "no_extract_bitmap"
+        elif not np.array_equal(
+            np.asarray(meta.dbitmap, np.uint32), prev.extract_bitmap
+        ):
+            fallback = "dbitmap_changed"
+        if fallback is not None:
+            res = self.run(folded, meta=meta)
+            res.stats["incremental"] = False
+            res.stats["incremental_fallback"] = fallback
+            return res, folded
+
+        plan = meta.plan()
+
+        # -- filter the surviving base run (device-side mask, no re-sort) --
+        def _filter():
+            if keep_rows is None:
+                return prev.comp_sorted, jnp.asarray(prev.row_sorted, jnp.uint32)
+            keep = jnp.asarray(np.asarray(keep_rows, bool))
+            keep_sorted = keep[prev.row_sorted]
+            # deletion renumbers surviving rows monotonically, so the kept
+            # run stays ascending in (key, new row)
+            new_row = jnp.cumsum(keep.astype(jnp.int32)) - 1
+            base_comp = prev.comp_sorted[keep_sorted]
+            base_rows = new_row[prev.row_sorted][keep_sorted].astype(jnp.uint32)
+            return base_comp, base_rows
+
+        (base_comp, base_rows), t_filter = _timed(_filter)
+        n_kept = int(base_comp.shape[0])
+
+        # -- extract + sort only the delta ---------------------------------
+        t_extract = t_sort = 0.0
+        if n_delta:
+            delta_words = jnp.asarray(delta_keyset.words, jnp.uint32)
+            comp_delta, t_extract = _timed(self.extract, delta_words, plan)
+            (comp_delta_sorted, rows_delta), t_sort = _timed(
+                self.sort, comp_delta, jnp.arange(n_delta, dtype=jnp.uint32)
+            )
+            # delta rows live after every surviving base row in the folded
+            # numbering; the offset preserves the sorted (key, row) order
+            rows_delta = jnp.asarray(rows_delta, jnp.uint32) + jnp.uint32(n_kept)
+        else:
+            comp_delta_sorted = jnp.zeros((0, base_comp.shape[1]), jnp.uint32)
+            rows_delta = jnp.zeros((0,), jnp.uint32)
+
+        # -- merge the runs (the backend op) -------------------------------
+        (comp_sorted, row_sorted), t_merge = _timed(
+            self.backend.merge_sorted,
+            base_comp, base_rows, comp_delta_sorted, rows_delta,
+        )
+        row_sorted = jnp.asarray(row_sorted, jnp.uint32)
+        rid_sorted = jnp.asarray(folded.rids, jnp.uint32)[row_sorted]
+
+        # -- build + refresh (identical to the full path) ------------------
+        words = jnp.asarray(folded.words, jnp.uint32)
+        lengths = jnp.asarray(folded.lengths, jnp.int32)
+        rids = jnp.asarray(folded.rids, jnp.uint32)
+        tree, t_build = _timed(
+            self.build, comp_sorted, row_sorted, meta, words, lengths, rids
+        )
+        t0 = time.perf_counter()
+        new_meta = self.refresh_meta(comp_sorted, meta, folded.words[0])
+        t_refresh = time.perf_counter() - t0
+
+        timings = {
+            "meta": 0.0,
+            "filter": t_filter,
+            "extract": t_extract,
+            "sort": t_sort,
+            "merge": t_merge,
+            "build": t_build,
+            "refresh_meta": t_refresh,
+            "total": t_filter + t_extract + t_sort + t_merge + t_build,
+        }
+        stats = self._stats(folded, meta, comp_sorted, row_sorted, tree, False)
+        stats["incremental"] = True
+        stats["n_delta"] = n_delta
+        stats["n_deleted"] = base_keyset.n - n_kept
+        res = ReconstructionResult(
+            tree=tree,
+            meta=new_meta,
+            comp_sorted=comp_sorted,
+            rid_sorted=rid_sorted,
+            timings=timings,
+            stats=stats,
+            row_sorted=row_sorted,
+            extract_bitmap=np.array(meta.dbitmap, np.uint32, copy=True),
+        )
+        return res, folded
 
     def _stats(self, keyset, meta, comp_sorted, row_sorted, tree, fused_used):
         full_bits = keyset.n_bits
@@ -241,11 +423,12 @@ class ReconstructionPipeline:
         """Reconstruct many independent indexes (the replication scenario).
 
         Same-shape key sets on a backend with ``supports_batched`` are
-        batched: one vmap-ed extract+sort over the stack (dynamic-bitmap
-        extraction, so one trace serves every index), then a per-index build
-        loop.  Heterogeneous shapes — and backends without the capability,
-        e.g. distributed, whose exchange owns the whole mesh — fall back to
-        sequential ``run``.
+        batched: the stacked extract+sort dispatches to the backend's
+        ``batched_extract_sort`` (one vmapped dynamic-bitmap program on jnp;
+        per-plan pext kernels + one vmapped bitonic sort program on pallas),
+        then a per-index build loop.  Heterogeneous shapes — and backends
+        without the capability, e.g. distributed, whose exchange owns the
+        whole mesh — fall back to sequential ``run``.
         """
         if metas is None:
             metas = [None] * len(keysets)
@@ -286,21 +469,15 @@ class ReconstructionPipeline:
     def _run_batched(self, keysets, metas, t_meta) -> list[ReconstructionResult]:
         k = len(keysets)
         plans = [m.plan() for m in metas]
-        wc_out = plans[0].n_words_out  # equal within a group by construction
         words = jnp.asarray(np.stack([ks.words for ks in keysets]), jnp.uint32)
         bitmaps = jnp.asarray(np.stack([m.dbitmap for m in metas]), jnp.uint32)
         n = keysets[0].n
         rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32), (k, n))
 
-        # one program for the whole batch: dynamic-bitmap extract + keyed
-        # sort (the backend determinism contract), vmapped over the index
-        # axis
-        def one(w, bm, r):
-            comp = extract_bits_dynamic(w, bm, wc_out)
-            return sort_words_keyed(comp, r)
-
+        # the stacked extract+sort is the backend's batched program (keyed
+        # sort — the determinism contract — on whatever substrate it runs)
         (comp_sorted, row_sorted), t_xs = _timed(
-            jax.jit(jax.vmap(one)), words, bitmaps, rows
+            self.backend.batched_extract_sort, words, bitmaps, rows, plans
         )
 
         out = []
@@ -336,6 +513,7 @@ class ReconstructionPipeline:
                     timings=timings,
                     stats=stats,
                     row_sorted=rs,
+                    extract_bitmap=np.array(meta.dbitmap, np.uint32, copy=True),
                 )
             )
         return out

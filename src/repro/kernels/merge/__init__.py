@@ -1,0 +1,2 @@
+from . import ops, ref  # noqa: F401
+from .ops import merge_ranks, merge_sorted  # noqa: F401

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: tiled merge-path ranks for sorted multiword runs.
+
+The incremental reconstruction path (delta merge) needs the output position
+of every element of two sorted runs in their merge.  Merge-path reduces the
+merge to per-element *ranks*: the position of element ``q`` of one run is its
+own index plus the number of elements of the other run that precede it under
+the (key, row) determinism contract.  The rank computation is the whole
+cost, and it is what this kernel tiles:
+
+* the query run streams through VMEM in ``tile``-lane blocks (one grid step
+  per tile);
+* the searched run is resident as word planes (keys + row id as the final,
+  least-significant plane), so each of the ``log2(n_s)`` binary-search steps
+  is one lane-gather + one multiword compare over the whole tile — the
+  branch-free vector analogue of the scalar binary search;
+* rows are carried as an extra key word, exactly as in the bitonic kernel,
+  so ties between equal keys resolve on the ascending row id and the merge
+  is byte-identical to the full sort.
+
+The searched run must fit in VMEM (one (W+1, n_s) uint32 block, ~1 MB at
+64k×3-word keys); callers with larger runs fall back to the jnp merge.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 512
+
+
+def _lex_less_planes(a, b, n_words: int):
+    """(W, T) planes: lexicographic a < b over the first ``n_words`` planes."""
+    less = jnp.zeros(a.shape[1], jnp.bool_)
+    eq = jnp.ones(a.shape[1], jnp.bool_)
+    for w in range(n_words):
+        less = less | (eq & (a[w] < b[w]))
+        eq = eq & (a[w] == b[w])
+    return less
+
+
+def _rank_kernel(n_planes: int, n_s: int, q_ref, s_ref, o_ref):
+    """q_ref: (W+1, tile) query planes; s_ref: (W+1, n_s) sorted planes;
+    o_ref: (1, tile) int32 ranks.
+
+    Per lane, a [lo, hi) binary search over the searched run; every substage
+    is a static-count whole-tile step (no data-dependent trips), so the
+    kernel is one straight-line program of log2(n_s) gather+compare rounds.
+    """
+    q = q_ref[...]
+    s = s_ref[...]
+    t = q.shape[1]
+    lo = jnp.zeros((t,), jnp.int32)
+    hi = jnp.full((t,), n_s, jnp.int32)
+    for _ in range(max(1, n_s.bit_length())):
+        mid = (lo + hi) // 2
+        midc = jnp.minimum(mid, n_s - 1)
+        sm = jnp.take(s, midc, axis=1)  # (W+1, tile) lane gather
+        # strict (key, row) less: the row plane is the last key word and row
+        # ids are distinct, so no equality case survives
+        lt = _lex_less_planes(sm, q, n_planes) & (mid < n_s)
+        lo = jnp.where(lt, mid + 1, lo)
+        hi = jnp.where(lt, hi, mid)
+    o_ref[...] = lo[None, :]
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret"))
+def merge_rank_planes(
+    q_planes: jnp.ndarray,
+    s_planes: jnp.ndarray,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Ranks of (W+1, n_q) query planes in (W+1, n_s) sorted planes.
+
+    ``n_q`` must be a multiple of ``tile``; returns (n_q,) int32.  The last
+    plane of each operand is the row id (the tie-break key word).
+    """
+    wp, n_q = q_planes.shape
+    wp_s, n_s = s_planes.shape
+    assert wp == wp_s and n_q % tile == 0, (q_planes.shape, s_planes.shape, tile)
+    grid = (n_q // tile,)
+    out = pl.pallas_call(
+        partial(_rank_kernel, wp, int(n_s)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((wp, tile), lambda i: (0, i)),
+            pl.BlockSpec((wp_s, n_s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n_q), jnp.int32),
+        interpret=interpret,
+    )(q_planes, s_planes)
+    return out[0]

@@ -1,0 +1,70 @@
+"""Jit'd public wrappers for the merge-path rank kernel (padding, scatter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import DEFAULT_TILE, merge_rank_planes
+
+# Pad queries with the all-ones sentinel: their ranks are garbage but they
+# are stripped before the scatter (mirrors the bitonic/distsort convention).
+_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def merge_ranks(
+    keys_q: jnp.ndarray,
+    rows_q: jnp.ndarray,
+    keys_s: jnp.ndarray,
+    rows_s: jnp.ndarray,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """#{i : (key_s, row_s)_i < (key_q, row_q)} per query, via the kernel.
+
+    ``(keys_s, rows_s)`` ascending in (key, row); queries unrestricted.
+    Returns (n_q,) int32.
+    """
+    n_q, w = keys_q.shape
+    n_s = int(keys_s.shape[0])
+    if n_q == 0 or n_s == 0:
+        return jnp.zeros((n_q,), jnp.int32)
+    pad = (-n_q) % tile
+    q_planes = jnp.concatenate(
+        [jnp.asarray(keys_q, jnp.uint32).T, jnp.asarray(rows_q, jnp.uint32)[None, :]],
+        axis=0,
+    )
+    if pad:
+        q_planes = jnp.concatenate(
+            [q_planes, jnp.full((w + 1, pad), _SENTINEL, jnp.uint32)], axis=1
+        )
+    s_planes = jnp.concatenate(
+        [jnp.asarray(keys_s, jnp.uint32).T, jnp.asarray(rows_s, jnp.uint32)[None, :]],
+        axis=0,
+    )
+    ranks = merge_rank_planes(q_planes, s_planes, tile=tile, interpret=interpret)
+    return ranks[:n_q]
+
+
+def merge_sorted(
+    keys_a: jnp.ndarray,
+    rows_a: jnp.ndarray,
+    keys_b: jnp.ndarray,
+    rows_b: jnp.ndarray,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Kernel-ranked merge of two ascending (key, row) runs.
+
+    Both rank passes run through the Pallas kernel; the merge-from-ranks
+    assembly (permutation scatter) is shared with the jnp reference, so the
+    output is byte-identical to ``repro.core.dbits.merge_words_keyed``.
+    """
+    from repro.core.dbits import merge_from_ranks
+
+    def kernel_ranks(keys_s, rows_s, keys_q, rows_q):
+        return merge_ranks(
+            keys_q, rows_q, keys_s, rows_s, tile=tile, interpret=interpret
+        )
+
+    return merge_from_ranks(keys_a, rows_a, keys_b, rows_b, rank_fn=kernel_ranks)

@@ -1,0 +1,12 @@
+"""Replication/delta layer: change logs + incremental replica bring-up.
+
+``ChangeLog`` is the record-level insert/delete log (LSN-stamped columnar
+arrays, npz-serializable — the checkpoint layer stores one next to a base
+step for delta checkpoints); ``Replica`` consumes log batches and keeps its
+index current through ``ReconstructionPipeline.run_incremental``.
+"""
+
+from .log import OP_DELETE, OP_INSERT, ChangeLog  # noqa: F401
+from .replica import Replica  # noqa: F401
+
+__all__ = ["ChangeLog", "Replica", "OP_INSERT", "OP_DELETE"]

@@ -1,0 +1,220 @@
+"""Record-level change log for replication and delta reconstruction.
+
+The paper's replication story (§1, §6) ships the *table* and the tiny
+DS-metadata — never an index image — and the replica reconstructs.  This
+module adds the missing piece for *incremental* bring-up: a record-level
+**change log** a primary can stream to replicas (or a checkpoint can store
+next to a base step), so a consumer folds a small delta instead of paying a
+full O(n log n) resort.
+
+Entries are columnar, LSN-stamped, and **device-friendly**: appends take
+(m, W) key-word arrays + rid vectors and are kept as array chunks — there is
+no per-record Python object anywhere, so a million-entry log is five arrays,
+and ``fold`` is pure vectorized masking.
+
+Fold semantics (replay in LSN order, vectorized):
+
+* a base row is dropped iff any DELETE entry names its rid;
+* an INSERT survives iff no DELETE with the same rid has a larger LSN
+  (so delete-then-reinsert of a rid works, and rid reuse after free — the
+  KV-pager's pattern — replays correctly);
+* surviving INSERTs keep log order — they become the delta keyset appended
+  after the surviving base rows, exactly the row numbering
+  ``ReconstructionPipeline.run_incremental`` expects.
+
+Live rows must have unique rids (the usual record-id contract); two live
+INSERTs of the same rid both survive the fold and both land in the index.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+import numpy as np
+
+__all__ = ["OP_INSERT", "OP_DELETE", "ChangeLog"]
+
+OP_INSERT = np.uint8(1)
+OP_DELETE = np.uint8(2)
+
+
+class ChangeLog:
+    """Columnar LSN-stamped insert/delete log over (n_words)-word keys."""
+
+    def __init__(self, n_words: int, start_lsn: int = 0) -> None:
+        self.n_words = int(n_words)
+        self.start_lsn = int(start_lsn)
+        self._next_lsn = int(start_lsn)
+        # parallel column chunks; concatenated lazily by arrays()
+        self._ops: list[np.ndarray] = []
+        self._lsns: list[np.ndarray] = []
+        self._words: list[np.ndarray] = []
+        self._rids: list[np.ndarray] = []
+        self._lengths: list[np.ndarray] = []
+        self._cache: dict | None = None
+
+    # ------------------------------------------------------------- append
+    def append_inserts(
+        self,
+        words: np.ndarray,
+        rids: np.ndarray,
+        lengths: np.ndarray | None = None,
+    ) -> tuple[int, int]:
+        """Append m INSERT entries; returns their [lsn0, lsn1) range."""
+        words = np.asarray(words, np.uint32).reshape(-1, self.n_words)
+        m = words.shape[0]
+        rids = np.asarray(rids, np.uint32).reshape(m)
+        if lengths is None:
+            lengths = np.full(m, self.n_words * 4, np.int32)
+        return self._append(OP_INSERT, words, rids, np.asarray(lengths, np.int32))
+
+    def append_deletes(self, rids: np.ndarray) -> tuple[int, int]:
+        """Append DELETE entries (by rid; keys are not needed to fold)."""
+        rids = np.asarray(rids, np.uint32).reshape(-1)
+        m = rids.shape[0]
+        return self._append(
+            OP_DELETE,
+            np.zeros((m, self.n_words), np.uint32),
+            rids,
+            np.zeros(m, np.int32),
+        )
+
+    def _append(self, op, words, rids, lengths) -> tuple[int, int]:
+        m = words.shape[0]
+        if m == 0:
+            return self._next_lsn, self._next_lsn
+        lsn0 = self._next_lsn
+        self._ops.append(np.full(m, op, np.uint8))
+        self._lsns.append(np.arange(lsn0, lsn0 + m, dtype=np.uint64))
+        self._words.append(words)
+        self._rids.append(rids)
+        self._lengths.append(lengths)
+        self._next_lsn = lsn0 + m
+        self._cache = None
+        return lsn0, self._next_lsn
+
+    # ------------------------------------------------------------- access
+    def __len__(self) -> int:
+        return self._next_lsn - self.start_lsn
+
+    @property
+    def next_lsn(self) -> int:
+        return self._next_lsn
+
+    def arrays(self) -> dict[str, np.ndarray]:
+        """The whole log as five columns (concatenated once, then cached)."""
+        if self._cache is None:
+            if self._ops:
+                self._cache = {
+                    "ops": np.concatenate(self._ops),
+                    "lsns": np.concatenate(self._lsns),
+                    "words": np.concatenate(self._words, axis=0),
+                    "rids": np.concatenate(self._rids),
+                    "lengths": np.concatenate(self._lengths),
+                }
+            else:
+                self._cache = {
+                    "ops": np.zeros(0, np.uint8),
+                    "lsns": np.zeros(0, np.uint64),
+                    "words": np.zeros((0, self.n_words), np.uint32),
+                    "rids": np.zeros(0, np.uint32),
+                    "lengths": np.zeros(0, np.int32),
+                }
+        return self._cache
+
+    # --------------------------------------------------------------- fold
+    def fold(
+        self, base_rids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Replay the log against base rows, fully vectorized.
+
+        Returns ``(keep, ins_words, ins_lengths, ins_rids)``: a bool mask
+        over base row positions plus the surviving inserts in log order —
+        the exact inputs of ``fold_keyset`` / ``run_incremental``.
+        """
+        a = self.arrays()
+        ops, lsns = a["ops"], a["lsns"]
+        dmask = ops == OP_DELETE
+        del_rids, del_lsns = a["rids"][dmask], lsns[dmask]
+        base_rids = np.asarray(base_rids, np.uint32)
+
+        if del_rids.size == 0:
+            keep = np.ones(base_rids.shape[0], bool)
+            imask = ops == OP_INSERT
+            return keep, a["words"][imask], a["lengths"][imask], a["rids"][imask]
+
+        uniq, inv = np.unique(del_rids, return_inverse=True)
+        max_del_lsn = np.zeros(uniq.shape[0], np.uint64)
+        np.maximum.at(max_del_lsn, inv, del_lsns)
+
+        keep = ~np.isin(base_rids, uniq)
+
+        imask = ops == OP_INSERT
+        ins_rids, ins_lsns = a["rids"][imask], lsns[imask]
+        pos = np.searchsorted(uniq, ins_rids)
+        posc = np.minimum(pos, uniq.shape[0] - 1)
+        hit = (pos < uniq.shape[0]) & (uniq[posc] == ins_rids)
+        dead = hit & (max_del_lsn[posc] > ins_lsns)
+        live = ~dead
+        return (
+            keep,
+            a["words"][imask][live],
+            a["lengths"][imask][live],
+            a["rids"][imask][live],
+        )
+
+    def fold_keyset(self, base) -> tuple[np.ndarray | None, "object | None"]:
+        """``fold`` packaged for the pipeline: (keep_rows, delta keyset).
+
+        ``keep_rows`` is None when nothing was deleted and ``delta`` is None
+        when no insert survived — exactly the argument conventions of
+        ``ReconstructionPipeline.run_incremental``.  Every incremental call
+        site (OnlineIndex, Replica, pager, checkpoint restore) goes through
+        this one helper.
+        """
+        from repro.core.keyformat import KeySet
+
+        keep, ins_words, ins_lengths, ins_rids = self.fold(np.asarray(base.rids))
+        delta = (
+            KeySet(words=ins_words, lengths=ins_lengths, rids=ins_rids)
+            if ins_words.shape[0]
+            else None
+        )
+        return (None if bool(keep.all()) else keep), delta
+
+    # ------------------------------------------------------ serialization
+    def to_npz_dict(self) -> dict[str, np.ndarray]:
+        a = self.arrays()
+        return {
+            "log_ops": a["ops"],
+            "log_lsns": a["lsns"],
+            "log_words": a["words"],
+            "log_rids": a["rids"],
+            "log_lengths": a["lengths"],
+            "log_n_words": np.asarray(self.n_words, np.int32),
+            "log_start_lsn": np.asarray(self.start_lsn, np.int64),
+        }
+
+    @staticmethod
+    def from_npz_dict(d: dict[str, np.ndarray]) -> "ChangeLog":
+        log = ChangeLog(int(d["log_n_words"]), start_lsn=int(d["log_start_lsn"]))
+        ops = np.asarray(d["log_ops"], np.uint8)
+        if ops.size:
+            log._ops = [ops]
+            log._lsns = [np.asarray(d["log_lsns"], np.uint64)]
+            log._words = [np.asarray(d["log_words"], np.uint32)]
+            log._rids = [np.asarray(d["log_rids"], np.uint32)]
+            log._lengths = [np.asarray(d["log_lengths"], np.int32)]
+            log._next_lsn = int(d["log_lsns"][-1]) + 1
+        return log
+
+    def save(self, path: str | os.PathLike) -> Path:
+        path = Path(path)
+        np.savez(path, **self.to_npz_dict())
+        return path
+
+    @staticmethod
+    def load(path: str | os.PathLike) -> "ChangeLog":
+        with np.load(path) as z:
+            return ChangeLog.from_npz_dict(dict(z))

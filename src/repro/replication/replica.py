@@ -1,0 +1,143 @@
+"""A replica that consumes change-log batches and rebuilds incrementally.
+
+The paper's replication premise: the wire carries the table (here: the base
+keyset once, then ``ChangeLog`` batches) and the DS-metadata — never an
+index image.  ``Replica`` keeps the reconstructed index current by folding
+each log batch through ``ReconstructionPipeline.run_incremental``: delete
+entries become a keep-mask over the base rows, surviving inserts become the
+delta keyset, and only the delta is extracted and sorted before the backend
+``merge_sorted`` splices it into the standing run.  When a batch's keys add
+new distinction bits the pipeline transparently falls back to the full
+rebuild (same result, full cost) — the replica's answer is byte-identical
+either way.
+
+DS-metadata upkeep is the §4.3 insert rule, vectorized: every inserted key
+finds its neighbors (A, B) in the standing sorted order with one batched
+rank search, and D(A,K) / D(K,B) are OR-scattered into the D-bitmap in one
+shot.  Setting both is exactly the paper's "set max(D(A,K), D(K,B))"
+because the min equals D(A,B), which Lemma 1 guarantees is already set.
+Delta-internal adjacency is covered by the delta's own D-bitmap.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.btree import BTreeConfig, search_batch
+from repro.core.dbits import (
+    NO_DBIT,
+    compute_dbitmap,
+    dbit_position_pairwise,
+    positions_to_bitmap,
+    rank_in_sorted_keyed,
+)
+from repro.core.keyformat import KeySet  # noqa: F401  (public API type)
+from repro.core.metadata import DSMeta
+from repro.core.pipeline import ReconstructionPipeline, ReconstructionResult
+
+from .log import ChangeLog
+
+__all__ = ["Replica"]
+
+
+class Replica:
+    """One replicated index: base bring-up + incremental log consumption."""
+
+    def __init__(
+        self,
+        keyset: KeySet,
+        meta: DSMeta | None = None,
+        backend: str = "jnp",
+        config: BTreeConfig = BTreeConfig(),
+        backend_opts: dict | None = None,
+    ) -> None:
+        self.pipeline = ReconstructionPipeline(
+            backend=backend, config=config, backend_opts=backend_opts
+        )
+        self.keyset = keyset
+        self.result: ReconstructionResult = self.pipeline.run(keyset, meta=meta)
+        # the working metadata mirrors the *extraction* bitmap (plus insert
+        # bits as batches arrive): keeping it pinned to what comp_sorted was
+        # extracted under is what lets consecutive batches stay incremental
+        self._meta = replace(
+            self.result.meta,
+            dbitmap=np.array(self.result.extract_bitmap, np.uint32, copy=True),
+        )
+        self.applied_lsn = -1
+        self.n_applied_batches = 0
+
+    @property
+    def tree(self):
+        return self.result.tree
+
+    @property
+    def meta(self) -> DSMeta:
+        return self._meta
+
+    # ------------------------------------------------------------- lookup
+    def search(self, query_words: np.ndarray) -> tuple[bool, int]:
+        q = jnp.asarray(query_words, jnp.uint32)[None, :]
+        found, rid, _ = search_batch(self.result.tree, q)
+        return bool(found[0]), int(rid[0])
+
+    # -------------------------------------------------------------- apply
+    def apply(self, log: ChangeLog) -> dict:
+        """Fold one log batch into the standing index; returns apply stats."""
+        if log.n_words != self.keyset.n_words:
+            raise ValueError(
+                f"log key width {log.n_words} != index width {self.keyset.n_words}"
+            )
+        keep_rows, delta = log.fold_keyset(self.keyset)
+        n_delta = 0 if delta is None else delta.n
+        n_deleted = 0 if keep_rows is None else int(self.keyset.n - keep_rows.sum())
+        meta = self._insert_rule(delta.words) if n_delta else self._meta
+
+        res, folded = self.pipeline.run_incremental(
+            self.result, self.keyset, delta, keep_rows=keep_rows, meta=meta
+        )
+        self.keyset, self.result = folded, res
+        self._meta = replace(
+            res.meta, dbitmap=np.array(res.extract_bitmap, np.uint32, copy=True)
+        )
+        self.applied_lsn = log.next_lsn - 1
+        self.n_applied_batches += 1
+        return {
+            "incremental": bool(res.stats.get("incremental")),
+            "fallback": res.stats.get("incremental_fallback"),
+            "n_delta": n_delta,
+            "n_deleted": n_deleted,
+            "n_keys": folded.n,
+            "applied_lsn": self.applied_lsn,
+            "timings": dict(res.timings),
+        }
+
+    # ---------------------------------------------------- metadata upkeep
+    def _insert_rule(self, ins_words: np.ndarray) -> DSMeta:
+        """§4.3 insert rule for a whole batch, no host loop."""
+        meta = self._meta
+        sf = self.result.tree.sorted_full  # standing sorted full keys
+        n = int(sf.shape[0])
+        k = jnp.asarray(ins_words, jnp.uint32)
+        m = int(k.shape[0])
+        zeros_s = jnp.zeros((n,), jnp.uint32)
+        zeros_q = jnp.zeros((m,), jnp.uint32)
+        # strict-key rank: row tie-break never fires with equal row ids
+        rank = rank_in_sorted_keyed(sf, zeros_s, k, zeros_q)
+        has_a = rank > 0
+        has_b = rank < n
+        a = sf[jnp.clip(rank - 1, 0, n - 1)]
+        b = sf[jnp.clip(rank, 0, n - 1)]
+        d_ak = jnp.where(has_a, dbit_position_pairwise(a, k), NO_DBIT)
+        d_kb = jnp.where(has_b, dbit_position_pairwise(k, b), NO_DBIT)
+        nw = meta.n_words
+        bm = positions_to_bitmap(jnp.concatenate([d_ak, d_kb]), nw)
+        # delta-internal adjacency (keys that end up next to each other)
+        bm = bm | compute_dbitmap(k)
+        dbitmap = np.asarray(bm, np.uint32) | meta.dbitmap
+        var = meta.varbitmap | np.bitwise_or.reduce(
+            np.asarray(ins_words, np.uint32) ^ meta.refkey[None, :], axis=0
+        )
+        return replace(meta, dbitmap=dbitmap, varbitmap=var)

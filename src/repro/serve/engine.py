@@ -97,9 +97,14 @@ class ServeEngine:
         """Simulated engine restart: decode state dropped, page index
         reconstructed from the page table (paper §5 applied to serving).
         ``backend`` picks the reconstruction substrate for this restart
-        (defaults to the pager's configured backend)."""
+        (defaults to the pager's configured backend).  After the first
+        restart the pager replays its mutation log through the incremental
+        delta-merge path — ``incremental``/``log_entries_replayed`` in the
+        returned stats say which path ran and how much churn it folded."""
         res = self.pager.rebuild_index(backend=backend)
         tm = res.timings
+        stage_keys = ("meta", "extract", "sort", "build", "refresh_meta",
+                      "filter", "merge")
         return {
             "index_height": res.tree.height,
             "compression_ratio": res.stats["compression_ratio"],
@@ -107,8 +112,6 @@ class ServeEngine:
             # tm["total"] is only the paper's extract+sort+build breakdown
             "rebuild_s": tm["meta"] + tm["total"] + tm["refresh_meta"],
             "backend": res.stats["backend"],
-            "stage_s": {
-                k: tm[k] for k in ("meta", "extract", "sort", "build",
-                                   "refresh_meta")
-            },
+            "stage_s": {k: tm[k] for k in stage_keys if k in tm},
+            **self.pager.stats["last_rebuild"],
         }

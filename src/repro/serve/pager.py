@@ -6,20 +6,32 @@ paper's main-memory indexes, the *search index* over the page table is
 never persisted: on engine restart (or replica bring-up) it is rebuilt from
 the table rows with the compressed key sort — `(seq_id << bits) || page_no`
 keys compress to their few distinction bits, and the bulk build produces
-the lookup tree.  ``rebuild_index`` *is* ``repro.core.reconstruct`` on this
-table.
+the lookup tree.
+
+Every mutation is also journaled into a ``repro.replication.ChangeLog``
+(alloc = INSERT of the packed key with the physical page as rid, free =
+DELETE by physical page), and DS-metadata is kept current with the §4.3
+insert rule.  A restart therefore *replays the pager's log*: the log folds
+onto the keyset of the previous build and
+``ReconstructionPipeline.run_incremental`` merges just the churn into the
+standing sorted run — paying the full resort only when an alloc introduced
+a new distinction bit.  ``rebuild_index`` *is* the paper's recovery path on
+this table, now with its incremental fast path.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import bisect
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from repro.core.btree import search_batch
 from repro.core.keyformat import KeySet
+from repro.core.metadata import DSMeta, meta_on_insert
 from repro.core.pipeline import ReconstructionPipeline
 from repro.core.reconstruct import ReconstructionResult
+from repro.replication import ChangeLog
 
 __all__ = ["PagedKVManager"]
 
@@ -38,6 +50,12 @@ class PagedKVManager:
     _table: dict = field(default_factory=dict)  # (seq, page_no) -> phys page
     _index: ReconstructionResult | None = None
     _index_dirty: bool = True
+    # replication journal + incremental-rebuild state
+    _log: ChangeLog = field(default_factory=lambda: ChangeLog(2), repr=False)
+    _base_keyset: KeySet | None = field(default=None, repr=False)
+    _meta: DSMeta | None = field(default=None, repr=False)
+    _sorted_keys: list | None = field(default=None, repr=False)
+    _last_rebuild: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         self._free = list(range(self.n_pages - 1, -1, -1))
@@ -47,14 +65,41 @@ class PagedKVManager:
         if not self._free:
             raise MemoryError("KV pager out of pages")
         phys = self._free.pop()
-        self._table[(seq_id, page_no)] = phys
+        key_t = (int(seq_id), int(page_no))
+        if key_t in self._table:
+            # re-alloc of a mapped slot: retire the old physical page so the
+            # log replay (delete old rid, insert new) matches the table
+            old = self._table[key_t]
+            self._free.append(old)
+            self._log.append_deletes([old])
+        elif self._meta is not None:
+            # §4.3 insert rule against the current sorted key population
+            # (only genuinely new keys extend it)
+            keys = self._sorted_view()
+            i = bisect.bisect_left(keys, key_t)
+            a = np.asarray(keys[i - 1], np.uint32) if i > 0 else None
+            b = np.asarray(keys[i], np.uint32) if i < len(keys) else None
+            self._meta = meta_on_insert(self._meta, a, _pack_key(*key_t), b)
+            keys.insert(i, key_t)
+        self._table[key_t] = phys
+        self._log.append_inserts(_pack_key(*key_t)[None, :], [phys])
         self._index_dirty = True
         return phys
 
     def free_seq(self, seq_id: int) -> int:
         gone = [k for k in self._table if k[0] == seq_id]
+        freed = []
         for k in gone:
-            self._free.append(self._table.pop(k))
+            phys = self._table.pop(k)
+            self._free.append(phys)
+            freed.append(phys)
+            if self._sorted_keys is not None:
+                j = bisect.bisect_left(self._sorted_keys, k)
+                if j < len(self._sorted_keys) and self._sorted_keys[j] == k:
+                    self._sorted_keys.pop(j)
+        if freed:
+            # DS-metadata untouched: the lazy delete rule (Theorem 2)
+            self._log.append_deletes(freed)
         self._index_dirty = True
         return len(gone)
 
@@ -68,19 +113,53 @@ class PagedKVManager:
             out.append(self._table[(seq_id, p)])
         return out
 
+    def _sorted_view(self) -> list:
+        if self._sorted_keys is None:
+            self._sorted_keys = sorted(self._table)
+        return self._sorted_keys
+
     # ---------------------------------------------------------------- index
     def rebuild_index(self, backend: str | None = None) -> ReconstructionResult:
-        """Reconstruct the page-table B-tree (the paper's recovery path)."""
+        """Reconstruct the page-table B-tree (the paper's recovery path).
+
+        After the first build, the rebuild replays the mutation log: it
+        folds onto the previous build's keyset and goes through the
+        pipeline's incremental delta-merge path (byte-identical full-path
+        fallback when the D-bitmap grew).
+        """
         if not self._table:
             raise ValueError("empty page table")
-        items = sorted(self._table.items())
-        words = np.stack([_pack_key(s, p) for (s, p), _ in items])
-        rids = np.asarray([phys for _, phys in items], np.uint32)
-        ks = KeySet(words=words, lengths=np.full(len(items), 8, np.int32), rids=rids)
         pipe = ReconstructionPipeline(backend=backend or self.backend)
-        self._index = pipe.run(ks)
+        if self._index is None or self._base_keyset is None:
+            items = sorted(self._table.items())
+            words = np.stack([_pack_key(s, p) for (s, p), _ in items])
+            rids = np.asarray([phys for _, phys in items], np.uint32)
+            ks = KeySet(
+                words=words, lengths=np.full(len(items), 8, np.int32), rids=rids
+            )
+            res = pipe.run(ks)
+            folded = ks
+        else:
+            keep_rows, delta = self._log.fold_keyset(self._base_keyset)
+            res, folded = pipe.run_incremental(
+                self._index, self._base_keyset, delta,
+                keep_rows=keep_rows, meta=self._meta,
+            )
+        self._last_rebuild = {
+            "incremental": bool(res.stats.get("incremental", False)),
+            "fallback": res.stats.get("incremental_fallback"),
+            "log_entries_replayed": len(self._log),
+        }
+        self._index, self._base_keyset = res, folded
+        # pin the working bitmap to what the standing run was extracted
+        # under (a superset of the refreshed bitmap is valid metadata) so
+        # the next restart can merge instead of resort
+        self._meta = replace(
+            res.meta, dbitmap=np.array(res.extract_bitmap, np.uint32, copy=True)
+        )
+        self._log = ChangeLog(2, start_lsn=self._log.next_lsn)
         self._index_dirty = False
-        return self._index
+        return res
 
     def lookup(self, seq_id: int, page_no: int) -> int | None:
         """Index-backed point lookup (tree search, not the dict)."""
@@ -101,4 +180,6 @@ class PagedKVManager:
             "compression_ratio": (
                 self._index.stats.get("compression_ratio") if self._index else None
             ),
+            "last_rebuild": dict(self._last_rebuild),
+            "log_entries_pending": len(self._log),
         }
