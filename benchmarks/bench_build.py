@@ -1,0 +1,124 @@
+"""Cold-vs-warm compiled-plan build benchmark (BENCH_build.json).
+
+The PR-3 claim measured: with the build and refresh stages promoted to
+cached compiled programs (shape-bucketed, memoized in
+``repro.core.plancache``), the *warm* build+refresh_meta cost — every run
+after the first in a bucket — must be a multiple cheaper than the cold
+first run that pays the traces, and a second same-bucket run must perform
+**zero** recompilations (asserted on the plan-cache trace counter, not
+assumed).  Parity of the sorted keys, rid permutation and tree bytes
+against the jnp oracle is asserted for every backend.
+
+  python -m benchmarks.run --only build --json BENCH_build.json
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import plancache
+from repro.core.keyformat import KeySet
+from repro.core.pipeline import ReconstructionPipeline
+
+from .common import timed, emit
+
+
+def _tree_equal(a, b) -> bool:
+    if len(a.levels) != len(b.levels):
+        return False
+    ok = np.array_equal(np.asarray(a.sorted_full), np.asarray(b.sorted_full))
+    ok &= np.array_equal(np.asarray(a.sorted_rids), np.asarray(b.sorted_rids))
+    for la, lb in zip(a.levels, b.levels):
+        for k in la:
+            ok &= np.array_equal(np.asarray(la[k]), np.asarray(lb[k]))
+    for k in a.leaf:
+        ok &= np.array_equal(np.asarray(a.leaf[k]), np.asarray(b.leaf[k]))
+    return bool(ok)
+
+
+def run(
+    n_keys: int = 65536,
+    backends: tuple[str, ...] = ("jnp", "pallas", "distributed"),
+    n_words: int = 3,
+) -> list[dict]:
+    print(f"# Compiled-plan build: {n_keys} keys, cold (trace) vs warm (cache hit)")
+    rng = np.random.default_rng(0)
+    words = rng.integers(0, 2**32, size=(n_keys, n_words), dtype=np.uint32) & np.uint32(
+        0x0FFF0FFF
+    )
+    ks = KeySet(
+        words=words,
+        lengths=np.full(n_keys, n_words * 4, np.int32),
+        rids=np.arange(n_keys, dtype=np.uint32),
+    )
+
+    rows: list[dict] = []
+    ref = None
+    for name in backends:
+        pipe = ReconstructionPipeline(backend=name)
+
+        # cold: first run in this process pays every program trace
+        import time
+
+        t0 = time.perf_counter()
+        res_cold = pipe.run(ks)
+        cold_wall = time.perf_counter() - t0
+        cold = dict(res_cold.timings)
+
+        # warm: same bucket, cached programs; zero recompiles is asserted,
+        # not assumed
+        s0 = plancache.cache_stats()
+        t_warm_wall, res_warm = timed(lambda: pipe.run(ks))
+        s1 = plancache.cache_stats()
+        warm_traces = s1["traces"] - s0["traces"]
+        warm = dict(res_warm.timings)
+
+        if ref is None:
+            ref = res_cold
+            parity = True
+        else:
+            parity = bool(
+                np.array_equal(
+                    np.asarray(ref.comp_sorted), np.asarray(res_cold.comp_sorted)
+                )
+                and np.array_equal(
+                    np.asarray(ref.rid_sorted), np.asarray(res_cold.rid_sorted)
+                )
+                and _tree_equal(ref.tree, res_cold.tree)
+            )
+
+        cold_stage = cold["build"] + cold["refresh_meta"]
+        warm_stage = warm["build"] + warm["refresh_meta"]
+        speedup = cold_stage / max(warm_stage, 1e-9)
+        derived = (
+            f"cold_build+refresh={cold_stage:.4f}s;"
+            f"warm_build+refresh={warm_stage:.4f}s;"
+            f"warm_speedup={speedup:.2f}x;warm_traces={warm_traces};"
+            f"parity={parity}"
+        )
+        emit(f"build/{name}", warm_stage, derived)
+        rows.append(
+            {
+                "name": f"build/{name}",
+                "backend": name,
+                "n_keys": n_keys,
+                "cold": {k: cold[k] for k in ("build", "refresh_meta", "sort", "total")},
+                "warm": {k: warm[k] for k in ("build", "refresh_meta", "sort", "total")},
+                "cold_wall_s": cold_wall,
+                "warm_wall_s": t_warm_wall,
+                "cold_build_stage_s": cold_stage,
+                "warm_build_stage_s": warm_stage,
+                "warm_speedup": speedup,
+                "warm_traces": warm_traces,
+                "parity_with_jnp": parity,
+                "plan_cache": plancache.cache_stats(),
+            }
+        )
+        assert warm_traces == 0, (
+            f"{name}: warm run recompiled {warm_traces} programs"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -17,8 +17,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: pipeline,incremental,table1,table2,"
-                         "table3,table4,table5,table6,apps")
+                    help="comma list: pipeline,incremental,build,table1,"
+                         "table2,table3,table4,table5,table6,apps")
     ap.add_argument("--fast", action="store_true", help="smaller datasets")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write structured suite results (timings per stage "
@@ -27,6 +27,7 @@ def main() -> None:
 
     from . import (
         bench_applications,
+        bench_build,
         bench_construction,
         bench_datasets,
         bench_dbit_distribution,
@@ -42,6 +43,9 @@ def main() -> None:
         "pipeline": lambda: bench_pipeline.run(scale=scale),
         "incremental": lambda: bench_incremental.run(
             n_base=8192 if args.fast else 65536
+        ),
+        "build": lambda: bench_build.run(
+            n_keys=8192 if args.fast else 65536
         ),
         "table1": lambda: bench_construction.run(scale=scale),
         "table2": lambda: bench_datasets.run(scale=scale),

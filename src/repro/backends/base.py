@@ -26,6 +26,17 @@ runs, so the (key, row) order is total).  Backends realize it differently —
 merge-path ranks on jnp, the tiled rank kernel on pallas, owner-shard
 routing + local merges on the distributed mesh — but the output bytes are
 the same everywhere.
+
+Compiled-plan execution promotes the remaining serial stages to backend
+ops: ``build`` (§5.3 bulk build — per-level entry programs cached in the
+shared plan cache, with a backend-substitutable partial-key gather) and
+``refresh_meta`` (§4.3 — a cached device program for the adjacent D-bit
+positions plus one host scatter-OR).  Shape-polymorphic ops (sort, merge,
+fused extract+sort, the batched path) run through
+``repro.core.plancache``: inputs pad to power-of-two buckets and the
+compiled program is memoized per ``(op, backend, bucket, n_words,
+static config)``, so drifting sizes under a churny serving load replay
+cached programs instead of retracing.
 """
 
 from __future__ import annotations
@@ -137,12 +148,62 @@ class ExecutionBackend(abc.ABC):
 
         Must be byte-identical to ``sort`` over the concatenated inputs;
         rows must be distinct across both runs (see the module docstring).
-        The default is the jnp merge-path reference; backends override with
-        their native realization.
+        The default is the jnp merge-path reference, shape-bucketed so
+        drifting ``(na, nb)`` pairs inside a bucket replay one compiled
+        program; backends override with their native realization.
         """
-        from repro.core.dbits import merge_words_keyed
+        from repro.core.plancache import merge_padded
 
-        return merge_words_keyed(keys_a, rows_a, keys_b, rows_b)
+        return merge_padded(
+            jnp.asarray(keys_a, jnp.uint32), jnp.asarray(rows_a, jnp.uint32),
+            jnp.asarray(keys_b, jnp.uint32), jnp.asarray(rows_b, jnp.uint32),
+            backend=self.name,
+        )
+
+    # -------------------------------------------------------------- build
+    def build(
+        self,
+        comp_sorted: jnp.ndarray,
+        row_sorted: jnp.ndarray,
+        meta,
+        words: jnp.ndarray,
+        lengths: jnp.ndarray | None,
+        config,
+        rids: jnp.ndarray | None = None,
+    ):
+        """Stage 3 (§5.3): bottom-up bulk build of the partial-key B+tree.
+
+        The default runs the cached jnp build programs; backends may
+        substitute their own entry-gather realization (the Pallas backend
+        passes its ``kernels/build`` pk-window kernel) — output trees must
+        be byte-identical across backends.
+        """
+        from repro.core.btree import build_btree
+
+        return build_btree(
+            comp_sorted, row_sorted, meta, words, lengths, config,
+            rids=rids, backend_name=self.name,
+        )
+
+    # ------------------------------------------------------- refresh meta
+    def refresh_meta(self, comp_sorted: jnp.ndarray, meta, ref_key):
+        """Stage 4 (§4.3): recompute DS-metadata at the opportune time.
+
+        The adjacent D-bit positions run as a cached, shape-bucketed
+        device program; the scatter-OR into the bitmap words is one
+        vectorized host op (``meta_on_rebuild``).
+        """
+        import numpy as np
+
+        from repro.core.metadata import meta_on_rebuild
+        from repro.core.plancache import adjacent_dpos_padded
+
+        dpos = adjacent_dpos_padded(
+            jnp.asarray(comp_sorted, jnp.uint32), backend=self.name
+        )
+        return meta_on_rebuild(
+            np.asarray(comp_sorted), meta, np.asarray(ref_key), dpos_comp=dpos
+        )
 
     # ----------------------------------------------------- batched (many)
     def batched_extract_sort(
@@ -160,17 +221,29 @@ class ExecutionBackend(abc.ABC):
         trace-time schedule).  Returns (comp_sorted (k, n, Wc), row_sorted
         (k, n)).  Only called when ``supports_batched``; the default is the
         vmapped dynamic-bitmap extract + keyed sort (single-device jnp
-        semantics).
+        semantics), compiled once per ``(k, n, W, Wc)`` via the plan cache
+        (the pipeline pads the stacked ``n`` up to a bucket boundary, so
+        replication batches at drifting sizes replay the same program).
         """
         import jax
 
-        from repro.core.compress import extract_bits_dynamic
-        from repro.core.dbits import sort_words_keyed
+        from repro.core.plancache import get_cache
 
+        cache = get_cache()
+        k, n, w = (int(s) for s in words.shape)
         n_words_out = plans[0].n_words_out  # equal across the batch
 
-        def one(w, bm, r):
-            comp = extract_bits_dynamic(w, bm, n_words_out)
-            return sort_words_keyed(comp, r)
+        def builder():
+            from repro.core.compress import extract_bits_dynamic
+            from repro.core.dbits import sort_words_keyed
 
-        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0)))(words, bitmaps, rows)
+            def one(wds, bm, r):
+                comp = extract_bits_dynamic(wds, bm, n_words_out)
+                return sort_words_keyed(comp, r)
+
+            return cache.jit(jax.vmap(one, in_axes=(0, 0, 0)))
+
+        prog = cache.program(
+            ("run_many", self.name, k, n, w, n_words_out), builder
+        )
+        return prog(words, bitmaps, rows)

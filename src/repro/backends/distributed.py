@@ -28,8 +28,9 @@ import numpy as np
 
 from repro.compat import make_mesh
 from repro.core.compress import ExtractionPlan, extract_bits
-from repro.core.dbits import merge_words_keyed, rank_in_sorted_keyed
+from repro.core.dbits import rank_in_sorted_keyed
 from repro.core.distsort import make_sample_sort
+from repro.core.plancache import merge_padded
 
 from .base import ExecutionBackend, register_backend
 
@@ -132,7 +133,7 @@ class DistributedBackend(ExecutionBackend):
         na, nb = int(keys_a.shape[0]), int(keys_b.shape[0])
         p = self.n_devices
         if na == 0 or nb == 0 or p == 1:
-            out = merge_words_keyed(keys_a, rows_a, keys_b, rows_b)
+            out = merge_padded(keys_a, rows_a, keys_b, rows_b, backend=self.name)
             self.last_info = {"mesh_devices": p, "delta_routed": [nb]}
             return out
         chunk = -(-na // p)
@@ -147,9 +148,12 @@ class DistributedBackend(ExecutionBackend):
             s, e = i * chunk, min((i + 1) * chunk, na)
             sel = np.nonzero(owner == i)[0]
             routed.append(int(sel.size))
-            mk, mr = merge_words_keyed(
+            # chunk sizes drift with (na, routed delta); bucketing the local
+            # merge keeps every chunk on a cached compiled program
+            mk, mr = merge_padded(
                 keys_a[s:e], rows_a[s:e],
                 jnp.take(keys_b, sel, axis=0), jnp.take(rows_b, sel, axis=0),
+                backend=self.name,
             )
             parts_k.append(mk)
             parts_r.append(mr)

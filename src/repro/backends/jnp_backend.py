@@ -4,32 +4,25 @@ This is the reference semantics every other backend is tested against.  The
 fused path jits extract+sort as one program so XLA fuses the bit-gather into
 the sort's operand production and the compressed array is never written back
 to HBM between the stages.
+
+Every shape-polymorphic op (sort, merge, fused) runs through the shared
+plan cache (``repro.core.plancache``): inputs pad to power-of-two buckets
+with sentinel rows that sort strictly last, and the compiled program is
+memoized per bucket — a churny serving load whose ``n`` / ``(na, nb)``
+drift within a bucket replays one program instead of retracing per shape
+(the ROADMAP's jnp-merge retrace item).
 """
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
-from repro.core.compress import ExtractionPlan, extract_bits
-from repro.core.dbits import merge_words_keyed, sort_words_keyed
+from repro.core.compress import ExtractionPlan
+from repro.core.plancache import fused_extract_sort_padded, merge_padded, sort_padded
 
 from .base import ExecutionBackend, register_backend
 
 __all__ = ["JnpBackend"]
-
-
-@partial(jax.jit, static_argnames=("plan",))
-def _fused_extract_sort(words: jnp.ndarray, rows: jnp.ndarray, plan: ExtractionPlan):
-    comp = extract_bits(words, plan)
-    return sort_words_keyed(comp, rows)
-
-
-# merge-path merge: two rank passes (vectorized binary search) + permutation
-# scatter; one program so XLA fuses the compares with the scatter operands
-_merged = jax.jit(merge_words_keyed)
 
 
 @register_backend("jnp")
@@ -40,22 +33,27 @@ class JnpBackend(ExecutionBackend):
     supports_batched = True
 
     def extract(self, words: jnp.ndarray, plan: ExtractionPlan) -> jnp.ndarray:
+        from repro.core.compress import extract_bits
+
         return extract_bits(words, plan)
 
     def sort(self, keys, rows):
-        return sort_words_keyed(
-            jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32)
+        return sort_padded(
+            jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32),
+            backend=self.name,
         )
 
     def fused_extract_sort(self, words, plan, rows):
-        return _fused_extract_sort(
-            jnp.asarray(words, jnp.uint32), jnp.asarray(rows, jnp.uint32), plan
+        return fused_extract_sort_padded(
+            jnp.asarray(words, jnp.uint32), plan, jnp.asarray(rows, jnp.uint32),
+            backend=self.name,
         )
 
     def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):
-        # shapes are static at trace time, so the empty-run short-circuits
-        # inside merge_words_keyed specialize correctly under jit
-        return _merged(
+        # merge-path merge: two rank passes (vectorized binary search) +
+        # permutation scatter, one cached program per (bucket_a, bucket_b)
+        return merge_padded(
             jnp.asarray(keys_a, jnp.uint32), jnp.asarray(rows_a, jnp.uint32),
             jnp.asarray(keys_b, jnp.uint32), jnp.asarray(rows_b, jnp.uint32),
+            backend=self.name,
         )

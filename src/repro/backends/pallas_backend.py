@@ -22,8 +22,11 @@ import jax.numpy as jnp
 
 from repro.core.compress import ExtractionPlan
 from repro.core.dbits import sort_words_keyed
+from repro.core.plancache import get_cache, merge_padded, sort_padded
 from repro.kernels.bitonic import ops as bitonic_ops
 from repro.kernels.bitonic.kernel import DEFAULT_BLOCK
+from repro.kernels.build import ops as build_ops
+from repro.kernels.build.kernel import DEFAULT_TILE as BUILD_TILE
 from repro.kernels.merge import ops as merge_ops
 from repro.kernels.merge.kernel import DEFAULT_TILE as MERGE_TILE
 from repro.kernels.pext import ops as pext_ops
@@ -46,6 +49,7 @@ class PallasBackend(ExecutionBackend):
         tile: int = DEFAULT_TILE,
         block: int = DEFAULT_BLOCK,
         merge_tile: int = MERGE_TILE,
+        build_tile: int = BUILD_TILE,
     ) -> None:
         super().__init__()
         if interpret is None:
@@ -54,6 +58,7 @@ class PallasBackend(ExecutionBackend):
         self.tile = int(tile)
         self.block = int(block)
         self.merge_tile = int(merge_tile)
+        self.build_tile = int(build_tile)
         self.last_info = {"interpret": self.interpret}
 
     def extract(self, words: jnp.ndarray, plan: ExtractionPlan) -> jnp.ndarray:
@@ -65,27 +70,53 @@ class PallasBackend(ExecutionBackend):
         )
 
     def sort(self, keys, rows):
-        keys = jnp.asarray(keys, jnp.uint32)
-        rows = jnp.asarray(rows, jnp.uint32)
-        bk, brow = bitonic_ops.block_sort(
-            keys, rows, block=self.block, interpret=self.interpret
+        block, interpret = self.block, self.interpret
+
+        def impl(kp, rp):
+            bk, brow = bitonic_ops.block_sort(kp, rp, block=block, interpret=interpret)
+            # merge of block-sorted runs; the keyed sort restores the
+            # (key, row) order the unstable bitonic network does not
+            # guarantee
+            return sort_words_keyed(bk, brow)
+
+        return sort_padded(
+            jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32),
+            backend=self.name, impl=impl, extra_key=(block, interpret),
         )
-        # merge of block-sorted runs; the keyed sort restores the (key, row)
-        # order the unstable bitonic network does not guarantee
-        return sort_words_keyed(bk, brow)
 
     def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):
-        """kernels/merge tiled merge-path ranks + permutation scatter."""
-        return merge_ops.merge_sorted(
-            keys_a, rows_a, keys_b, rows_b,
-            tile=self.merge_tile, interpret=self.interpret,
+        """kernels/merge tiled merge-path ranks + permutation scatter,
+        shape-bucketed (one compiled program per (bucket_a, bucket_b))."""
+        tile, interpret = self.merge_tile, self.interpret
+
+        def impl(ka, ra, kb, rb):
+            return merge_ops.merge_sorted(ka, ra, kb, rb, tile=tile, interpret=interpret)
+
+        return merge_padded(
+            jnp.asarray(keys_a, jnp.uint32), jnp.asarray(rows_a, jnp.uint32),
+            jnp.asarray(keys_b, jnp.uint32), jnp.asarray(rows_b, jnp.uint32),
+            backend=self.name, impl=impl, extra_key=(tile, interpret),
+        )
+
+    def build(self, comp_sorted, row_sorted, meta, words, lengths, config, rids=None):
+        """Cached build programs with the kernels/build tiled pk-window
+        gather substituted for the jnp ``_slice_bits`` (bit-identical)."""
+        from repro.core.btree import build_btree
+
+        return build_btree(
+            comp_sorted, row_sorted, meta, words, lengths, config, rids=rids,
+            backend_name=self.name,
+            slice_fn=build_ops.slice_fn(tile=self.build_tile, interpret=self.interpret),
+            program_key_extra=(self.build_tile, self.interpret),
         )
 
     def batched_extract_sort(self, words, bitmaps, rows, plans):
         """Batched fast path: per-index pext extraction (each plan is a
         static kernel schedule), then ONE vmapped program over the stacked
         batch for the sort — the bitonic block-sort kernel vmaps by growing
-        its grid, and the run merge rides along inside the same trace."""
+        its grid, and the run merge rides along inside the same trace.  The
+        vmapped sort program is memoized in the plan cache per stacked
+        shape, so repeated replication batches replay it."""
         del bitmaps  # pext wants the static plans, not runtime bitmaps
         comp = jnp.stack(
             [
@@ -93,11 +124,18 @@ class PallasBackend(ExecutionBackend):
                 for i, p in enumerate(plans)
             ]
         )
+        cache = get_cache()
+        k, n, wc = (int(s) for s in comp.shape)
+        block, interpret = self.block, self.interpret
 
-        def one(c, r):
-            bk, brow = bitonic_ops.block_sort(
-                c, r, block=self.block, interpret=self.interpret
-            )
-            return sort_words_keyed(bk, brow)
+        def builder():
+            def one(c, r):
+                bk, brow = bitonic_ops.block_sort(c, r, block=block, interpret=interpret)
+                return sort_words_keyed(bk, brow)
 
-        return jax.vmap(one)(comp, jnp.asarray(rows, jnp.uint32))
+            return cache.jit(jax.vmap(one))
+
+        prog = cache.program(
+            ("run_many", self.name, k, n, wc, block, interpret), builder
+        )
+        return prog(comp, jnp.asarray(rows, jnp.uint32))

@@ -30,7 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dbits import NO_DBIT, adjacent_dbit_positions, lex_compare_le
+from .dbits import (
+    NO_DBIT,
+    adjacent_dbit_positions,
+    dbit_position_pairwise,
+    lex_compare_le,
+)
 from .metadata import DSMeta
 
 __all__ = ["BTreeConfig", "BTree", "build_btree", "search_batch", "search_batch_partial"]
@@ -121,12 +126,69 @@ def _slice_bits(words: jnp.ndarray, start: jnp.ndarray, pk_bits: int) -> jnp.nda
     return window >> jnp.uint32(32 - pk_bits)
 
 
-def _pad_to(x: jnp.ndarray, rows: int, fill) -> jnp.ndarray:
+def _np_pad(x: np.ndarray, rows: int, fill) -> np.ndarray:
     pad = rows - x.shape[0]
     if pad <= 0:
         return x
-    shape = (pad,) + x.shape[1:]
-    return jnp.concatenate([x, jnp.full(shape, fill, dtype=x.dtype)], axis=0)
+    return np.concatenate([x, np.full((pad,) + x.shape[1:], fill, dtype=x.dtype)])
+
+
+def _leaf_program(cache, slice_fn, pk: int):
+    """Stage-3 entry computation for the leaf level, one jitted program.
+
+    All heavy per-entry work — the row gathers (sorted full keys, lengths,
+    rids), the adjacent compressed-key D-bit positions mapped through
+    D-offset, and the partial-key windows — fuses into a single compiled
+    body over the bucket-padded shapes.  ``n`` and ``n_off`` arrive as
+    dynamic scalar operands so every size inside the bucket replays the
+    same program; padded lanes are clipped garbage, sliced off by the
+    caller before assembly.
+    """
+
+    def prog(comp_pad, words_pad, lengths_pad, rids_pad, row_pad, d_off_pad, n, n_off):
+        rowc = jnp.clip(row_pad, 0, jnp.maximum(n - 1, 0)).astype(jnp.int32)
+        sorted_full = words_pad[rowc]
+        klen = lengths_pad[rowc]
+        rid_sorted = rids_pad[rowc]
+        # distinction bit positions per sorted entry (entry 0 -> position 0)
+        dpos_comp = adjacent_dbit_positions(comp_pad)
+        safe = jnp.clip(dpos_comp, 0, n_off - 1)
+        tail = jnp.where(dpos_comp == NO_DBIT, jnp.int32(0), d_off_pad[safe])
+        dpos_full = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), tail.astype(jnp.int32)]
+        )
+        # partial key: pk bits following the distinction bit position
+        # (option C.b: sliced from the record's full key)
+        pkeys = slice_fn(sorted_full, dpos_full + 1, pk).astype(jnp.uint32)
+        return sorted_full, klen, rid_sorted, dpos_full, pkeys
+
+    return cache.jit(prog)
+
+
+def _level_program(cache, slice_fn, pk: int):
+    """Stage-3 entry computation for one non-leaf level, one jitted program.
+
+    The adjacent highest-key D-bits (via compressed keys + D-offset, §5.3),
+    the entry partial-key windows, and the key-length gather for a whole
+    level run as one compiled body over bucket-padded node rows.
+    """
+
+    def prog(hi_pad, comp_pad, full_pad, klen_pad, d_off_pad, n, n_off):
+        hi_prev = jnp.concatenate([hi_pad[:1], hi_pad[:-1]])
+        ac = jnp.clip(hi_prev, 0, n - 1)
+        bc = jnp.clip(hi_pad, 0, n - 1)
+        a = comp_pad[ac]
+        b = comp_pad[bc]
+        dc = dbit_position_pairwise(a, b)
+        dfull = jnp.where(
+            dc == NO_DBIT, jnp.int32(0), d_off_pad[jnp.clip(dc, 0, n_off - 1)]
+        ).astype(jnp.int32)
+        dfull = dfull.at[0].set(0)
+        epk = slice_fn(full_pad[bc], dfull + 1, pk).astype(jnp.uint32)
+        klen_hi = jnp.take(klen_pad, bc)
+        return dfull, epk, klen_hi
+
+    return cache.jit(prog)
 
 
 def build_btree(
@@ -137,6 +199,11 @@ def build_btree(
     table_lengths: jnp.ndarray | None = None,
     config: BTreeConfig = BTreeConfig(),
     rids: jnp.ndarray | None = None,
+    *,
+    slice_fn=None,
+    backend_name: str = "jnp",
+    program_key_extra: tuple = (),
+    cache=None,
 ) -> BTree:
     """Bulk-build the tree from sorted compressed keys + row positions (§5.3).
 
@@ -146,89 +213,118 @@ def build_btree(
     Distinction bit positions of entries come from adjacent *compressed*
     keys mapped through D-offset — no full-key comparisons are needed
     anywhere in the build, which is the point of the paper.
+
+    Compiled-plan execution: each level's entry computation is one jitted
+    program, cached in the shared plan cache (``repro.core.plancache``)
+    under static ``(backend, bucket, n_words, leaf/nonleaf caps, pk)``;
+    only cheap host-side reshapes happen between program calls.
+    ``slice_fn`` lets a backend substitute its own partial-key window
+    gather (the Pallas tiled kernel in ``repro.kernels.build``) — it must
+    be bit-identical to ``_slice_bits``, and any configuration baked into
+    the closure (tile size, interpret mode) must travel in
+    ``program_key_extra`` so differently-configured backends never share a
+    cached program.
     """
+    from . import plancache
+
+    cache = cache or plancache.get_cache()
+    if slice_fn is None:
+        slice_fn = _slice_bits
+
     n = int(comp_sorted.shape[0])
-    rid_sorted = (
-        jnp.asarray(row_sorted, jnp.uint32)
-        if rids is None
-        else jnp.asarray(rids, jnp.uint32)[row_sorted]
-    )
+    W = int(table_words.shape[1])
+    Wc = int(comp_sorted.shape[1])
     lc, nc = config.leaf_cap, config.nonleaf_cap
     pk = config.pk_bits
 
-    d_off = jnp.asarray(meta.d_offset(), jnp.int32)
-    n_off = int(d_off.shape[0])
+    d_off_np = np.asarray(meta.d_offset(), np.int32)
+    n_off = int(d_off_np.shape[0])
+    DB = W * 32  # d_off is padded to the max possible D-bit count (static)
+    d_off_pad = jnp.asarray(_np_pad(d_off_np, DB, 0))
 
-    # distinction bit positions per sorted entry (entry 0 -> position 0)
-    dpos_comp = adjacent_dbit_positions(jnp.asarray(comp_sorted, jnp.uint32))
-    safe = jnp.clip(dpos_comp, 0, n_off - 1)
-    dpos_full = jnp.where(dpos_comp == NO_DBIT, jnp.int32(0), d_off[safe])
-    dpos_full = jnp.concatenate([jnp.zeros((1,), jnp.int32), dpos_full.astype(jnp.int32)])
-
-    sorted_full = jnp.asarray(table_words, jnp.uint32)[row_sorted]
+    B = plancache.bucket(n)
+    comp_pad = plancache.pad_rows_2d(jnp.asarray(comp_sorted, jnp.uint32), B, 0)
+    words_pad = plancache.pad_rows_2d(jnp.asarray(table_words, jnp.uint32), B, 0)
+    row_pad = plancache.pad_rows_1d(jnp.asarray(row_sorted, jnp.uint32), B, 0)
     if table_lengths is None:
-        klen = jnp.full((n,), table_words.shape[1] * 4, jnp.int32)
+        lengths_pad = jnp.full((B,), W * 4, jnp.int32)
     else:
-        klen = jnp.asarray(table_lengths, jnp.int32)[row_sorted]
+        lengths_pad = plancache.pad_rows_1d(jnp.asarray(table_lengths, jnp.int32), B, 0)
+    rids_pad = plancache.pad_rows_1d(
+        jnp.arange(n, dtype=jnp.uint32) if rids is None else jnp.asarray(rids, jnp.uint32),
+        B,
+        0,
+    )
 
-    # partial key: pk bits following the distinction bit position (option C.b:
-    # sliced from the record's full key)
-    pkeys = _slice_bits(sorted_full, dpos_full + 1, pk).astype(jnp.uint32)
+    # ---------------- leaf level (one cached program + host reshape) -------
+    leaf_prog = cache.program(
+        ("build_leaf", backend_name, B, W, Wc, pk) + program_key_extra,
+        lambda: _leaf_program(cache, slice_fn, pk),
+    )
+    full_pad, klen_pad, rid_dev, dpos_dev, pkeys_dev = leaf_prog(
+        comp_pad, words_pad, lengths_pad, rids_pad, row_pad, d_off_pad,
+        np.int32(n), np.int32(n_off),
+    )
+    sorted_full = full_pad[:n]
+    rid_sorted = rid_dev[:n]
+    rid_np = np.asarray(rid_sorted)
+    dpos_np = np.asarray(dpos_dev[:n])
+    pkeys_np = np.asarray(pkeys_dev[:n])
+    klen_np = np.asarray(klen_pad[:n])
 
-    # ---------------- leaf level ----------------
     n_leaves = -(-n // lc)
     rows = n_leaves * lc
     leaf = {
-        "rid": _pad_to(jnp.asarray(rid_sorted, jnp.uint32), rows, 0xFFFFFFFF).reshape(n_leaves, lc),
-        "pk": _pad_to(pkeys, rows, 0).reshape(n_leaves, lc),
-        "dpos": _pad_to(dpos_full, rows, 0).reshape(n_leaves, lc),
-        "klen": _pad_to(klen, rows, 0).reshape(n_leaves, lc),
-        "valid": (jnp.arange(rows).reshape(n_leaves, lc) < n),
+        "rid": jnp.asarray(_np_pad(rid_np, rows, 0xFFFFFFFF).reshape(n_leaves, lc)),
+        "pk": jnp.asarray(_np_pad(pkeys_np, rows, 0).reshape(n_leaves, lc)),
+        "dpos": jnp.asarray(_np_pad(dpos_np, rows, 0).reshape(n_leaves, lc)),
+        "klen": jnp.asarray(_np_pad(klen_np, rows, 0).reshape(n_leaves, lc)),
+        "valid": jnp.asarray(np.arange(rows).reshape(n_leaves, lc) < n),
     }
     # highest (sorted-order) key index of each leaf
-    child_hi = jnp.minimum(jnp.arange(n_leaves) * lc + lc, n) - 1
+    child_hi = np.minimum(np.arange(n_leaves) * lc + lc, n).astype(np.int32) - 1
 
     # ---------------- non-leaf levels, bottom-up ----------------
     levels: list[dict] = []
-    child_idx = jnp.arange(n_leaves, dtype=jnp.int32)
+    child_idx = np.arange(n_leaves, dtype=np.int32)
     while child_idx.shape[0] > 1:
         m_children = int(child_idx.shape[0])
         n_nodes = -(-m_children // nc)
         rows = n_nodes * nc
-        hi = _pad_to(child_hi.astype(jnp.int32), rows, -1)
-        # entry distinction bit: adjacent highest keys at this level, via the
-        # compressed keys + D-offset (paper §5.3)
-        hi_prev = jnp.concatenate([hi[:1], hi[:-1]])
-        a = jnp.asarray(comp_sorted, jnp.uint32)[jnp.clip(hi_prev, 0, n - 1)]
-        b = jnp.asarray(comp_sorted, jnp.uint32)[jnp.clip(hi, 0, n - 1)]
-        from .dbits import dbit_position_pairwise
-
-        dc = dbit_position_pairwise(a, b)
-        dfull = jnp.where(dc == NO_DBIT, jnp.int32(0), d_off[jnp.clip(dc, 0, n_off - 1)])
-        dfull = dfull.at[0].set(0)
-        epk = _slice_bits(sorted_full[jnp.clip(hi, 0, n - 1)], dfull + 1, pk)
+        Bn = plancache.bucket(rows)
+        hi_np = _np_pad(child_hi.astype(np.int32), rows, -1)
+        level_prog = cache.program(
+            ("build_level", backend_name, Bn, B, W, Wc, pk) + program_key_extra,
+            lambda: _level_program(cache, slice_fn, pk),
+        )
+        dfull_dev, epk_dev, klen_dev = level_prog(
+            jnp.asarray(_np_pad(hi_np, Bn, -1)), comp_pad, full_pad, klen_pad,
+            d_off_pad, np.int32(n), np.int32(n_off),
+        )
+        dfull = np.asarray(dfull_dev[:rows])
+        epk = np.asarray(epk_dev[:rows])
+        klen_hi = np.asarray(klen_dev[:rows])
+        child_np = _np_pad(child_idx, rows, -1).reshape(n_nodes, nc)
+        hi_grid = hi_np.reshape(n_nodes, nc)
         level = {
-            "child": _pad_to(child_idx, rows, -1).reshape(n_nodes, nc),
-            "hi": hi.reshape(n_nodes, nc),
-            "pk": epk.astype(jnp.uint32).reshape(n_nodes, nc),
-            "dpos": dfull.astype(jnp.int32).reshape(n_nodes, nc),
-            "klen": _pad_to(
-                jnp.take(klen, jnp.clip(hi, 0, n - 1)), rows, 0
-            ).reshape(n_nodes, nc),
+            "child": jnp.asarray(child_np),
+            "hi": jnp.asarray(hi_grid),
+            "pk": jnp.asarray(epk.astype(np.uint32).reshape(n_nodes, nc)),
+            "dpos": jnp.asarray(dfull.astype(np.int32).reshape(n_nodes, nc)),
+            "klen": jnp.asarray(klen_hi.reshape(n_nodes, nc)),
         }
         levels.append(level)
         # parents become the children of the next level up
-        valid_children = (level["child"] >= 0)
-        last_valid = jnp.sum(valid_children.astype(jnp.int32), axis=1) - 1
-        child_hi = jnp.take_along_axis(level["hi"], last_valid[:, None], axis=1)[:, 0]
-        child_idx = jnp.arange(n_nodes, dtype=jnp.int32)
+        last_valid = (child_np >= 0).sum(axis=1) - 1
+        child_hi = hi_grid[np.arange(n_nodes), last_valid]
+        child_idx = np.arange(n_nodes, dtype=np.int32)
 
     levels.reverse()  # root first
     return BTree(
         levels=tuple(levels),
         leaf=leaf,
         sorted_full=sorted_full,
-        sorted_rids=jnp.asarray(rid_sorted, jnp.uint32),
+        sorted_rids=jnp.asarray(rid_np),
         n_keys=n,
         config=config,
     )

@@ -25,7 +25,14 @@ import numpy as np
 
 from .compress import ExtractionPlan, make_plan
 
-__all__ = ["DSMeta", "meta_from_keys", "meta_on_insert", "meta_on_delete", "meta_on_rebuild"]
+__all__ = [
+    "DSMeta",
+    "meta_from_keys",
+    "meta_on_insert",
+    "meta_on_delete",
+    "meta_on_rebuild",
+    "shed_or_pin",
+]
 
 
 def _np_dbit(a: np.ndarray, b: np.ndarray) -> int:
@@ -133,7 +140,10 @@ def meta_on_delete(meta: DSMeta) -> DSMeta:
 
 
 def meta_on_rebuild(
-    comp_sorted: np.ndarray, old_meta: DSMeta, ref_full_key: np.ndarray
+    comp_sorted: np.ndarray,
+    old_meta: DSMeta,
+    ref_full_key: np.ndarray,
+    dpos_comp: np.ndarray | None = None,
 ) -> DSMeta:
     """Recompute DS-metadata during index reconstruction (§4.3).
 
@@ -142,16 +152,64 @@ def meta_on_rebuild(
     bits that were 0 stay 0.  The variant bitmap is rebuilt from the same
     pass over the table (done by the caller who still holds full keys;
     here we accept the compressed adjacency only).
+
+    The bit set is one vectorized scatter-OR into the 32-bit bitmap words
+    (``np.bitwise_or.at`` is duplicate-safe), not a per-position Python
+    loop.  ``dpos_comp`` optionally carries precomputed adjacent D-bit
+    positions — the pipeline's cached refresh program
+    (``repro.core.plancache.adjacent_dpos_padded``) passes them so the
+    device half of the refresh compiles once per shape bucket.
     """
-    import jax.numpy as jnp
+    from .dbits import NO_DBIT
 
-    from .dbits import adjacent_dbit_positions, NO_DBIT
+    if dpos_comp is None:
+        import jax.numpy as jnp
 
+        from .dbits import adjacent_dbit_positions
+
+        dpos_comp = np.asarray(
+            adjacent_dbit_positions(jnp.asarray(comp_sorted, jnp.uint32))
+        )
+    dpos_comp = np.asarray(dpos_comp)
     d_off = old_meta.d_offset()
-    dpos_comp = np.asarray(adjacent_dbit_positions(jnp.asarray(comp_sorted, jnp.uint32)))
     valid = dpos_comp != NO_DBIT
     full_pos = d_off[dpos_comp[valid]]
     dbm = np.zeros_like(old_meta.dbitmap)
-    for p in np.unique(full_pos):
-        dbm = _set_bit(dbm, int(p))
+    if full_pos.size:
+        np.bitwise_or.at(
+            dbm,
+            full_pos // 32,
+            np.uint32(1) << (31 - (full_pos % 32)).astype(np.uint32),
+        )
     return replace(old_meta, dbitmap=dbm, refkey=np.asarray(ref_full_key, np.uint32))
+
+
+def shed_or_pin(
+    refreshed_meta: DSMeta,
+    extract_bitmap: np.ndarray,
+    deletes_since_shed: int,
+    shed_delete_frac: float | None,
+    n_live: int,
+) -> tuple[DSMeta, bool, int]:
+    """The post-rebuild bitmap policy shared by Replica and the serve pager.
+
+    Pinning the working D-bitmap to the *extraction* bitmap keeps
+    consecutive rebuilds incremental (the standing sorted run can still be
+    merged against), but lets delete-stale widened bits accumulate.  When
+    the delete volume since the bits were last re-derived crosses
+    ``shed_delete_frac`` of the live index, adopt the refreshed (shed)
+    bitmap instead — the next rebuild pays one full resort under the
+    narrower projection, then pinning resumes.  ``None`` never sheds.
+
+    Returns ``(working_meta, shed, deletes_since_shed)``.
+    """
+    shed = (
+        shed_delete_frac is not None
+        and deletes_since_shed > shed_delete_frac * n_live
+    )
+    if shed:
+        return refreshed_meta, True, 0
+    pinned = replace(
+        refreshed_meta, dbitmap=np.array(extract_bitmap, np.uint32, copy=True)
+    )
+    return pinned, False, deletes_since_shed

@@ -46,9 +46,9 @@ import numpy as np
 
 from repro.backends import ExecutionBackend, get_backend
 
-from .btree import BTree, BTreeConfig, build_btree
+from .btree import BTree, BTreeConfig
 from .keyformat import KeySet
-from .metadata import DSMeta, meta_from_keys, meta_on_rebuild
+from .metadata import DSMeta, meta_from_keys
 from .sortkeys import word_comparison_counts
 
 __all__ = [
@@ -169,14 +169,16 @@ class ReconstructionPipeline:
         return self.backend.sort(comp, rows)
 
     def build(self, comp_sorted, row_sorted, meta, words, lengths, rids) -> BTree:
-        """Stage 3 (§5.3): bottom-up bulk build of the partial-key B+tree."""
-        return build_btree(
+        """Stage 3 (§5.3): bottom-up bulk build (backend-dispatched — the
+        cached per-level build programs, with backend entry gathers)."""
+        return self.backend.build(
             comp_sorted, row_sorted, meta, words, lengths, self.config, rids=rids
         )
 
     def refresh_meta(self, comp_sorted, meta: DSMeta, ref_key) -> DSMeta:
-        """Stage 4 (§4.3): recompute DS-metadata at the opportune time."""
-        return meta_on_rebuild(np.asarray(comp_sorted), meta, np.asarray(ref_key))
+        """Stage 4 (§4.3): recompute DS-metadata at the opportune time
+        (backend-dispatched: cached device dpos program + host scatter-OR)."""
+        return self.backend.refresh_meta(comp_sorted, meta, ref_key)
 
     # ---------------------------------------------------------------- run
     def run(
@@ -441,8 +443,10 @@ class ReconstructionPipeline:
             return [self.run(ks, meta=m) for ks, m in zip(keysets, metas)]
 
         # metadata first (it determines the compressed width), then group by
-        # (n, n_words, compressed width) so every member of a batch gets
-        # exactly the comp_sorted width its own single run would produce
+        # (shape bucket, n_words, compressed width): members of a bucket pad
+        # to the bucket boundary with sentinel rows, so the stacked program
+        # is shared across drifting sizes AND every member still gets
+        # exactly the comp_sorted its own single run would produce
         t0 = time.perf_counter()
         metas = [
             m if m is not None else meta_from_keys(ks.words)
@@ -450,9 +454,13 @@ class ReconstructionPipeline:
         ]
         t_meta_total = time.perf_counter() - t0
 
+        from . import plancache
+
         groups: dict[tuple[int, int, int], list[int]] = {}
         for i, (ks, m) in enumerate(zip(keysets, metas)):
-            groups.setdefault((ks.n, ks.n_words, m.plan().n_words_out), []).append(i)
+            groups.setdefault(
+                (plancache.bucket(ks.n), ks.n_words, m.plan().n_words_out), []
+            ).append(i)
 
         t_meta = t_meta_total / max(len(keysets), 1)
         for _, idxs in groups.items():
@@ -467,12 +475,37 @@ class ReconstructionPipeline:
         return results  # type: ignore[return-value]
 
     def _run_batched(self, keysets, metas, t_meta) -> list[ReconstructionResult]:
+        from . import plancache
+
         k = len(keysets)
         plans = [m.plan() for m in metas]
-        words = jnp.asarray(np.stack([ks.words for ks in keysets]), jnp.uint32)
+        b = plancache.bucket(max(ks.n for ks in keysets))
+        # members pad to the shared bucket boundary: all-ones sentinel keys
+        # extract to the maximal compressed pattern and the reserved row-id
+        # range breaks ties, so each member's pads sort strictly last and
+        # slicing [:n] recovers its exact single-run output
+        words = jnp.asarray(
+            np.stack([
+                np.concatenate([
+                    np.asarray(ks.words, np.uint32),
+                    np.full((b - ks.n, ks.n_words), 0xFFFFFFFF, np.uint32),
+                ])
+                for ks in keysets
+            ]),
+            jnp.uint32,
+        )
         bitmaps = jnp.asarray(np.stack([m.dbitmap for m in metas]), jnp.uint32)
-        n = keysets[0].n
-        rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32), (k, n))
+        rows = jnp.asarray(
+            np.stack([
+                np.concatenate([
+                    np.arange(ks.n, dtype=np.uint32),
+                    np.uint32(plancache.ROW_PAD_A)
+                    + np.arange(b - ks.n, dtype=np.uint32),
+                ])
+                for ks in keysets
+            ]),
+            jnp.uint32,
+        )
 
         # the stacked extract+sort is the backend's batched program (keyed
         # sort — the determinism contract — on whatever substrate it runs)
@@ -482,7 +515,7 @@ class ReconstructionPipeline:
 
         out = []
         for i, (ks, meta) in enumerate(zip(keysets, metas)):
-            cs, rs = comp_sorted[i], row_sorted[i]
+            cs, rs = comp_sorted[i, : ks.n], row_sorted[i, : ks.n]
             rids = jnp.asarray(ks.rids, jnp.uint32)
             lengths = jnp.asarray(ks.lengths, jnp.int32)
             tree, t_build = _timed(

@@ -1,0 +1,314 @@
+"""Shape-bucketed compiled-program cache for the reconstruction hot path.
+
+The pipeline's data-parallel stages are shape-polymorphic in Python but
+shape-*monomorphic* once compiled: every distinct ``(n, n_words)`` the
+serving layer throws at a stage retraces and recompiles the program (the
+ROADMAP's "jnp merge retraces per (na, nb)" open item is one instance; an
+un-jitted build stage dispatching dozens of eager ops per level is the
+worse one).  Under a churny workload the sizes drift every call and the
+hot path never stops compiling.
+
+This module fixes the program count, not the programs: inputs are padded
+up to **bucket boundaries** (powers of two with a floor), compiled
+programs are memoized in a :class:`PlanCache` keyed by
+``(op, backend, bucket(s), n_words, static config)``, and the dynamic
+part of the shape travels as data — either a valid-count scalar operand or
+sentinel padding rows that sort strictly after every real row.  A serving
+load whose sizes drift within a bucket replays one compiled program
+forever; crossing a bucket boundary costs exactly one new compile.
+
+Padding discipline (what keeps byte-identity):
+
+* **sort / merge / fused extract+sort** — pad rows carry the all-ones
+  sentinel key and row ids from a reserved range (``>= 2**31``, above any
+  real row position, which the backend contract bounds by ``n < 2**31``).
+  Under the (key, row) determinism contract the pads therefore compare
+  strictly after every real pair — equal-key ties break on the row id —
+  so the first ``n`` output rows are bit-for-bit the unpadded result and
+  the pads are sliced off before anything downstream sees them.
+* **build / refresh** — pads are inert garbage lanes: every consumer
+  clips its gathers to the valid count (carried as a dynamic scalar
+  operand) and the padded tail is sliced off host-side.
+
+Counters: ``hits``/``misses`` count cache lookups; ``traces`` counts
+actual program *tracings* (the Python body of a cached program runs only
+while JAX traces it, so the counter increments exactly once per compile).
+``assert cache.stats()["traces"]`` unchanged across a call is the strong
+form of "zero recompilations" the regression tests use.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BUCKET_MIN",
+    "ROW_PAD_A",
+    "ROW_PAD_B",
+    "bucket",
+    "PlanCache",
+    "get_cache",
+    "reset_cache",
+    "cache_stats",
+    "pad_rows_2d",
+    "pad_rows_1d",
+    "pad_run",
+    "sort_padded",
+    "merge_padded",
+    "fused_extract_sort_padded",
+    "adjacent_dpos_padded",
+]
+
+#: bucket floor — tiny inputs share one program instead of one per size
+BUCKET_MIN = 256
+
+#: sentinel key word for pad rows (sorts last; ties break on the row id)
+SENTINEL = np.uint32(0xFFFFFFFF)
+
+#: pad row-id bases: above any real row position (the backend contract has
+#: rows in [0, n) with n < 2**31) and distinct between the two merge runs
+ROW_PAD_A = np.uint32(0x80000000)
+ROW_PAD_B = np.uint32(0xC0000000)
+
+
+def bucket(n: int, minimum: int = BUCKET_MIN) -> int:
+    """Smallest power of two >= max(n, minimum)."""
+    n = max(int(n), int(minimum))
+    return 1 << (n - 1).bit_length()
+
+
+@dataclass
+class PlanCache:
+    """Memoized compiled programs + hit/miss/trace counters."""
+
+    programs: dict = field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+    traces: int = 0
+
+    def program(self, key: tuple, builder: Callable[[], Callable]) -> Callable:
+        """The compiled program for ``key``, building it on first use."""
+        prog = self.programs.get(key)
+        if prog is None:
+            self.misses += 1
+            prog = builder()
+            self.programs[key] = prog
+        else:
+            self.hits += 1
+        return prog
+
+    def jit(self, fn: Callable, **jit_kwargs) -> Callable:
+        """``jax.jit`` with trace counting: the wrapper body executes only
+        while JAX traces, so ``traces`` counts compilations, not calls."""
+
+        def traced(*args, **kwargs):
+            self.traces += 1
+            return fn(*args, **kwargs)
+
+        return jax.jit(traced, **jit_kwargs)
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "programs": len(self.programs),
+            "hits": self.hits,
+            "misses": self.misses,
+            "traces": self.traces,
+        }
+
+    def reset(self) -> None:
+        self.programs.clear()
+        self.hits = self.misses = self.traces = 0
+
+
+_GLOBAL = PlanCache()
+
+
+def get_cache() -> PlanCache:
+    """The process-global cache every backend shares by default."""
+    return _GLOBAL
+
+
+def reset_cache() -> None:
+    _GLOBAL.reset()
+
+
+def cache_stats() -> dict[str, Any]:
+    return _GLOBAL.stats()
+
+
+# ---------------------------------------------------------------------------
+# padding helpers
+# ---------------------------------------------------------------------------
+
+def pad_rows_2d(x: jnp.ndarray, rows: int, fill) -> jnp.ndarray:
+    """Pad the leading axis of (n, W) to ``rows`` with ``fill``."""
+    pad = rows - int(x.shape[0])
+    if pad <= 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((pad,) + tuple(x.shape[1:]), fill, x.dtype)], axis=0
+    )
+
+
+def pad_rows_1d(x: jnp.ndarray, rows: int, fill) -> jnp.ndarray:
+    pad = rows - int(x.shape[0])
+    if pad <= 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+def pad_run(
+    keys: jnp.ndarray, rows: jnp.ndarray, b: int, row_base: np.uint32 = ROW_PAD_A
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad a (key, row) run to ``b`` rows with sentinel pairs that sort last."""
+    n = int(keys.shape[0])
+    pad = b - n
+    if pad <= 0:
+        return jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32)
+    keys_p = pad_rows_2d(jnp.asarray(keys, jnp.uint32), b, SENTINEL)
+    rows_p = jnp.concatenate(
+        [
+            jnp.asarray(rows, jnp.uint32),
+            jnp.uint32(row_base) + jnp.arange(pad, dtype=jnp.uint32),
+        ]
+    )
+    return keys_p, rows_p
+
+
+# ---------------------------------------------------------------------------
+# bucketed stage wrappers
+# ---------------------------------------------------------------------------
+
+def sort_padded(
+    keys: jnp.ndarray,
+    rows: jnp.ndarray,
+    *,
+    backend: str = "jnp",
+    impl: Callable | None = None,
+    extra_key: tuple = (),
+    cache: PlanCache | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bucketed keyed sort: one compiled program per (backend, bucket, W).
+
+    ``impl(keys_pad, rows_pad) -> (keys_sorted, rows_sorted)`` is the
+    backend's sort body (default: the jnp keyed sort); it runs inside one
+    jitted, cached program over the padded shapes.
+    """
+    cache = cache or _GLOBAL
+    n, w = int(keys.shape[0]), int(keys.shape[1])
+    b = bucket(n)
+    if impl is None:
+        from .dbits import sort_words_keyed
+
+        impl = sort_words_keyed
+    prog = cache.program(
+        ("sort", backend, b, w) + extra_key, lambda: cache.jit(impl)
+    )
+    kp, rp = pad_run(keys, rows, b)
+    ks, rs = prog(kp, rp)
+    return ks[:n], rs[:n]
+
+
+def merge_padded(
+    keys_a: jnp.ndarray,
+    rows_a: jnp.ndarray,
+    keys_b: jnp.ndarray,
+    rows_b: jnp.ndarray,
+    *,
+    backend: str = "jnp",
+    impl: Callable | None = None,
+    extra_key: tuple = (),
+    cache: PlanCache | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bucketed two-run merge: one program per (backend, bucket_a, bucket_b, W).
+
+    Fixes the per-``(na, nb)`` retrace of the jnp merge (ROADMAP): any
+    (na, nb) inside the same bucket pair replays the cached program.  Pad
+    pairs sort after every real pair (sentinel key, reserved row range,
+    distinct between the runs), so the first ``na + nb`` merged rows are
+    byte-identical to the unpadded merge.
+    """
+    cache = cache or _GLOBAL
+    na, nb = int(keys_a.shape[0]), int(keys_b.shape[0])
+    w = int(keys_a.shape[1])
+    ba, bb = bucket(na), bucket(nb)
+    if impl is None:
+        from .dbits import merge_words_keyed
+
+        impl = merge_words_keyed
+    prog = cache.program(
+        ("merge", backend, ba, bb, w) + extra_key, lambda: cache.jit(impl)
+    )
+    ka, ra = pad_run(keys_a, rows_a, ba, ROW_PAD_A)
+    kb, rb = pad_run(keys_b, rows_b, bb, ROW_PAD_B)
+    km, rm = prog(ka, ra, kb, rb)
+    return km[: na + nb], rm[: na + nb]
+
+
+def fused_extract_sort_padded(
+    words: jnp.ndarray,
+    plan,
+    rows: jnp.ndarray,
+    *,
+    backend: str = "jnp",
+    cache: PlanCache | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bucketed fused extract+sort (one program per bucket *and* plan).
+
+    All-ones pad keys extract to the all-ones compressed pattern — the
+    maximum any real key can compress to, since the slack bits of the last
+    compressed word are zero for every key — and the reserved row range
+    breaks the tie, so pads still sort strictly last.
+    """
+    cache = cache or _GLOBAL
+    n, w = int(words.shape[0]), int(words.shape[1])
+    b = bucket(n)
+
+    def builder():
+        from .compress import extract_bits
+        from .dbits import sort_words_keyed
+
+        def prog(wp, rp):
+            return sort_words_keyed(extract_bits(wp, plan), rp)
+
+        return cache.jit(prog)
+
+    prog = cache.program(("fused", backend, b, w, plan), builder)
+    wp, rp = pad_run(words, rows, b)
+    ks, rs = prog(wp, rp)
+    return ks[:n], rs[:n]
+
+
+def adjacent_dpos_padded(
+    comp_sorted: jnp.ndarray,
+    *,
+    backend: str = "jnp",
+    cache: PlanCache | None = None,
+) -> np.ndarray:
+    """Adjacent distinction-bit positions of a sorted run, bucketed.
+
+    The refresh stage's device half: one cached program per (backend,
+    bucket, Wc) computes all n-1 adjacent D-bit positions; the host half
+    (the scatter-OR into the 32-bit bitmap words) lives in
+    ``repro.core.metadata.meta_on_rebuild``.  Returns (n-1,) int32 with
+    ``NO_DBIT`` at equal-key adjacencies.
+    """
+    cache = cache or _GLOBAL
+    n, wc = int(comp_sorted.shape[0]), int(comp_sorted.shape[1])
+    if n < 2:
+        return np.zeros((0,), np.int32)
+    b = bucket(n)
+
+    def builder():
+        from .dbits import adjacent_dbit_positions
+
+        return cache.jit(adjacent_dbit_positions)
+
+    prog = cache.program(("refresh_dpos", backend, b, wc), builder)
+    comp_pad = pad_rows_2d(jnp.asarray(comp_sorted, jnp.uint32), b, SENTINEL)
+    return np.asarray(prog(comp_pad)[: n - 1], np.int32)

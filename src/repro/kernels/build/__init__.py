@@ -1,0 +1,2 @@
+from . import ops, ref  # noqa: F401
+from .ops import pk_windows, slice_fn  # noqa: F401

@@ -1,0 +1,42 @@
+"""Jit-friendly public wrapper for the pk-window gather kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_TILE, pk_window_planes
+
+
+def pk_windows(
+    words: jnp.ndarray,
+    starts: jnp.ndarray,
+    pk: int,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(m, W) uint32 keys + (m,) start bit positions -> (m,) uint32 windows.
+
+    Pads the entry axis to a tile multiple (pad starts are 0 — harmless
+    garbage lanes, stripped before return), transposes to word planes, and
+    runs the tiled kernel.  Drop-in for ``repro.core.btree._slice_bits``
+    when the window axis is 1-D: the build programs call it through
+    ``slice_fn`` so it traces inside the cached build program.
+    """
+    m, w = words.shape
+    pad = (-m) % tile
+    planes = jnp.asarray(words, jnp.uint32).T
+    starts = jnp.asarray(starts, jnp.int32)
+    if pad:
+        planes = jnp.concatenate([planes, jnp.zeros((w, pad), jnp.uint32)], axis=1)
+        starts = jnp.concatenate([starts, jnp.zeros((pad,), jnp.int32)])
+    out = pk_window_planes(planes, starts, int(pk), tile=tile, interpret=interpret)
+    return out[:m]
+
+
+def slice_fn(tile: int = DEFAULT_TILE, interpret: bool = True):
+    """A ``build_btree(slice_fn=...)``-shaped closure over kernel options."""
+
+    def fn(words, starts, pk):
+        return pk_windows(words, starts, pk, tile=tile, interpret=interpret)
+
+    return fn

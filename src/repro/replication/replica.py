@@ -35,7 +35,7 @@ from repro.core.dbits import (
     rank_in_sorted_keyed,
 )
 from repro.core.keyformat import KeySet  # noqa: F401  (public API type)
-from repro.core.metadata import DSMeta
+from repro.core.metadata import DSMeta, shed_or_pin
 from repro.core.pipeline import ReconstructionPipeline, ReconstructionResult
 
 from .log import ChangeLog
@@ -53,6 +53,7 @@ class Replica:
         backend: str = "jnp",
         config: BTreeConfig = BTreeConfig(),
         backend_opts: dict | None = None,
+        shed_delete_frac: float | None = None,
     ) -> None:
         self.pipeline = ReconstructionPipeline(
             backend=backend, config=config, backend_opts=backend_opts
@@ -66,6 +67,15 @@ class Replica:
             self.result.meta,
             dbitmap=np.array(self.result.extract_bitmap, np.uint32, copy=True),
         )
+        # bitmap shed policy: pinning keeps rebuilds incremental but lets
+        # delete-stale distinction bits accumulate (wider compressed keys).
+        # When the delete volume since the bits were last re-derived crosses
+        # ``shed_delete_frac`` of the index size, adopt the refreshed
+        # (shed) bitmap instead — the next batch pays one full resort under
+        # the narrower projection, then pinning resumes.  ``None`` never
+        # sheds (the PR-2 behavior).
+        self.shed_delete_frac = shed_delete_frac
+        self._deletes_since_shed = 0
         self.applied_lsn = -1
         self.n_applied_batches = 0
 
@@ -99,8 +109,10 @@ class Replica:
             self.result, self.keyset, delta, keep_rows=keep_rows, meta=meta
         )
         self.keyset, self.result = folded, res
-        self._meta = replace(
-            res.meta, dbitmap=np.array(res.extract_bitmap, np.uint32, copy=True)
+        self._meta, shed, self._deletes_since_shed = shed_or_pin(
+            res.meta, res.extract_bitmap,
+            self._deletes_since_shed + n_deleted,
+            self.shed_delete_frac, folded.n,
         )
         self.applied_lsn = log.next_lsn - 1
         self.n_applied_batches += 1
@@ -110,6 +122,8 @@ class Replica:
             "n_delta": n_delta,
             "n_deleted": n_deleted,
             "n_keys": folded.n,
+            "shed_bits": shed,
+            "deletes_since_shed": self._deletes_since_shed,
             "applied_lsn": self.applied_lsn,
             "timings": dict(res.timings),
         }

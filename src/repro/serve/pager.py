@@ -22,13 +22,13 @@ this table, now with its incremental fast path.
 from __future__ import annotations
 
 import bisect
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.btree import search_batch
 from repro.core.keyformat import KeySet
-from repro.core.metadata import DSMeta, meta_on_insert
+from repro.core.metadata import DSMeta, meta_on_insert, shed_or_pin
 from repro.core.pipeline import ReconstructionPipeline
 from repro.core.reconstruct import ReconstructionResult
 from repro.replication import ChangeLog
@@ -46,6 +46,11 @@ class PagedKVManager:
     n_pages: int
     page_tokens: int
     backend: str = "jnp"  # execution backend for index reconstruction
+    #: shed delete-stale distinction bits when frees since the last shed
+    #: exceed this fraction of the live index (None = always pin, PR-2
+    #: behavior; see Replica for the policy rationale)
+    shed_delete_frac: float | None = None
+    _deletes_since_shed: int = 0
     _free: list = field(default_factory=list)
     _table: dict = field(default_factory=dict)  # (seq, page_no) -> phys page
     _index: ReconstructionResult | None = None
@@ -100,6 +105,7 @@ class PagedKVManager:
         if freed:
             # DS-metadata untouched: the lazy delete rule (Theorem 2)
             self._log.append_deletes(freed)
+            self._deletes_since_shed += len(freed)
         self._index_dirty = True
         return len(gone)
 
@@ -145,18 +151,20 @@ class PagedKVManager:
                 self._index, self._base_keyset, delta,
                 keep_rows=keep_rows, meta=self._meta,
             )
+        self._index, self._base_keyset = res, folded
+        # pin the working bitmap to the extraction bitmap so the next
+        # restart can merge instead of resort — unless enough frees
+        # accumulated to shed the delete-stale widened bits (shed_or_pin)
+        self._meta, shed, self._deletes_since_shed = shed_or_pin(
+            res.meta, res.extract_bitmap, self._deletes_since_shed,
+            self.shed_delete_frac, folded.n,
+        )
         self._last_rebuild = {
             "incremental": bool(res.stats.get("incremental", False)),
             "fallback": res.stats.get("incremental_fallback"),
             "log_entries_replayed": len(self._log),
+            "shed_bits": shed,
         }
-        self._index, self._base_keyset = res, folded
-        # pin the working bitmap to what the standing run was extracted
-        # under (a superset of the refreshed bitmap is valid metadata) so
-        # the next restart can merge instead of resort
-        self._meta = replace(
-            res.meta, dbitmap=np.array(res.extract_bitmap, np.uint32, copy=True)
-        )
         self._log = ChangeLog(2, start_lsn=self._log.next_lsn)
         self._index_dirty = False
         return res

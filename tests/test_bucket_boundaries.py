@@ -1,0 +1,113 @@
+"""Hypothesis property tests: shape bucketing is invisible in the output.
+
+For every backend, at sizes straddling bucket boundaries
+(``n = 2^k - 1, 2^k, 2^k + 1``), the bucketed (padded) sort / merge /
+build outputs must be byte-identical to the unpadded references — and the
+plan cache must register hits, not retraces, for repeat calls inside a
+bucket.  (Deterministic versions of the key cases also run without
+hypothesis in test_plancache.py; this module is the randomized sweep.)
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import plancache
+from repro.core.dbits import merge_words_keyed, sort_words_keyed
+from repro.core.keyformat import KeySet
+from repro.core.pipeline import ReconstructionPipeline
+
+BACKENDS = ("jnp", "pallas", "distributed")
+
+
+def _pipe(backend):
+    opts = {"interpret": True} if backend == "pallas" else None
+    return ReconstructionPipeline(backend=backend, backend_opts=opts)
+
+
+def _keyset(rng, n, w=3, mask=0x00FF0F0F):
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(mask)
+    rids = np.arange(n, dtype=np.uint32)
+    rng.shuffle(rids)
+    return KeySet(words=words, lengths=np.full(n, w * 4, np.int32), rids=rids)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    k=st.integers(min_value=8, max_value=10),
+    off=st.sampled_from([-1, 0, 1]),
+    w=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_padded_sort_byte_identical(k, off, w, seed):
+    rng = np.random.default_rng(seed)
+    n = 2**k + off
+    keys = jnp.asarray(
+        rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(0x0FF00FFF)
+    )
+    rows = jnp.asarray(rng.permutation(n).astype(np.uint32))
+    ks_ref, rs_ref = sort_words_keyed(keys, rows)
+    cache = plancache.PlanCache()
+    ks_pad, rs_pad = plancache.sort_padded(keys, rows, cache=cache)
+    np.testing.assert_array_equal(np.asarray(ks_ref), np.asarray(ks_pad))
+    np.testing.assert_array_equal(np.asarray(rs_ref), np.asarray(rs_pad))
+    # repeat call in the same bucket: hit, no trace
+    t0 = cache.stats()["traces"]
+    plancache.sort_padded(keys[: n - 1], rows[: n - 1], cache=cache)
+    if plancache.bucket(n - 1) == plancache.bucket(n):
+        assert cache.stats()["traces"] == t0
+        assert cache.stats()["hits"] >= 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    ka=st.integers(min_value=7, max_value=9),
+    offa=st.sampled_from([-1, 0, 1]),
+    nb=st.integers(min_value=0, max_value=70),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_padded_merge_byte_identical(ka, offa, nb, seed):
+    rng = np.random.default_rng(seed)
+    na = 2**ka + offa
+    keys = rng.integers(0, 2**16, size=(na + nb, 2), dtype=np.uint32)
+    rows = np.arange(na + nb, dtype=np.uint32)
+    a_k, a_r = sort_words_keyed(jnp.asarray(keys[:na]), jnp.asarray(rows[:na]))
+    b_k, b_r = sort_words_keyed(jnp.asarray(keys[na:]), jnp.asarray(rows[na:]))
+    mk_ref, mr_ref = merge_words_keyed(a_k, a_r, b_k, b_r)
+    mk, mr = plancache.merge_padded(a_k, a_r, b_k, b_r, cache=plancache.PlanCache())
+    np.testing.assert_array_equal(np.asarray(mk_ref), np.asarray(mk))
+    np.testing.assert_array_equal(np.asarray(mr_ref), np.asarray(mr))
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    off=st.sampled_from([-1, 0, 1]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_padded_build_parity_across_backends(off, seed):
+    """Sorted keys, rid permutation, every tree level array and the
+    refreshed bitmap agree across all three backends at boundary sizes."""
+    rng = np.random.default_rng(seed)
+    ks = _keyset(rng, 256 + off)
+    ref = _pipe("jnp").run(ks)
+    for backend in BACKENDS[1:]:
+        res = _pipe(backend).run(ks)
+        np.testing.assert_array_equal(
+            np.asarray(ref.comp_sorted), np.asarray(res.comp_sorted)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ref.rid_sorted), np.asarray(res.rid_sorted)
+        )
+        assert len(ref.tree.levels) == len(res.tree.levels)
+        for la, lb in zip(ref.tree.levels, res.tree.levels):
+            for key in la:
+                np.testing.assert_array_equal(np.asarray(la[key]), np.asarray(lb[key]))
+        for key in ref.tree.leaf:
+            np.testing.assert_array_equal(
+                np.asarray(ref.tree.leaf[key]), np.asarray(res.tree.leaf[key])
+            )
+        np.testing.assert_array_equal(ref.meta.dbitmap, res.meta.dbitmap)
