@@ -1,0 +1,121 @@
+"""Streaming replication: apply lag vs batch size per backend.
+
+What the paper's replication claim turns into under the stream layer: a
+replica's **apply lag** — wall time from a batch arriving on the
+transport to the index being current through it — as a function of batch
+size.  Small batches pay fixed per-rebuild overhead more often; large
+batches sort/merge more per rebuild but amortize it.  Because shipped
+batch sizes are bucket-aligned (the primary's coalescing), the steady
+state replays cached compiled programs: the rows record the plan-cache
+``traces`` delta across the steady-state applies, and ``0`` is the
+expected value after warm-up.
+
+Parity is asserted per configuration: after the run the stream-driven
+replica must be byte-identical to the primary's tracked index.
+
+  python -m benchmarks.run --only stream --json BENCH_stream.json
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import plancache
+from repro.core.keyformat import KeySet
+from repro.replication import ChangeLog, QueueTransport, StreamPrimary, StreamReplica
+
+from .common import emit
+
+
+def _base_keyset(rng, n, w=3, mask=0x0FFF0FFF) -> KeySet:
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(mask)
+    return KeySet(
+        words=words,
+        lengths=np.full(n, w * 4, np.int32),
+        rids=np.arange(n, dtype=np.uint32),
+    )
+
+
+def run(
+    n_base: int = 16384,
+    batch_sizes: tuple[int, ...] = (64, 256, 1024),
+    n_batches: int = 8,
+    backends: tuple[str, ...] = ("jnp",),
+) -> list[dict]:
+    """One row per (backend, batch size): apply-lag stats + parity."""
+    print(f"# Streaming replication: {n_base} base keys, "
+          f"batch sizes {list(batch_sizes)}, {n_batches} batches each")
+    rows: list[dict] = []
+    for backend in backends:
+        for batch in batch_sizes:
+            rng = np.random.default_rng(7)
+            t = QueueTransport()
+            prim = StreamPrimary(t, _base_keyset(rng, n_base), backend=backend)
+            rep = StreamReplica(t, backend=backend)
+            rep.poll()  # bring-up from the genesis batch
+            lags: list[float] = []
+            traces0 = None
+            next_rid = n_base
+            for b in range(n_batches):
+                ks = prim.replica.keyset
+                log = ChangeLog(ks.n_words, start_lsn=prim.next_lsn)
+                pick = rng.integers(0, ks.n, size=batch)
+                log.append_inserts(
+                    np.asarray(ks.words)[pick],
+                    np.arange(next_rid, next_rid + batch, dtype=np.uint32),
+                )
+                next_rid += batch
+                dead = rng.choice(np.asarray(ks.rids), size=batch // 4,
+                                  replace=False)
+                log.append_deletes(dead)
+                prim.publish(log)
+                t0 = time.perf_counter()
+                st = rep.poll()
+                lag = time.perf_counter() - t0
+                assert st["applied_batches"] == 1, st
+                if b == 1:  # steady state starts after one warm apply
+                    traces0 = plancache.cache_stats()["traces"]
+                if b >= 1:
+                    lags.append(lag)
+            steady_traces = plancache.cache_stats()["traces"] - traces0
+            parity = bool(
+                np.array_equal(
+                    np.asarray(rep.replica.result.comp_sorted),
+                    np.asarray(prim.replica.result.comp_sorted),
+                )
+                and np.array_equal(
+                    np.asarray(rep.replica.result.rid_sorted),
+                    np.asarray(prim.replica.result.rid_sorted),
+                )
+            )
+            lags.sort()
+            median = lags[len(lags) // 2]
+            row = {
+                "name": f"stream/{backend}/batch{batch}",
+                "backend": backend,
+                "n_base": n_base,
+                "batch_entries": batch + batch // 4,
+                "bucket": plancache.bucket(batch + batch // 4),
+                "n_batches": n_batches,
+                "apply_lag_median_s": median,
+                "apply_lag_max_s": lags[-1],
+                "entries_per_s": (batch + batch // 4) / max(median, 1e-9),
+                "steady_state_traces": steady_traces,
+                "parity": parity,
+            }
+            rows.append(row)
+            emit(
+                f"stream/{backend}/batch{batch}", median,
+                f"lag_median={median*1e3:.1f}ms;"
+                f"entries_per_s={row['entries_per_s']:.0f};"
+                f"steady_traces={steady_traces};parity={parity}",
+            )
+            if not parity:
+                print(f"# WARNING: stream replica diverged on {backend}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

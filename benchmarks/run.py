@@ -17,8 +17,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: pipeline,incremental,build,table1,"
-                         "table2,table3,table4,table5,table6,apps")
+                    help="comma list: pipeline,incremental,build,stream,"
+                         "table1,table2,table3,table4,table5,table6,apps")
     ap.add_argument("--fast", action="store_true", help="smaller datasets")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write structured suite results (timings per stage "
@@ -34,6 +34,7 @@ def main() -> None:
         bench_incremental,
         bench_parallel_scaling,
         bench_pipeline,
+        bench_replication_stream,
         bench_sort_comparison,
         bench_zipf_sensitivity,
     )
@@ -46,6 +47,11 @@ def main() -> None:
         ),
         "build": lambda: bench_build.run(
             n_keys=8192 if args.fast else 65536
+        ),
+        "stream": lambda: bench_replication_stream.run(
+            n_base=4096 if args.fast else 16384,
+            batch_sizes=(64, 256) if args.fast else (64, 256, 1024),
+            n_batches=4 if args.fast else 8,
         ),
         "table1": lambda: bench_construction.run(scale=scale),
         "table2": lambda: bench_datasets.run(scale=scale),

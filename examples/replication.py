@@ -1,165 +1,124 @@
-"""Database-replication scenario (the paper's motivating use case, §1):
+"""Async streaming replication demo: one primary, two lagging replicas.
 
-A "master" trains and checkpoints; a "replica" node brings the state up by
-loading the table (checkpoint payload) and RECONSTRUCTING the search index
-from persisted DS-metadata — no index image ever crosses the wire, exactly
-as in main-memory DBMS replication.  Also demonstrates:
+The paper's motivating scenario (§1, §6) end to end: the wire carries the
+table's change log and checkpoint *manifests* — never an index image —
+and every consumer keeps its index current by reconstructing with the
+compressed key sort:
 
-* **incremental log consumption**: the primary streams
-  ``repro.replication.ChangeLog`` batches; the replica folds each one
-  through ``run_incremental`` — only the delta is sorted and the backend
-  merges it into the standing run;
-* **delta checkpoints**: ``save_checkpoint_delta`` persists just the
-  changed leaves + the manifest change log, and restore replays the log
-  onto the base step;
-* elastic restore (different logical mesh on the replica) and the replica
-  bring-up of *many* indexes at once (§6): ``run_many`` batches the
-  extract+sort of same-shape key sets into one program on jnp and pallas.
+* the **primary** owns the table, ships LSN-ordered ``ChangeLog`` batches
+  over a ``DirectoryTransport`` spool, and checkpoints its state through
+  ``save_checkpoint`` / ``save_checkpoint_delta`` chains;
+* **replica A** tails the stream: every poll folds the pending batches
+  through ONE incremental delta-merge rebuild (sort the delta, merge into
+  the standing run);
+* **replica B** sleeps through most of the stream; bounded-lag
+  backpressure makes the primary checkpoint + truncate the spool, so B is
+  forced onto the catch-up path — restore the checkpoint chain, then tail
+  — and still lands **byte-identical** to A and to the primary.
 
-  PYTHONPATH=src python examples/replication.py
+  PYTHONPATH=src python examples/replication.py [--fast]
 """
 
+import argparse
 import tempfile
 import time
 
-import jax
 import numpy as np
 
-from repro.backends import available_backends
-from repro.ckpt.checkpoint import (
-    CheckpointIndex,
-    restore_checkpoint,
-    save_checkpoint,
-    save_checkpoint_delta,
-)
-from repro.configs import ARCHS
 from repro.configs.paper_index import ZipfConfig
-from repro.core.pipeline import ReconstructionPipeline
 from repro.data.synthetic import zipf_keys
-from repro.models.lm import LM
-from repro.replication import ChangeLog, Replica
+from repro.replication import (
+    ChangeLog,
+    DirectoryTransport,
+    StreamPrimary,
+    StreamReplica,
+)
 
 
-def multi_index_bring_up(n_tables: int = 8, n_keys: int = 4096):
-    """Replica bring-up of many per-table indexes through the pipeline."""
-    print(f"== replica: batched bring-up of {n_tables} table indexes ==")
-    tables = [
-        zipf_keys(ZipfConfig(1.5, 40, 0, n_keys=n_keys), seed=s)
-        for s in range(n_tables)
-    ]
-    pipe = ReconstructionPipeline(backend="jnp")
-    pipe.run_many(tables)  # warm (trace/compile both programs)
-    [pipe.run(t) for t in tables]
-    t0 = time.perf_counter()
-    batched = pipe.run_many(tables)
-    t_batched = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    singles = [pipe.run(t) for t in tables]
-    t_loop = time.perf_counter() - t0
-    same = all(
-        np.array_equal(np.asarray(a.rid_sorted), np.asarray(b.rid_sorted))
-        for a, b in zip(batched, singles)
+def identical(a, b) -> bool:
+    """Byte-identity of two replicas' standing state."""
+    return (
+        np.array_equal(np.asarray(a.result.comp_sorted), np.asarray(b.result.comp_sorted))
+        and np.array_equal(np.asarray(a.result.rid_sorted), np.asarray(b.result.rid_sorted))
+        and np.array_equal(a.meta.dbitmap, b.meta.dbitmap)
+        and a.applied_lsn == b.applied_lsn
     )
-    print(f"   batched {t_batched:.2f}s vs looped {t_loop:.2f}s "
-          f"(identical rid orders: {same})")
-
-    one = tables[0]
-    print("   per-backend reconstruction of one table:")
-    for name in available_backends():
-        res = ReconstructionPipeline(backend=name).run(one)
-        tm = res.timings
-        print(f"     {name:12s} extract {tm['extract']*1e3:7.1f}ms  "
-              f"sort {tm['sort']*1e3:7.1f}ms  build {tm['build']*1e3:7.1f}ms")
 
 
-def replica_log_stream(n_keys: int = 16384, n_batches: int = 3, batch: int = 400):
-    """Primary streams change-log batches; the replica merges, not resorts."""
-    print(f"== replica: incremental consumption of {n_batches} log batches ==")
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes (CI smoke)")
+    ap.add_argument("--backend", default="jnp", help="replica backend (jnp/pallas)")
+    args = ap.parse_args()
+    n_keys = 4096 if args.fast else 32768
+    n_batches = 10 if args.fast else 14
+    batch = 128 if args.fast else 512
+
     rng = np.random.default_rng(0)
     base = zipf_keys(ZipfConfig(1.5, 40, 0, n_keys=n_keys), seed=0)
-    rep = Replica(base)
-    next_rid = int(np.asarray(base.rids).max()) + 1
-    lsn = 0
-    for b in range(n_batches):
-        log = ChangeLog(base.n_words, start_lsn=lsn)
-        # inserts re-draw existing keys (the zipf head), deletes hit live rids
-        pick = rng.integers(0, rep.keyset.n, size=batch)
-        log.append_inserts(
-            np.asarray(rep.keyset.words)[pick],
-            np.arange(next_rid, next_rid + batch, dtype=np.uint32),
-        )
-        next_rid += batch
-        dead = rng.choice(np.asarray(rep.keyset.rids), size=batch // 4, replace=False)
-        log.append_deletes(dead)
-        lsn = log.next_lsn
-        st = rep.apply(log)
-        tm = st["timings"]
-        path = "incremental" if st["incremental"] else f"full ({st['fallback']})"
-        print(f"   batch {b}: {path:12s} +{st['n_delta']} -{st['n_deleted']} "
-              f"-> {st['n_keys']} keys; sort {tm['sort']*1e3:.1f}ms "
-              f"merge {tm.get('merge', 0.0)*1e3:.1f}ms build {tm['build']*1e3:.1f}ms")
-
-
-def main():
-    cfg = ARCHS["llama3-8b"].reduced()
-    model = LM(cfg, remat=False)
-    params = model.init(jax.random.PRNGKey(0))
-    n_leaves = len(jax.tree_util.tree_leaves(params))
 
     with tempfile.TemporaryDirectory() as d:
-        print(f"== master: checkpointing {n_leaves} leaves ==")
-        t0 = time.perf_counter()
-        save_checkpoint(d, step=1000, tree=params,
-                        extra_meta={"step": 1000, "arch": cfg.name})
-        print(f"   saved in {time.perf_counter()-t0:.2f}s "
-              f"(manifest + DS-metadata persisted; NO index image)")
-
-        print("== replica: index reconstruction on load ==")
-        from pathlib import Path
-
-        t0 = time.perf_counter()
-        idx = CheckpointIndex(Path(d) / "step_00001000")
-        st = idx.result.stats
-        print(f"   manifest index rebuilt in {time.perf_counter()-t0:.2f}s: "
-              f"compression {st['compression_ratio']:.2f}:1, "
-              f"height {st['tree_height']}")
-
-        like = jax.tree_util.tree_map(np.zeros_like, params)
-        restored, stats = restore_checkpoint(d, 1000, like)
-        ok = all(
-            np.array_equal(np.asarray(a), np.asarray(b))
-            for a, b in zip(
-                jax.tree_util.tree_leaves(params),
-                jax.tree_util.tree_leaves(restored),
-            )
+        transport = DirectoryTransport(d + "/spool")
+        primary = StreamPrimary(
+            transport, base,
+            ckpt_dir=d + "/ckpt",
+            max_lag_batches=2,       # bounded lag: checkpoint + truncate past 2
+            coalesce_min=batch,      # ship bucket-aligned batches
         )
-        print(f"   {stats['n_leaves']} leaves restored via index lookups; "
-              f"bit-exact: {ok}")
-        print(f"   index rebuild took {stats['index_rebuild_s']*1e3:.1f}ms of "
-              f"the restore path")
+        rep_a = StreamReplica(transport, backend=args.backend)
+        rep_b = StreamReplica(transport, backend=args.backend)
 
-        print("== master: delta checkpoint (changed leaves + change log) ==")
-        bumped = jax.tree_util.tree_map(lambda x: x, params)
-        leaves, tdef = jax.tree_util.tree_flatten(bumped)
-        leaves[0] = leaves[0] + 1.0  # one changed leaf
-        bumped = jax.tree_util.tree_unflatten(tdef, leaves)
-        t0 = time.perf_counter()
-        save_checkpoint_delta(d, step=1001, tree=bumped, base_step=1000)
-        print(f"   delta step saved in {time.perf_counter()-t0:.2f}s "
-              f"(1 changed leaf written; rest referenced from the base)")
-        restored2, stats2 = restore_checkpoint(d, 1001, like)
-        ok2 = all(
-            np.array_equal(np.asarray(a), np.asarray(b))
-            for a, b in zip(
-                jax.tree_util.tree_leaves(bumped),
-                jax.tree_util.tree_leaves(restored2),
+        st = rep_a.poll()
+        print(f"== replica A bring-up from the genesis batch: "
+              f"{st['apply']['n_keys']} keys ==")
+
+        next_rid = n_keys
+        for b in range(n_batches):
+            log = ChangeLog(base.n_words, start_lsn=primary.next_lsn)
+            pick = rng.integers(0, primary.replica.keyset.n, size=batch)
+            log.append_inserts(
+                np.asarray(primary.replica.keyset.words)[pick],
+                np.arange(next_rid, next_rid + batch, dtype=np.uint32),
             )
-        )
-        print(f"   replayed onto base: bit-exact {ok2}, "
-              f"incremental rebuild: {stats2['incremental']}")
+            next_rid += batch
+            dead = rng.choice(np.asarray(primary.replica.keyset.rids),
+                              size=batch // 4, replace=False)
+            log.append_deletes(dead)
+            primary.publish(log)
 
-    replica_log_stream()
-    multi_index_bring_up()
+            t0 = time.perf_counter()
+            st = rep_a.poll()     # A stays current; B sleeps
+            if st["apply"]:
+                a = st["apply"]
+                path = "noop" if a.get("noop") else (
+                    "incremental" if a["incremental"] else f"full ({a['fallback']})")
+                print(f"   batch {b}: A applied {st['applied_batches']} frame(s) "
+                      f"[{path}] +{a['n_delta']} -{a['n_deleted']} "
+                      f"in {(time.perf_counter()-t0)*1e3:.1f}ms "
+                      f"(lsn {st['applied_lsn']}, B lags {rep_b.lag_frames()} frames)")
+
+        print(f"== primary: {primary.stats['n_batches_published']} batches, "
+              f"{primary.stats['ckpt_step']} checkpoint step(s), "
+              f"{primary.stats['transport_retained']} frames retained ==")
+
+        t0 = time.perf_counter()
+        st = rep_b.poll()
+        print(f"== replica B wakes up: catch-up from the checkpoint chain ==")
+        print(f"   catchup={st['catchup']} "
+              f"(truncation jumped: {st['truncated_jump']}), then applied "
+              f"{st['applied_batches']} batch frame(s) in "
+              f"{time.perf_counter()-t0:.2f}s -> lsn {st['applied_lsn']}")
+
+        ok_ab = identical(rep_a.replica, rep_b.replica)
+        ok_ap = identical(rep_a.replica, primary.replica)
+        print(f"   byte-identical: A==B {ok_ab}, A==primary {ok_ap}")
+        if not (ok_ab and ok_ap):
+            raise SystemExit("replicas diverged")
+
+        # a point lookup answers the same everywhere
+        probe = np.asarray(primary.replica.keyset.words)[17]
+        print(f"   probe lookup: primary={primary.replica.search(probe)} "
+              f"A={rep_a.search(probe)} B={rep_b.search(probe)}")
 
 
 if __name__ == "__main__":

@@ -82,6 +82,7 @@ def get_backend(name: str, **opts) -> "ExecutionBackend":
 
 
 def available_backends() -> list[str]:
+    """Sorted names of every registered execution backend."""
     return sorted(_REGISTRY)
 
 

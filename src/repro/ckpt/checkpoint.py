@@ -60,6 +60,7 @@ __all__ = [
     "save_checkpoint_delta",
     "restore_checkpoint",
     "latest_step",
+    "step_manifest",
     "CheckpointIndex",
 ]
 
@@ -90,6 +91,14 @@ def _manifest_key(name: str, shard: int = 0) -> np.ndarray:
 
 def save_checkpoint(ckpt_dir: str | os.PathLike, step: int, tree,
                     extra_meta: dict | None = None) -> Path:
+    """Write a full (base) checkpoint step and commit it atomically.
+
+    Persists every pytree leaf as its own file, the manifest table
+    (hashed-path keys → files), and ONLY the DS-metadata of the manifest
+    keys — the search index is reconstructed on restore, never stored.
+    ``extra_meta`` lands in the step's ``meta.json``.  Returns the
+    committed step directory.
+    """
     root = Path(ckpt_dir)
     final = root / f"step_{step:08d}"
     tmp = root / f".tmp_step_{step:08d}"
@@ -248,6 +257,11 @@ def save_checkpoint_delta(ckpt_dir: str | os.PathLike, step: int, tree,
 
 
 def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
+    """Newest *committed* step number in ``ckpt_dir`` (None when empty).
+
+    Only steps whose DONE marker exists count — a crash mid-save leaves a
+    ``.tmp_step_*`` directory that is never considered.
+    """
     root = Path(ckpt_dir)
     if not root.exists():
         return None
@@ -257,6 +271,35 @@ def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
         if p.name.startswith("step_") and (p / "DONE").exists()
     ]
     return max(steps) if steps else None
+
+
+def step_manifest(ckpt_dir: str | os.PathLike, step: int) -> dict:
+    """Describe a committed step for publication on a replication stream.
+
+    Returns ``{"ckpt_dir", "step", "base_step", "delta", "meta"}`` — what a
+    catch-up consumer needs to locate (and fold, if it is a delta chain)
+    the checkpoint: the directory, the step number, the base step a delta
+    step folds onto (``None`` for a full step), and the step's
+    ``meta.json`` contents.  Raises ``FileNotFoundError`` for uncommitted
+    steps, so a manifest can never point at a torn checkpoint.
+    """
+    root = Path(ckpt_dir)
+    step_dir = root / f"step_{step:08d}"
+    if not (step_dir / "DONE").exists():
+        raise FileNotFoundError(f"no committed checkpoint at {step_dir}")
+    meta = json.loads((step_dir / "meta.json").read_text())
+    delta = (step_dir / "delta_log.npz").exists()
+    base = None
+    if delta:
+        with np.load(step_dir / "delta_log.npz") as z:
+            base = int(z["base_step"])
+    return {
+        "ckpt_dir": str(root),
+        "step": int(step),
+        "base_step": base,
+        "delta": delta,
+        "meta": meta,
+    }
 
 
 class CheckpointIndex:
@@ -316,6 +359,10 @@ class CheckpointIndex:
         self.keys = np.asarray(self._keyset.words, np.uint32)
 
     def lookup(self, name: str) -> str:
+        """Point lookup: param path → leaf file (tree search, not a scan).
+
+        Raises ``KeyError`` when the path is not in the manifest.
+        """
         from repro.core.btree import search_batch
         import jax.numpy as jnp
 

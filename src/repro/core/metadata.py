@@ -13,8 +13,12 @@ their correctness arguments are implemented exactly:
 * **rebuild**: compute the bitmap anew from adjacent compressed keys; bits
   that were 0 stay 0, stale bits are shed.
 
-Metadata ops are host-side scalar work (numpy) — they sit on the DB
-transaction path, not the TPU compute path.
+The *update rules* (``meta_on_insert`` etc.) are host-side scalar work
+(numpy) — they sit on the DB transaction path.  The *rebuild-time refresh*
+is not host-side-only: since the compiled-plan work landed, the adjacent
+D-bit positions run as a cached, shape-bucketed device program (the
+backends' ``refresh_meta`` op feeds them in via ``dpos_comp``), and only
+the final scatter-OR into the bitmap words happens here on the host.
 """
 
 from __future__ import annotations

@@ -38,7 +38,7 @@ Extras over the plain flow:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +78,9 @@ class ReconstructionResult:
     stats: dict = field(default_factory=dict)
     row_sorted: jnp.ndarray | None = None
     extract_bitmap: np.ndarray | None = None
+    #: LSN watermark this result is current through (replication consumers
+    #: stamp it via ``run``/``run_incremental``; ``None`` = not log-driven)
+    watermark: int | None = None
 
 
 def identity_meta(keyset: KeySet) -> DSMeta:
@@ -186,13 +189,16 @@ class ReconstructionPipeline:
         keyset: KeySet,
         meta: DSMeta | None = None,
         full_keys: bool = False,
+        watermark: int | None = None,
     ) -> ReconstructionResult:
         """Reconstruct one index.
 
         ``full_keys=True`` runs the uncompressed baseline (Figure 1 top
         flow): identity metadata, extraction skipped, the sort sees the full
         key width.  DS-metadata is then left as-is (the baseline has none to
-        refresh).
+        refresh).  ``watermark`` stamps the result with the LSN it is
+        current through (replication consumers use it for lag accounting
+        and to elide no-op rebuilds).
         """
         words = jnp.asarray(keyset.words, jnp.uint32)
         rids = jnp.asarray(keyset.rids, jnp.uint32)
@@ -256,6 +262,7 @@ class ReconstructionPipeline:
             stats=stats,
             row_sorted=row_sorted,
             extract_bitmap=np.array(meta.dbitmap, np.uint32, copy=True),
+            watermark=watermark,
         )
 
     # -------------------------------------------------- incremental (delta)
@@ -267,6 +274,7 @@ class ReconstructionPipeline:
         *,
         keep_rows: np.ndarray | None = None,
         meta: DSMeta | None = None,
+        watermark: int | None = None,
     ) -> tuple[ReconstructionResult, KeySet]:
         """Fold a change set into ``prev`` without re-sorting the base.
 
@@ -295,6 +303,14 @@ class ReconstructionPipeline:
         projection moved, so ``prev.comp_sorted`` can no longer be merged
         against (e.g. an online insert set a new distinction bit and the
         compressed width or bit set grew).
+
+        ``watermark`` stamps the result with the LSN it is current through.
+        A change set that is *empty* (no deletes, no delta) under unchanged
+        metadata short-circuits entirely: the previous result is returned
+        re-stamped at the new watermark (``stats["noop"] = True``) without
+        touching the device — the heartbeat-batch fast path of the stream
+        layer.  The short-circuit preserves byte-identity because ``prev``
+        already equals a full ``run`` over the (unchanged) folded keyset.
         """
         if meta is None:
             meta = prev.meta
@@ -309,9 +325,31 @@ class ReconstructionPipeline:
         ):
             fallback = "dbitmap_changed"
         if fallback is not None:
-            res = self.run(folded, meta=meta)
+            res = self.run(folded, meta=meta, watermark=watermark)
             res.stats["incremental"] = False
             res.stats["incremental_fallback"] = fallback
+            return res, folded
+
+        # -- empty change set: advance the watermark, skip the rebuild -----
+        if (
+            n_delta == 0
+            and (keep_rows is None or bool(np.asarray(keep_rows, bool).all()))
+            and (
+                meta is prev.meta
+                or np.array_equal(meta.varbitmap, prev.meta.varbitmap)
+            )
+        ):
+            stats = dict(prev.stats)
+            stats.update(incremental=True, noop=True, n_delta=0, n_deleted=0)
+            stats.pop("incremental_fallback", None)
+            timings = {
+                k: 0.0
+                for k in ("meta", "filter", "extract", "sort", "merge",
+                          "build", "refresh_meta", "total")
+            }
+            res = _dc_replace(
+                prev, timings=timings, stats=stats, watermark=watermark
+            )
             return res, folded
 
         plan = meta.plan()
@@ -389,6 +427,7 @@ class ReconstructionPipeline:
             stats=stats,
             row_sorted=row_sorted,
             extract_bitmap=np.array(meta.dbitmap, np.uint32, copy=True),
+            watermark=watermark,
         )
         return res, folded
 

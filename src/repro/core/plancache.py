@@ -113,6 +113,9 @@ class PlanCache:
         return jax.jit(traced, **jit_kwargs)
 
     def stats(self) -> dict[str, Any]:
+        """Counter snapshot: ``programs`` (cached), ``hits``/``misses``
+        (cache lookups), ``traces`` (actual JAX tracings — the number that
+        must stay flat across a warm same-bucket call)."""
         return {
             "programs": len(self.programs),
             "hits": self.hits,
@@ -121,6 +124,7 @@ class PlanCache:
         }
 
     def reset(self) -> None:
+        """Drop every cached program and zero the counters (tests)."""
         self.programs.clear()
         self.hits = self.misses = self.traces = 0
 
@@ -134,10 +138,13 @@ def get_cache() -> PlanCache:
 
 
 def reset_cache() -> None:
+    """Reset the process-global cache (see :meth:`PlanCache.reset`)."""
     _GLOBAL.reset()
 
 
 def cache_stats() -> dict[str, Any]:
+    """Counter snapshot of the process-global cache (see
+    :meth:`PlanCache.stats`); the zero-retrace assertions diff this."""
     return _GLOBAL.stats()
 
 
@@ -156,6 +163,8 @@ def pad_rows_2d(x: jnp.ndarray, rows: int, fill) -> jnp.ndarray:
 
 
 def pad_rows_1d(x: jnp.ndarray, rows: int, fill) -> jnp.ndarray:
+    """Pad a (n,) vector to ``rows`` with ``fill`` (1-D twin of
+    :func:`pad_rows_2d`)."""
     pad = rows - int(x.shape[0])
     if pad <= 0:
         return x

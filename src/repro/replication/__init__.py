@@ -1,12 +1,53 @@
-"""Replication/delta layer: change logs + incremental replica bring-up.
+"""Replication layer: change logs, replicas, and the async stream.
 
 ``ChangeLog`` is the record-level insert/delete log (LSN-stamped columnar
 arrays, npz-serializable — the checkpoint layer stores one next to a base
 step for delta checkpoints); ``Replica`` consumes log batches and keeps its
 index current through ``ReconstructionPipeline.run_incremental``.
+
+The async stream (``repro.replication.stream``) ships log batches from a
+``StreamPrimary`` to N ``StreamReplica`` consumers over a pluggable
+``transport`` (in-memory queue or spool directory), with LSN-watermark
+idempotency, bounded-lag backpressure, and checkpoint-chain catch-up.
+See docs/replication.md for the protocol.
 """
 
 from .log import OP_DELETE, OP_INSERT, ChangeLog  # noqa: F401
 from .replica import Replica  # noqa: F401
+from .stream import (  # noqa: F401
+    BackpressureError,
+    BatchFrame,
+    CheckpointFrame,
+    LsnGapError,
+    StreamError,
+    StreamPrimary,
+    StreamReplica,
+    decode_frame,
+    encode_frame,
+)
+from .transport import (  # noqa: F401
+    DirectoryTransport,
+    FrameTruncated,
+    QueueTransport,
+    Transport,
+)
 
-__all__ = ["ChangeLog", "Replica", "OP_INSERT", "OP_DELETE"]
+__all__ = [
+    "ChangeLog",
+    "Replica",
+    "OP_INSERT",
+    "OP_DELETE",
+    "Transport",
+    "QueueTransport",
+    "DirectoryTransport",
+    "FrameTruncated",
+    "StreamPrimary",
+    "StreamReplica",
+    "BatchFrame",
+    "CheckpointFrame",
+    "encode_frame",
+    "decode_frame",
+    "StreamError",
+    "LsnGapError",
+    "BackpressureError",
+]

@@ -28,6 +28,7 @@ INSERTs of the same rid both survive the fold and both land in the index.
 
 from __future__ import annotations
 
+import io
 import os
 from pathlib import Path
 
@@ -40,12 +41,45 @@ OP_DELETE = np.uint8(2)
 
 
 class ChangeLog:
-    """Columnar LSN-stamped insert/delete log over (n_words)-word keys."""
+    """Columnar LSN-stamped insert/delete log over (n_words)-word keys.
 
-    def __init__(self, n_words: int, start_lsn: int = 0) -> None:
+    Besides the five entry columns the log can carry the **shed-policy
+    state** of its owner (the ``shed_delete_frac`` configuration and the
+    owner's ``deletes_since_shed`` counter, both set at construction): a
+    consumer that snapshots its apply state by serializing a log — the
+    stream checkpoint frames do exactly this — must resume the bitmap shed
+    policy where it left off, or a caught-up replica's future shed
+    decisions diverge from a never-lagged one's.  Both fields are *pure
+    carried state* (appends do not touch them; the owner tracks its own
+    volume) and round-trip through ``to_npz_dict``/``from_npz_dict`` — and
+    therefore through ``save``/``load`` and the wire framing.
+
+    Parameters
+    ----------
+    n_words:            key width in uint32 words; every appended key must
+                        reshape to ``(m, n_words)``.
+    start_lsn:          LSN of the first entry this log will hold (logs are
+                        contiguous: entry *i* has LSN ``start_lsn + i``).
+    shed_delete_frac:   the owner's shed threshold (carried, not enforced
+                        here — ``repro.core.metadata.shed_or_pin`` applies
+                        it); ``None`` = never shed.
+    deletes_since_shed: resume value for the delete-volume counter.
+    """
+
+    def __init__(
+        self,
+        n_words: int,
+        start_lsn: int = 0,
+        shed_delete_frac: float | None = None,
+        deletes_since_shed: int = 0,
+    ) -> None:
         self.n_words = int(n_words)
         self.start_lsn = int(start_lsn)
         self._next_lsn = int(start_lsn)
+        self.shed_delete_frac = (
+            None if shed_delete_frac is None else float(shed_delete_frac)
+        )
+        self.deletes_since_shed = int(deletes_since_shed)
         # parallel column chunks; concatenated lazily by arrays()
         self._ops: list[np.ndarray] = []
         self._lsns: list[np.ndarray] = []
@@ -70,7 +104,10 @@ class ChangeLog:
         return self._append(OP_INSERT, words, rids, np.asarray(lengths, np.int32))
 
     def append_deletes(self, rids: np.ndarray) -> tuple[int, int]:
-        """Append DELETE entries (by rid; keys are not needed to fold)."""
+        """Append DELETE entries (by rid; keys are not needed to fold).
+
+        Returns the entries' ``[lsn0, lsn1)`` range.
+        """
         rids = np.asarray(rids, np.uint32).reshape(-1)
         m = rids.shape[0]
         return self._append(
@@ -100,6 +137,7 @@ class ChangeLog:
 
     @property
     def next_lsn(self) -> int:
+        """LSN the next appended entry will receive (= end of this log)."""
         return self._next_lsn
 
     def arrays(self) -> dict[str, np.ndarray]:
@@ -183,9 +221,80 @@ class ChangeLog:
         )
         return (None if bool(keep.all()) else keep), delta
 
+    # ------------------------------------------------- slicing / stitching
+    def slice_lsn(self, lsn0: int, lsn1: int) -> "ChangeLog":
+        """The sub-log of entries with LSN in ``[lsn0, lsn1)``.
+
+        The stream layer's replay primitive: a replica that already applied
+        part of a shipped batch (its watermark sits inside the batch's LSN
+        range) slices off the prefix it has seen and applies the rest —
+        which is what makes duplicate/overlapping delivery idempotent.
+        Entries keep their original LSNs; the slice's ``start_lsn`` is the
+        clamped ``lsn0``.  Shed state is *not* carried (a slice is a wire
+        batch, not an owner snapshot).
+        """
+        lsn0 = max(int(lsn0), self.start_lsn)
+        lsn1 = min(int(lsn1), self._next_lsn)
+        out = ChangeLog(self.n_words, start_lsn=lsn0)
+        if lsn1 <= lsn0:
+            out._next_lsn = max(lsn0, lsn1)
+            return out
+        a = self.arrays()
+        m = (a["lsns"] >= np.uint64(lsn0)) & (a["lsns"] < np.uint64(lsn1))
+        out._ops = [a["ops"][m]]
+        out._lsns = [a["lsns"][m]]
+        out._words = [a["words"][m]]
+        out._rids = [a["rids"][m]]
+        out._lengths = [a["lengths"][m]]
+        out._next_lsn = lsn1
+        return out
+
+    @staticmethod
+    def concat(logs: "list[ChangeLog]") -> "ChangeLog":
+        """Stitch LSN-contiguous logs into one (replay order preserved).
+
+        The watermark-triggered rebuild primitive: a replica that drained
+        several pending stream batches folds them through **one**
+        ``run_incremental`` instead of paying one rebuild per batch.  Each
+        ``logs[i+1].start_lsn`` must equal ``logs[i].next_lsn``; key widths
+        must agree.  Shed state is *not* carried (wire batches, not owner
+        snapshots).
+        """
+        if not logs:
+            raise ValueError("concat of no logs")
+        out = ChangeLog(logs[0].n_words, start_lsn=logs[0].start_lsn)
+        expect = logs[0].start_lsn
+        for log in logs:
+            if log.n_words != out.n_words:
+                raise ValueError(
+                    f"key width mismatch: {log.n_words} != {out.n_words}"
+                )
+            if log.start_lsn != expect:
+                raise ValueError(
+                    f"non-contiguous logs: expected lsn {expect}, "
+                    f"got {log.start_lsn}"
+                )
+            a = log.arrays()
+            if a["ops"].size:
+                out._ops.append(a["ops"])
+                out._lsns.append(a["lsns"])
+                out._words.append(a["words"])
+                out._rids.append(a["rids"])
+                out._lengths.append(a["lengths"])
+            expect = log.next_lsn
+        out._next_lsn = expect
+        return out
+
     # ------------------------------------------------------ serialization
     def to_npz_dict(self) -> dict[str, np.ndarray]:
+        """The log as a flat dict of ``log_``-prefixed arrays.
+
+        Embeddable into a larger npz (the delta-checkpoint and stream-frame
+        formats do) — includes the shed-policy state, which must survive
+        the round trip (``shed_delete_frac`` is encoded as NaN when unset).
+        """
         a = self.arrays()
+        frac = np.nan if self.shed_delete_frac is None else self.shed_delete_frac
         return {
             "log_ops": a["ops"],
             "log_lsns": a["lsns"],
@@ -194,11 +303,22 @@ class ChangeLog:
             "log_lengths": a["lengths"],
             "log_n_words": np.asarray(self.n_words, np.int32),
             "log_start_lsn": np.asarray(self.start_lsn, np.int64),
+            "log_shed_frac": np.asarray(frac, np.float64),
+            "log_deletes_since_shed": np.asarray(
+                self.deletes_since_shed, np.int64
+            ),
         }
 
     @staticmethod
     def from_npz_dict(d: dict[str, np.ndarray]) -> "ChangeLog":
-        log = ChangeLog(int(d["log_n_words"]), start_lsn=int(d["log_start_lsn"]))
+        """Inverse of ``to_npz_dict`` (tolerates pre-shed-state archives)."""
+        frac = float(d.get("log_shed_frac", np.nan))
+        log = ChangeLog(
+            int(d["log_n_words"]),
+            start_lsn=int(d["log_start_lsn"]),
+            shed_delete_frac=None if np.isnan(frac) else frac,
+            deletes_since_shed=int(d.get("log_deletes_since_shed", 0)),
+        )
         ops = np.asarray(d["log_ops"], np.uint8)
         if ops.size:
             log._ops = [ops]
@@ -210,11 +330,31 @@ class ChangeLog:
         return log
 
     def save(self, path: str | os.PathLike) -> Path:
+        """Persist as an npz file; inverse of ``load``."""
         path = Path(path)
         np.savez(path, **self.to_npz_dict())
         return path
 
     @staticmethod
     def load(path: str | os.PathLike) -> "ChangeLog":
+        """Load a log persisted by ``save``."""
         with np.load(path) as z:
+            return ChangeLog.from_npz_dict(dict(z))
+
+    # ------------------------------------------------------- wire framing
+    def to_wire(self) -> bytes:
+        """Serialize for a stream transport (the npz archive as bytes).
+
+        The stream layer wraps this payload in a typed frame
+        (``repro.replication.stream.encode_frame``); the bytes themselves
+        are a standard npz, so any npz reader can inspect a captured frame.
+        """
+        buf = io.BytesIO()
+        np.savez(buf, **self.to_npz_dict())
+        return buf.getvalue()
+
+    @staticmethod
+    def from_wire(payload: bytes) -> "ChangeLog":
+        """Inverse of ``to_wire``."""
+        with np.load(io.BytesIO(payload)) as z:
             return ChangeLog.from_npz_dict(dict(z))

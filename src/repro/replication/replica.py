@@ -44,7 +44,25 @@ __all__ = ["Replica"]
 
 
 class Replica:
-    """One replicated index: base bring-up + incremental log consumption."""
+    """One replicated index: base bring-up + incremental log consumption.
+
+    Parameters
+    ----------
+    keyset:             the base table rows (bring-up reconstructs from it).
+    meta:               DS-metadata to extract under; ``None`` derives it
+                        from the keys.  A catch-up bootstrap passes the
+                        checkpointed *working* metadata here, which is what
+                        makes the bootstrapped state byte-identical to a
+                        never-lagged replica's (see ``stream.StreamReplica``).
+    backend:            execution backend name for all rebuilds.
+    config:             B-tree geometry.
+    backend_opts:       forwarded to the backend constructor.
+    shed_delete_frac:   bitmap shed threshold (``None`` = always pin).
+    applied_lsn:        LSN watermark this base state is current through
+                        (``-1`` = nothing applied; a bootstrap resumes at
+                        the checkpoint's watermark).
+    deletes_since_shed: resume value for the shed-policy volume counter.
+    """
 
     def __init__(
         self,
@@ -54,12 +72,16 @@ class Replica:
         config: BTreeConfig = BTreeConfig(),
         backend_opts: dict | None = None,
         shed_delete_frac: float | None = None,
+        applied_lsn: int = -1,
+        deletes_since_shed: int = 0,
     ) -> None:
         self.pipeline = ReconstructionPipeline(
             backend=backend, config=config, backend_opts=backend_opts
         )
         self.keyset = keyset
-        self.result: ReconstructionResult = self.pipeline.run(keyset, meta=meta)
+        self.result: ReconstructionResult = self.pipeline.run(
+            keyset, meta=meta, watermark=applied_lsn if applied_lsn >= 0 else None
+        )
         # the working metadata mirrors the *extraction* bitmap (plus insert
         # bits as batches arrive): keeping it pinned to what comp_sorted was
         # extracted under is what lets consecutive batches stay incremental
@@ -75,27 +97,58 @@ class Replica:
         # the narrower projection, then pinning resumes.  ``None`` never
         # sheds (the PR-2 behavior).
         self.shed_delete_frac = shed_delete_frac
-        self._deletes_since_shed = 0
-        self.applied_lsn = -1
+        self._deletes_since_shed = int(deletes_since_shed)
+        self.applied_lsn = int(applied_lsn)
         self.n_applied_batches = 0
 
     @property
     def tree(self):
+        """The standing partial-key B+tree (current reconstruction)."""
         return self.result.tree
 
     @property
     def meta(self) -> DSMeta:
+        """The working DS-metadata (pinned/shed per the bitmap policy)."""
         return self._meta
+
+    @property
+    def deletes_since_shed(self) -> int:
+        """Delete volume since the D-bitmap was last re-derived (shed
+        policy bookkeeping; snapshotted into checkpoint frames)."""
+        return self._deletes_since_shed
 
     # ------------------------------------------------------------- lookup
     def search(self, query_words: np.ndarray) -> tuple[bool, int]:
+        """Point lookup through the standing tree: ``(found, rid)``."""
         q = jnp.asarray(query_words, jnp.uint32)[None, :]
         found, rid, _ = search_batch(self.result.tree, q)
         return bool(found[0]), int(rid[0])
 
     # -------------------------------------------------------------- apply
+    def apply_many(self, logs: "list[ChangeLog]") -> dict:
+        """Fold several LSN-contiguous batches through ONE rebuild.
+
+        The watermark-triggered form of ``apply``: a consumer that drained
+        multiple pending stream batches stitches them (``ChangeLog.concat``
+        checks contiguity) and pays one fold + one incremental
+        reconstruction for the whole span, instead of one rebuild per
+        batch.  Returns the same stats dict as ``apply``.
+        """
+        return self.apply(ChangeLog.concat(logs))
+
     def apply(self, log: ChangeLog) -> dict:
-        """Fold one log batch into the standing index; returns apply stats."""
+        """Fold one log batch into the standing index.
+
+        Deletes become a keep-mask over the base rows, surviving inserts
+        the delta keyset; DS-metadata advances by the vectorized §4.3
+        insert rule *before* the rebuild so the extraction plan covers the
+        batch.  The rebuild runs ``ReconstructionPipeline.run_incremental``
+        — byte-identical to a full ``run`` over the folded keyset (empty
+        batches short-circuit through the pipeline's no-op fast path and
+        only advance the watermark).  Returns apply stats: which path ran
+        (``incremental`` / ``fallback`` / ``noop``), churn counts, shed
+        policy state, the new ``applied_lsn``, and per-stage timings.
+        """
         if log.n_words != self.keyset.n_words:
             raise ValueError(
                 f"log key width {log.n_words} != index width {self.keyset.n_words}"
@@ -106,7 +159,8 @@ class Replica:
         meta = self._insert_rule(delta.words) if n_delta else self._meta
 
         res, folded = self.pipeline.run_incremental(
-            self.result, self.keyset, delta, keep_rows=keep_rows, meta=meta
+            self.result, self.keyset, delta, keep_rows=keep_rows, meta=meta,
+            watermark=log.next_lsn - 1,
         )
         self.keyset, self.result = folded, res
         self._meta, shed, self._deletes_since_shed = shed_or_pin(
@@ -119,6 +173,7 @@ class Replica:
         return {
             "incremental": bool(res.stats.get("incremental")),
             "fallback": res.stats.get("incremental_fallback"),
+            "noop": bool(res.stats.get("noop", False)),
             "n_delta": n_delta,
             "n_deleted": n_deleted,
             "n_keys": folded.n,

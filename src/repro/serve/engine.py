@@ -39,6 +39,7 @@ class ServeEngine:
         self._decode = jax.jit(self.model.decode_step)
         self._cache = None
         self._pos = 0
+        self._follow = None
 
     def admit(self, tokens: np.ndarray, extras: dict | None = None) -> jnp.ndarray:
         """Prefill a (B, T) batch of prompts; returns last-token logits."""
@@ -93,6 +94,19 @@ class ServeEngine:
         )
 
     # ------------------------------------------------------- fault recovery
+    def follow(self, stream_replica) -> None:
+        """Run this engine as a streaming standby of another engine's pager.
+
+        ``stream_replica`` is a ``repro.replication.StreamReplica`` over
+        the transport a primary pager publishes to (see
+        ``PagedKVManager.attach_stream``).  From then on ``restart``
+        replays the *stream* instead of the local journal: the standby's
+        page index is reconstructed from the primary's shipped change-log
+        batches, so a failover starts from a warm, current index without
+        ever receiving an index image.
+        """
+        self._follow = stream_replica
+
     def restart(self, backend: str | None = None) -> dict:
         """Simulated engine restart: decode state dropped, page index
         reconstructed from the page table (paper §5 applied to serving).
@@ -100,7 +114,36 @@ class ServeEngine:
         (defaults to the pager's configured backend).  After the first
         restart the pager replays its mutation log through the incremental
         delta-merge path — ``incremental``/``log_entries_replayed`` in the
-        returned stats say which path ran and how much churn it folded."""
+        returned stats say which path ran and how much churn it folded.
+        A following standby (``follow``) instead drains its stream replica
+        and reports the stream watermark/lag alongside the rebuild stats;
+        the stream replica's backend is fixed at construction, so passing
+        ``backend`` to a following restart is an error, not a silent no-op.
+        """
+        if self._follow is not None:
+            if backend is not None:
+                raise ValueError(
+                    "a following standby rebuilds on its StreamReplica's "
+                    "backend; construct the replica with backend=... instead"
+                )
+            poll = self._follow.poll()
+            rep = self._follow.replica
+            if rep is None:
+                raise RuntimeError("standby stream has delivered no state yet")
+            res = rep.result
+            st = poll.get("apply") or {}
+            return {
+                "index_height": res.tree.height,
+                "compression_ratio": res.stats["compression_ratio"],
+                "backend": res.stats["backend"],
+                "followed_stream": True,
+                "applied_lsn": poll["applied_lsn"],
+                "lag_frames": poll["lag_frames"],
+                "catchup": poll["catchup"],
+                "incremental": bool(st.get("incremental", False)),
+                "log_entries_replayed": st.get("n_delta", 0)
+                + st.get("n_deleted", 0),
+            }
         res = self.pager.rebuild_index(backend=backend)
         tm = res.timings
         stage_keys = ("meta", "extract", "sort", "build", "refresh_meta",

@@ -57,6 +57,7 @@ class PagedKVManager:
     _index_dirty: bool = True
     # replication journal + incremental-rebuild state
     _log: ChangeLog = field(default_factory=lambda: ChangeLog(2), repr=False)
+    _stream: object | None = field(default=None, repr=False)
     _base_keyset: KeySet | None = field(default=None, repr=False)
     _meta: DSMeta | None = field(default=None, repr=False)
     _sorted_keys: list | None = field(default=None, repr=False)
@@ -124,6 +125,27 @@ class PagedKVManager:
             self._sorted_keys = sorted(self._table)
         return self._sorted_keys
 
+    # ---------------------------------------------------------- streaming
+    def attach_stream(self, primary) -> None:
+        """Ship this pager's journal over a replication stream.
+
+        ``primary`` is a fire-and-forget ``repro.replication.StreamPrimary``
+        (``keyset=None, n_words=2``) over any transport.  From then on,
+        every ``rebuild_index`` also publishes the log batch it drains —
+        a standby engine following the stream (``ServeEngine.follow``)
+        keeps a warm copy of the page index and its restart replays the
+        stream instead of a local journal.  Attach before the first
+        mutation so the stream carries the table from LSN 0.
+        """
+        if primary.n_words != 2:
+            raise ValueError("page-table stream must carry 2-word keys")
+        if primary.next_lsn != self._log.start_lsn:
+            raise ValueError(
+                f"stream at LSN {primary.next_lsn} cannot carry a journal "
+                f"starting at {self._log.start_lsn}"
+            )
+        self._stream = primary
+
     # ---------------------------------------------------------------- index
     def rebuild_index(self, backend: str | None = None) -> ReconstructionResult:
         """Reconstruct the page-table B-tree (the paper's recovery path).
@@ -165,6 +187,10 @@ class PagedKVManager:
             "log_entries_replayed": len(self._log),
             "shed_bits": shed,
         }
+        if self._stream is not None and len(self._log):
+            # ship the drained journal batch before resetting it: a standby
+            # following the stream replays exactly what this rebuild folded
+            self._stream.publish(self._log)
         self._log = ChangeLog(2, start_lsn=self._log.next_lsn)
         self._index_dirty = False
         return res

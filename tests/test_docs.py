@@ -1,0 +1,81 @@
+"""Docs enforcement: public-surface docstrings + markdown health.
+
+A pydocstyle-lite AST check: every public module / class / function /
+method on the repo's public surface (the pipeline, the replication
+layer, the plan cache, the backend op contract) must carry a docstring —
+args/returns/determinism-contract notes live there, and an undocumented
+public entry point is a review failure, not a style nit.  Plus the
+``tools/check_docs.py`` link/drift checker, so the tier-1 suite (and CI)
+fails on a broken intra-repo link or an undocumented new subsystem.
+"""
+
+import ast
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src" / "repro"
+
+#: the enforced public surface (satellite scope: grow it as modules join)
+SURFACE = [
+    SRC / "core" / "pipeline.py",
+    SRC / "core" / "plancache.py",
+    SRC / "backends" / "base.py",
+    SRC / "replication" / "log.py",
+    SRC / "replication" / "replica.py",
+    SRC / "replication" / "stream.py",
+    SRC / "replication" / "transport.py",
+    SRC / "ckpt" / "checkpoint.py",
+]
+
+
+def _public_defs(path: Path):
+    """Yield (qualname, node) for the module + public defs/classes."""
+    tree = ast.parse(path.read_text())
+    yield f"{path.name} (module)", tree
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                yield node.name, node
+        elif isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
+            yield node.name, node
+            for sub in node.body:
+                # __init__ (underscored) documents via the class docstring
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if not sub.name.startswith("_"):
+                        yield f"{node.name}.{sub.name}", sub
+
+
+@pytest.mark.parametrize("path", SURFACE, ids=lambda p: str(p.relative_to(SRC)))
+def test_public_surface_has_docstrings(path):
+    missing = [
+        name
+        for name, node in _public_defs(path)
+        if ast.get_docstring(node) is None
+    ]
+    assert not missing, (
+        f"{path.relative_to(REPO)}: public surface without docstrings: "
+        f"{', '.join(missing)}"
+    )
+
+
+def test_docs_links_and_module_list():
+    """tools/check_docs.py must pass (broken links / module drift fail)."""
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py")],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_docs_exist_and_linked_from_readme():
+    """The four docs exist and the README links every one of them."""
+    readme = (REPO / "README.md").read_text()
+    for doc in ("architecture.md", "replication.md", "adding-a-backend.md",
+                "benchmarks.md"):
+        assert (REPO / "docs" / doc).exists(), f"docs/{doc} missing"
+        assert f"docs/{doc}" in readme, f"README does not link docs/{doc}"

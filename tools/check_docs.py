@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Docs health check: intra-repo links resolve, docs track the modules.
+
+Two failure classes, both cheap to check and expensive to let rot:
+
+1. **Broken intra-repo markdown links** — every ``[text](target)`` in the
+   repo's markdown whose target is a relative path must point at an
+   existing file (anchors are stripped; external schemes and bare anchors
+   are ignored).
+2. **Docs drifting from the module list** — every package directory under
+   ``src/repro`` (and the top-level ``compat`` module) must be mentioned
+   in ``docs/architecture.md``; a new subsystem without an architecture
+   note fails CI until it is documented.
+
+Run from anywhere: ``python tools/check_docs.py``.  Exit code 0 = healthy.
+Also invoked by ``tests/test_docs.py`` so the tier-1 suite carries it.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__", ".tmp"}
+
+
+def markdown_files() -> list[Path]:
+    """Every tracked-looking markdown file in the repo."""
+    out = []
+    for p in REPO.rglob("*.md"):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            out.append(p)
+    return sorted(out)
+
+
+def check_links() -> list[str]:
+    """Broken relative links as ``file: target`` error strings."""
+    errors = []
+    for md in markdown_files():
+        for target in MD_LINK.findall(md.read_text()):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+                continue
+            if target.startswith("#"):  # intra-document anchor
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def check_module_drift() -> list[str]:
+    """src/repro packages missing from docs/architecture.md."""
+    arch = REPO / "docs" / "architecture.md"
+    if not arch.exists():
+        return ["docs/architecture.md is missing"]
+    text = arch.read_text()
+    errors = []
+    pkg_root = REPO / "src" / "repro"
+    modules = sorted(
+        p.name for p in pkg_root.iterdir()
+        if p.is_dir() and (p / "__init__.py").exists()
+    ) + ["compat"]
+    for mod in modules:
+        if not re.search(rf"\b{re.escape(mod)}\b", text):
+            errors.append(
+                f"docs/architecture.md: module 'repro.{mod}' is not mentioned"
+            )
+    return errors
+
+
+def main() -> int:
+    """Run both checks; print findings; nonzero exit on any."""
+    errors = check_links() + check_module_drift()
+    for e in errors:
+        print(f"FAIL {e}")
+    n_md = len(markdown_files())
+    if errors:
+        print(f"docs check: {len(errors)} problem(s) across {n_md} markdown files")
+        return 1
+    print(f"docs check ok: {n_md} markdown files, links + module list clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
