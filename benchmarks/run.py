@@ -17,8 +17,9 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: pipeline,incremental,build,stream,"
-                         "table1,table2,table3,table4,table5,table6,apps")
+                    help="comma list: pipeline,incremental,build,lookup,"
+                         "stream,table1,table2,table3,table4,table5,table6,"
+                         "apps")
     ap.add_argument("--fast", action="store_true", help="smaller datasets")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write structured suite results (timings per stage "
@@ -32,6 +33,7 @@ def main() -> None:
         bench_datasets,
         bench_dbit_distribution,
         bench_incremental,
+        bench_lookup,
         bench_parallel_scaling,
         bench_pipeline,
         bench_replication_stream,
@@ -47,6 +49,10 @@ def main() -> None:
         ),
         "build": lambda: bench_build.run(
             n_keys=8192 if args.fast else 65536
+        ),
+        "lookup": lambda: bench_lookup.run(
+            n_keys=8192 if args.fast else 65536,
+            n_rebuilds=2 if args.fast else 4,
         ),
         "stream": lambda: bench_replication_stream.run(
             n_base=4096 if args.fast else 16384,

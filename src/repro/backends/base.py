@@ -37,6 +37,15 @@ fused extract+sort, the batched path) run through
 compiled program is memoized per ``(op, backend, bucket, n_words,
 static config)``, so drifting sizes under a churny serving load replay
 cached programs instead of retracing.
+
+The read path adds a fourth data-parallel family, ``lookup``: batched
+point lookups against a built tree, plan-cached per query-batch bucket.
+The contract is byte-identity again — ``(found, rid)`` with miss lanes
+normalized to ``repro.core.btree.NOT_FOUND_RID`` must be bit-for-bit
+equal across backends (jnp full-key descent, the pallas partial-key
+probe kernel, distributed owner-shard routing), which is what lets a
+reader switch substrates — or snapshot epochs built on different
+substrates — without ever seeing a divergent answer.
 """
 
 from __future__ import annotations
@@ -184,6 +193,26 @@ class ExecutionBackend(abc.ABC):
         return build_btree(
             comp_sorted, row_sorted, meta, words, lengths, config,
             rids=rids, backend_name=self.name,
+        )
+
+    # ------------------------------------------------------------- lookup
+    def lookup(
+        self, tree, queries: jnp.ndarray
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched point lookup: (q, W) queries -> ((q,) found, (q,) rid).
+
+        Miss lanes carry ``repro.core.btree.NOT_FOUND_RID``; outputs must
+        be byte-identical across backends (the read-path analogue of the
+        sort contract).  The default is the plan-cached full-key descent —
+        one compiled program per query-batch bucket, so a steady query
+        stream at drifting batch sizes replays without retracing.
+        Backends substitute their own leaf probe (the pallas partial-key
+        kernel) or routing (the distributed owner shards).
+        """
+        from repro.core.btree import lookup_batch_planned
+
+        return lookup_batch_planned(
+            tree, jnp.asarray(queries, jnp.uint32), backend_name=self.name
         )
 
     # ------------------------------------------------------- refresh meta

@@ -160,6 +160,63 @@ class DistributedBackend(ExecutionBackend):
         self.last_info = {"mesh_devices": p, "delta_routed": routed}
         return jnp.concatenate(parts_k, axis=0), jnp.concatenate(parts_r, axis=0)
 
+    def lookup(self, tree, queries):
+        """Owner-shard routed point lookups.
+
+        The sorted key space is range-partitioned into ``p`` contiguous
+        chunks (the same partition the sample sort produced); each query
+        is routed to the chunk that owns its key range — one vectorized
+        compare against the ``p - 1`` chunk boundary keys — and every
+        owner answers its group through the shared plan-cached lookup
+        program.  Group sizes drift with the query mix, so the bucketed
+        program is what keeps a steady routed stream replay-only; answers
+        are scattered back into query order, byte-identical to the
+        unrouted oracle because each query's answer is independent of its
+        group.  ``last_info["lookup_routed"]`` records the per-shard
+        query counts.
+        """
+        from repro.core.btree import NOT_FOUND_RID, lookup_batch_planned
+        from repro.core.dbits import lex_compare_le
+
+        queries = jnp.asarray(queries, jnp.uint32)
+        q = int(queries.shape[0])
+        p = self.n_devices
+        n = int(tree.n_keys)
+        if p == 1 or q == 0 or n < p:
+            out = lookup_batch_planned(tree, queries, backend_name=self.name)
+            self.last_info = {"mesh_devices": p, "lookup_routed": [q]}
+            return out
+        chunk = -(-n // p)
+        # boundary b is the first key of chunk b+1; a query belongs to the
+        # last chunk whose boundary is <= it (compare over all boundaries
+        # at once — log-free, p is the mesh size)
+        bounds = tree.sorted_full[
+            jnp.minimum(jnp.arange(1, p, dtype=jnp.int32) * chunk, n - 1)
+        ]
+        owner = np.asarray(
+            jnp.sum(
+                lex_compare_le(bounds[None, :, :], queries[:, None, :]).astype(
+                    jnp.int32
+                ),
+                axis=1,
+            )
+        )
+        found = np.zeros((q,), bool)
+        rid = np.full((q,), NOT_FOUND_RID, np.uint32)
+        routed = []
+        for i in range(p):
+            sel = np.nonzero(owner == i)[0]
+            routed.append(int(sel.size))
+            if not sel.size:
+                continue
+            f, r = lookup_batch_planned(
+                tree, jnp.take(queries, sel, axis=0), backend_name=self.name
+            )
+            found[sel] = np.asarray(f)
+            rid[sel] = np.asarray(r)
+        self.last_info = {"mesh_devices": p, "lookup_routed": routed}
+        return jnp.asarray(found), jnp.asarray(rid, jnp.uint32)
+
     def sample_sort_raw(self, keys, rows):
         """Device-side sample sort with overflow retry: the shard-padded
         ``DistSortResult`` (keys/rids/valid stay device arrays; no host

@@ -10,7 +10,9 @@ plan cache (``repro.core.plancache``): inputs pad to power-of-two buckets
 with sentinel rows that sort strictly last, and the compiled program is
 memoized per bucket — a churny serving load whose ``n`` / ``(na, nb)``
 drift within a bucket replays one program instead of retracing per shape
-(the ROADMAP's jnp-merge retrace item).
+(the ROADMAP's jnp-merge retrace item).  The ``lookup`` op is inherited
+unchanged: the base class's plan-cached full-key descent *is* the jnp
+oracle the other backends' probes are tested against.
 """
 
 from __future__ import annotations

@@ -27,6 +27,8 @@ from repro.kernels.bitonic import ops as bitonic_ops
 from repro.kernels.bitonic.kernel import DEFAULT_BLOCK
 from repro.kernels.build import ops as build_ops
 from repro.kernels.build.kernel import DEFAULT_TILE as BUILD_TILE
+from repro.kernels.lookup import ops as lookup_ops
+from repro.kernels.lookup.kernel import DEFAULT_TILE as LOOKUP_TILE
 from repro.kernels.merge import ops as merge_ops
 from repro.kernels.merge.kernel import DEFAULT_TILE as MERGE_TILE
 from repro.kernels.pext import ops as pext_ops
@@ -50,6 +52,7 @@ class PallasBackend(ExecutionBackend):
         block: int = DEFAULT_BLOCK,
         merge_tile: int = MERGE_TILE,
         build_tile: int = BUILD_TILE,
+        lookup_tile: int = LOOKUP_TILE,
     ) -> None:
         super().__init__()
         if interpret is None:
@@ -59,6 +62,7 @@ class PallasBackend(ExecutionBackend):
         self.block = int(block)
         self.merge_tile = int(merge_tile)
         self.build_tile = int(build_tile)
+        self.lookup_tile = int(lookup_tile)
         self.last_info = {"interpret": self.interpret}
 
     def extract(self, words: jnp.ndarray, plan: ExtractionPlan) -> jnp.ndarray:
@@ -108,6 +112,23 @@ class PallasBackend(ExecutionBackend):
             backend_name=self.name,
             slice_fn=build_ops.slice_fn(tile=self.build_tile, interpret=self.interpret),
             program_key_extra=(self.build_tile, self.interpret),
+        )
+
+    def lookup(self, tree, queries):
+        """Plan-cached descent with the kernels/lookup partial-key probe
+        at the leaf: candidates are screened by the tiled window kernel
+        and confirmed with the full-key compare — byte-identical to the
+        jnp oracle's unscreened compare by construction."""
+        from repro.core.btree import lookup_batch_planned
+
+        return lookup_batch_planned(
+            tree,
+            jnp.asarray(queries, jnp.uint32),
+            backend_name=self.name,
+            leaf_match_fn=lookup_ops.leaf_match_fn(
+                tile=self.lookup_tile, interpret=self.interpret
+            ),
+            program_key_extra=(self.lookup_tile, self.interpret),
         )
 
     def batched_extract_sort(self, words, bitmaps, rows, plans):

@@ -312,28 +312,41 @@ class CheckpointIndex:
     path ran.  ``files``/``names`` are slot lists: record ids index into
     them, and entries of a delta step refer into the base step's directory
     by relative path.
+
+    The reconstruction is frozen into an epoch-stamped
+    ``repro.core.snapshot.IndexSnapshot`` (the epoch round-trips through
+    the step's ``meta.json`` — a stream-checkpointing primary stores its
+    cell's epoch there and a restore resumes it) and lookups probe the
+    snapshot with the backend's plan-cached ``lookup`` op.
     """
 
     def __init__(self, step_dir: Path, backend: str = "jnp"):
+        from repro.core.snapshot import IndexSnapshot
+
         self.dir = Path(step_dir)
         self.backend = backend
         meta = DSMeta.from_npz_dict(dict(np.load(self.dir / "dsmeta.npz")))
+        step_meta = json.loads((self.dir / "meta.json").read_text())
+        self.snapshot_epoch = int(step_meta.get("snapshot_epoch", 0))
         if (self.dir / "delta_log.npz").exists():
             self._init_delta(meta)
-            return
-        m = np.load(self.dir / "manifest.npz")
-        self.keys = m["keys"].astype(np.uint32)
-        self.files = [str(x) for x in m["files"]]
-        self.names = [str(x) for x in m["names"]]
-        ks = KeySet(
-            words=self.keys,
-            lengths=np.full(len(self.files), 12, np.int32),
-            rids=np.arange(len(self.files), dtype=np.uint32),
+        else:
+            m = np.load(self.dir / "manifest.npz")
+            self.keys = m["keys"].astype(np.uint32)
+            self.files = [str(x) for x in m["files"]]
+            self.names = [str(x) for x in m["names"]]
+            ks = KeySet(
+                words=self.keys,
+                lengths=np.full(len(self.files), 12, np.int32),
+                rids=np.arange(len(self.files), dtype=np.uint32),
+            )
+            # THE paper pipeline: extract by persisted D-bitmap -> sort -> build
+            self._pipe = ReconstructionPipeline(backend=backend)
+            self.result: ReconstructionResult = self._pipe.run(ks, meta=meta)
+            self._keyset = ks
+        self.snapshot = IndexSnapshot.from_result(
+            self.result, epoch=self.snapshot_epoch
         )
-        # THE paper pipeline: extract by persisted D-bitmap -> sort -> build
-        pipe = ReconstructionPipeline(backend=backend)
-        self.result: ReconstructionResult = pipe.run(ks, meta=meta)
-        self._keyset = ks
 
     def _init_delta(self, meta: DSMeta) -> None:
         """Replay-on-restore: fold the base manifest through the log and
@@ -349,8 +362,8 @@ class CheckpointIndex:
         )
         log = ChangeLog.from_npz_dict(d)
         keep_rows, delta = log.fold_keyset(base._keyset)
-        pipe = ReconstructionPipeline(backend=self.backend)
-        self.result, self._keyset = pipe.run_incremental(
+        self._pipe = ReconstructionPipeline(backend=self.backend)
+        self.result, self._keyset = self._pipe.run_incremental(
             base.result, base._keyset, delta, keep_rows=keep_rows, meta=meta
         )
         rel = f"../step_{base_step:08d}/"
@@ -361,13 +374,15 @@ class CheckpointIndex:
     def lookup(self, name: str) -> str:
         """Point lookup: param path → leaf file (tree search, not a scan).
 
-        Raises ``KeyError`` when the path is not in the manifest.
+        Probes the frozen snapshot through the backend's plan-cached
+        ``lookup`` op, so a restore's million-lookup loop replays one
+        compiled program per query-batch bucket.  Raises ``KeyError`` when
+        the path is not in the manifest.
         """
-        from repro.core.btree import search_batch
         import jax.numpy as jnp
 
         q = jnp.asarray(_manifest_key(name))[None, :]
-        found, rid, _ = search_batch(self.result.tree, q)
+        found, rid = self.snapshot.lookup(self._pipe.backend, q)
         if not bool(found[0]):
             raise KeyError(name)
         return self.files[int(rid[0])]
@@ -406,6 +421,7 @@ def restore_checkpoint(ckpt_dir: str | os.PathLike, step: int, like_tree,
         "index_rebuild_s": idx.result.timings["total"],
         "index_backend": idx.result.stats["backend"],
         "incremental": bool(idx.result.stats.get("incremental", False)),
+        "snapshot_epoch": idx.snapshot.epoch,
         "meta": json.loads((step_dir / "meta.json").read_text()),
     }
     return tree, stats

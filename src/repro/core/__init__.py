@@ -12,6 +12,7 @@ from . import (
     metadata,
     pipeline,
     reconstruct,
+    snapshot,
     sortkeys,
 )
 
@@ -25,5 +26,6 @@ __all__ = [
     "metadata",
     "pipeline",
     "reconstruct",
+    "snapshot",
     "sortkeys",
 ]

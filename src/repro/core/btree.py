@@ -38,7 +38,15 @@ from .dbits import (
 )
 from .metadata import DSMeta
 
-__all__ = ["BTreeConfig", "BTree", "build_btree", "search_batch", "search_batch_partial"]
+__all__ = [
+    "BTreeConfig",
+    "BTree",
+    "build_btree",
+    "search_batch",
+    "search_batch_partial",
+    "lookup_batch_planned",
+    "NOT_FOUND_RID",
+]
 
 NODE_BYTES = 256
 LEAF_HEADER = 24 + 8  # header + next-node pointer
@@ -343,11 +351,10 @@ def _first_ge(entry_keys: jnp.ndarray, valid: jnp.ndarray, query: jnp.ndarray) -
     return jnp.where(any_ge, first, last_valid)
 
 
-@jax.jit
-def search_batch(tree: BTree, queries: jnp.ndarray):
-    """Vectorized descent; returns (found (q,), rid (q,), position (q,)).
+def _descend(tree: BTree, queries: jnp.ndarray) -> jnp.ndarray:
+    """Non-leaf descent shared by every search path: (q,) leaf node ids.
 
-    Non-leaf steps compare the query against the entries' *highest index
+    Each level compares the query against the entries' *highest index
     keys* through the highest-key pointer, exactly as the paper's search
     (§4.3) does — a full-key binary comparison per entry, vectorized over
     the node fanout and the query batch.
@@ -361,11 +368,26 @@ def search_batch(tree: BTree, queries: jnp.ndarray):
         e = _first_ge(hi_keys, valid, queries)
         node = jnp.take_along_axis(level["child"][node], e[:, None], axis=1)[:, 0]
         node = jnp.maximum(node, 0)
+    return node
+
+
+def _leaf_keys(tree: BTree, node: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full keys of each descended leaf's entry lanes: (pos0, (q, lc, W))."""
     lc = tree.config.leaf_cap
+    pos0 = node * lc
+    keys = tree.sorted_full[
+        jnp.clip(pos0[:, None] + jnp.arange(lc)[None, :], 0, tree.n_keys - 1)
+    ]
+    return pos0, keys
+
+
+@jax.jit
+def search_batch(tree: BTree, queries: jnp.ndarray):
+    """Vectorized descent; returns (found (q,), rid (q,), position (q,))."""
+    node = _descend(tree, queries)
     rids = tree.leaf["rid"][node]  # (q, c)
     valid = tree.leaf["valid"][node]
-    pos0 = node * lc
-    keys = tree.sorted_full[jnp.clip(pos0[:, None] + jnp.arange(lc)[None, :], 0, tree.n_keys - 1)]
+    pos0, keys = _leaf_keys(tree, node)
     e = _first_ge(keys, valid, queries)
     key_at = jnp.take_along_axis(keys, e[:, None, None], axis=1)[:, 0, :]
     found = jnp.all(key_at == queries, axis=-1)
@@ -383,15 +405,7 @@ def search_batch_partial(tree: BTree, queries: jnp.ndarray):
     which is the partial-key B-tree's cache saving; we report the deref
     count so benchmarks can measure it.
     """
-    q = queries.shape[0]
-    node = jnp.zeros((q,), jnp.int32)
-    for level in tree.levels:
-        hi = level["hi"][node]
-        valid = level["child"][node] >= 0
-        hi_keys = tree.sorted_full[jnp.clip(hi, 0, tree.n_keys - 1)]
-        e = _first_ge(hi_keys, valid, queries)
-        node = jnp.take_along_axis(level["child"][node], e[:, None], axis=1)[:, 0]
-        node = jnp.maximum(node, 0)
+    node = _descend(tree, queries)
     lc = tree.config.leaf_cap
     pk = tree.config.pk_bits
     dpos = tree.leaf["dpos"][node]  # (q, c)
@@ -402,10 +416,91 @@ def search_batch_partial(tree: BTree, queries: jnp.ndarray):
     candidate = (qwin == entry_pk) & valid
     n_deref = jnp.sum(candidate.astype(jnp.int32), axis=1)
     # deref candidates only: compare full keys where candidate
-    pos0 = node * lc
-    keys = tree.sorted_full[jnp.clip(pos0[:, None] + jnp.arange(lc)[None, :], 0, tree.n_keys - 1)]
+    _, keys = _leaf_keys(tree, node)
     eq = jnp.all(keys == queries[:, None, :], axis=-1) & candidate
     found = jnp.any(eq, axis=1)
     e = jnp.argmax(eq, axis=1)
     rid = jnp.take_along_axis(tree.leaf["rid"][node], e[:, None], axis=1)[:, 0]
     return found, jnp.where(found, rid, jnp.uint32(0xFFFFFFFF)), n_deref
+
+
+# ---------------------------------------------------------------------------
+# the lookup backend op: plan-cached batched point lookup
+# ---------------------------------------------------------------------------
+
+#: rid every backend returns for a missing query — lookup results must be
+#: byte-identical across backends, so the miss lane cannot carry whatever
+#: neighbor entry the descent happened to land on
+NOT_FOUND_RID = np.uint32(0xFFFFFFFF)
+
+
+def _leaf_match_full(tree, node, keys, queries):
+    """Default leaf probe: full-key equality over every entry lane."""
+    del tree, node
+    return jnp.all(keys == queries[:, None, :], axis=-1)
+
+
+def _lookup_program(cache, leaf_match_fn):
+    """The batched point-lookup body, one jitted program.
+
+    The descent is ``search_batch``'s (highest-key compares per non-leaf
+    level), but the leaf stage runs a substitutable ``leaf_match_fn(tree,
+    node, keys, queries) -> (q, lc) bool`` — full-key equality on the jnp
+    oracle, the partial-key probe kernel on pallas — and the miss lanes are
+    normalized to ``NOT_FOUND_RID`` so outputs are byte-identical across
+    backends.  Tree geometry (level shapes, ``n_keys``, config) is part of
+    the jit signature: a snapshot of the same-sized index replays the
+    program, a resized one re-traces exactly once (counted by the plan
+    cache's ``traces``).
+    """
+
+    def prog(tree, queries):
+        node = _descend(tree, queries)
+        valid = tree.leaf["valid"][node]
+        _, keys = _leaf_keys(tree, node)
+        eq = leaf_match_fn(tree, node, keys, queries) & valid
+        found = jnp.any(eq, axis=1)
+        e = jnp.argmax(eq, axis=1)
+        rid = jnp.take_along_axis(tree.leaf["rid"][node], e[:, None], axis=1)[:, 0]
+        return found, jnp.where(found, rid, jnp.uint32(NOT_FOUND_RID))
+
+    return cache.jit(prog)
+
+
+def lookup_batch_planned(
+    tree: BTree,
+    queries: jnp.ndarray,
+    *,
+    backend_name: str = "jnp",
+    leaf_match_fn=None,
+    program_key_extra: tuple = (),
+    cache=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched point lookup through the shared plan cache (§4.3 search).
+
+    Returns ``(found (q,) bool, rid (q,) uint32)`` with miss lanes
+    normalized to :data:`NOT_FOUND_RID` — the backend ``lookup`` op's
+    byte-identity contract.  The query batch pads to a plan-cache bucket
+    with all-ones sentinel queries (their lanes are garbage, sliced off
+    before return), so a steady query stream at drifting batch sizes
+    replays one compiled program per bucket.  ``leaf_match_fn`` substitutes
+    the leaf probe (it must imply full-key equality bit-for-bit — see
+    ``_lookup_program``); configuration baked into it travels in
+    ``program_key_extra`` so differently-configured backends never share a
+    cached program.
+    """
+    from . import plancache
+
+    cache = cache or plancache.get_cache()
+    if leaf_match_fn is None:
+        leaf_match_fn = _leaf_match_full
+    queries = jnp.asarray(queries, jnp.uint32)
+    q, w = int(queries.shape[0]), int(queries.shape[1])
+    b = plancache.bucket(q)
+    prog = cache.program(
+        ("lookup", backend_name, b, w) + program_key_extra,
+        lambda: _lookup_program(cache, leaf_match_fn),
+    )
+    qp = plancache.pad_rows_2d(queries, b, 0xFFFFFFFF)
+    found, rid = prog(tree, qp)
+    return found[:q], rid[:q]

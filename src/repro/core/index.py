@@ -8,6 +8,18 @@ rebuild folds everything down via the compressed key sort.  This mirrors
 the paper's premise that indexes are cheap to *reconstruct* and therefore
 need neither eager maintenance of exact metadata nor a durable index image.
 
+Reads go through the versioned snapshot protocol: the standing
+reconstruction is published into a ``repro.core.snapshot.SnapshotCell``
+and every lookup probes *this instance's* epoch with the backend's
+plan-cached ``lookup`` op, then overlays the delta/tombstone view (the
+overlay is only meaningful against the reconstruction it accumulated
+on).  ``rebuild`` publishes the *next* epoch into the shared cell — the
+successor answers from it while the pre-rebuild instance, and any
+reader that acquired the old epoch from the cell, keep their
+pre-rebuild answers (double buffering) — and the scalar ``search`` is a
+thin wrapper over ``search_batch`` so single-query and batched results
+can never diverge.
+
 Mutations are double-entried: the sorted host-side delta/tombstone view
 serves point lookups and neighbor queries (the transaction path), while a
 ``repro.replication.ChangeLog`` keeps the same mutations as LSN-stamped
@@ -29,11 +41,12 @@ from dataclasses import dataclass, field, replace
 import jax.numpy as jnp
 import numpy as np
 
-from .btree import BTreeConfig, search_batch
+from .btree import BTreeConfig
 from .keyformat import KeySet
 from .metadata import DSMeta, meta_on_delete, meta_on_insert
 from .pipeline import ReconstructionPipeline
 from .reconstruct import ReconstructionResult, reconstruct_index
+from .snapshot import SnapshotCell
 
 __all__ = ["OnlineIndex"]
 
@@ -46,6 +59,10 @@ class OnlineIndex:
     result: ReconstructionResult
     config: BTreeConfig = field(default_factory=BTreeConfig)
     backend: str = "jnp"
+    #: the versioned read path: the standing reconstruction is published
+    #: here and every lookup pins an epoch; ``rebuild`` hands the same
+    #: cell to its successor so epochs keep increasing across rebuilds
+    snapshots: SnapshotCell = field(default_factory=SnapshotCell, repr=False)
     _delta: list = field(default_factory=list)  # sorted [(key_tuple, rid)]
     _tombstones: set = field(default_factory=set)  # rids
     # sorted key-tuple cache for neighbor lookups: built lazily from the
@@ -55,6 +72,21 @@ class OnlineIndex:
     # the same mutations as columnar LSN-stamped arrays — the rebuild path
     # (fold + incremental merge) consumes this, never the tuple list
     _log: object | None = field(default=None, repr=False)
+    _lookup_backend: object | None = field(default=None, repr=False)
+    # THIS instance's epoch: searches probe it, not the cell head — the
+    # delta/tombstone overlay only makes sense against the reconstruction
+    # this instance was built from, so a pre-rebuild instance must not
+    # mix its overlay with a successor's tree
+    _snapshot: object | None = field(default=None, repr=False)
+
+    def __post_init__(self):
+        # publish the standing result unless the cell already carries it
+        # (the rebuild path publishes before constructing the successor),
+        # then bind this instance to its own epoch's snapshot
+        cur = self.snapshots.current
+        if cur is None or cur.tree is not self.result.tree:
+            cur = self.snapshots.publish(self.result)
+        self._snapshot = cur
 
     @property
     def log(self):
@@ -77,19 +109,53 @@ class OnlineIndex:
         return self.result.meta
 
     # ----------------------------------------------------------------- search
-    def search(self, query_words: np.ndarray) -> tuple[bool, int]:
-        """Point lookup for a single (W,) key; consults tree + delta - tombstones."""
-        q = jnp.asarray(query_words, jnp.uint32)[None, :]
-        found, rid, _ = search_batch(self.result.tree, q)
-        found, rid = bool(found[0]), int(rid[0])
-        if found and rid in self._tombstones:
-            found = False
-        if not found:
-            key_t = tuple(int(x) for x in np.asarray(query_words))
-            i = bisect.bisect_left(self._delta, (key_t, -1))
-            if i < len(self._delta) and self._delta[i][0] == key_t:
-                return True, self._delta[i][1]
+    def _backend_obj(self):
+        """The lookup backend instance (lazy; matches ``self.backend``)."""
+        if self._lookup_backend is None:
+            from repro.backends import get_backend
+
+            self._lookup_backend = get_backend(self.backend)
+        return self._lookup_backend
+
+    def search_batch(
+        self, query_words: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched point lookup: (q, W) keys -> ((q,) found, (q,) rid).
+
+        The tree probe runs the backend's plan-cached ``lookup`` op
+        against *this instance's* snapshot epoch (the reconstruction the
+        delta/tombstone overlay is relative to — a pre-rebuild instance
+        keeps answering from its own epoch even after a successor
+        publishes); the overlay is applied per query.  Miss lanes carry
+        ``NOT_FOUND_RID`` unless the delta answers them.
+        """
+        q = np.asarray(query_words, np.uint32).reshape(-1, self.keyset.n_words)
+        found, rid = self._backend_obj().lookup(
+            self._snapshot.tree, jnp.asarray(q, jnp.uint32)
+        )
+        found = np.asarray(found, bool).copy()
+        rid = np.array(rid, np.uint32, copy=True)
+        if self._tombstones or self._delta:
+            # only a mutated instance pays the host-side overlay; right
+            # after a rebuild the batched probe is pure device work
+            for i in range(q.shape[0]):
+                if found[i] and int(rid[i]) in self._tombstones:
+                    found[i] = False
+                if not found[i]:
+                    key_t = tuple(int(x) for x in q[i])
+                    j = bisect.bisect_left(self._delta, (key_t, -1))
+                    if j < len(self._delta) and self._delta[j][0] == key_t:
+                        found[i], rid[i] = True, np.uint32(self._delta[j][1])
         return found, rid
+
+    def search(self, query_words: np.ndarray) -> tuple[bool, int]:
+        """Point lookup for a single (W,) key; consults tree + delta - tombstones.
+
+        A thin wrapper over :meth:`search_batch` — the scalar and batched
+        paths share one implementation, so they can never diverge.
+        """
+        found, rid = self.search_batch(np.asarray(query_words, np.uint32)[None, :])
+        return bool(found[0]), int(rid[0])
 
     # ----------------------------------------------------------------- insert
     def insert(self, key_words: np.ndarray, rid: int) -> None:
@@ -162,7 +228,8 @@ class OnlineIndex:
         name = backend or self.backend
         pipe = ReconstructionPipeline(backend=name, config=self.config)
         res, folded = pipe.run_incremental(
-            self.result, self.keyset, delta, keep_rows=keep_rows, meta=self.meta
+            self.result, self.keyset, delta, keep_rows=keep_rows, meta=self.meta,
+            publish_to=self.snapshots,
         )
         # pin the carried bitmap to what the standing run was extracted
         # under (a superset of the refreshed bitmap — valid by Theorem 2) so
@@ -171,4 +238,11 @@ class OnlineIndex:
         res.meta = replace(
             res.meta, dbitmap=np.array(res.extract_bitmap, np.uint32, copy=True)
         )
-        return OnlineIndex(keyset=folded, result=res, config=self.config, backend=name)
+        # the successor shares the cell (external readers acquire epochs
+        # from it); each instance stays bound to its own epoch's snapshot,
+        # so the pre-rebuild instance keeps answering from the pre-rebuild
+        # tree + its own overlay
+        return OnlineIndex(
+            keyset=folded, result=res, config=self.config, backend=name,
+            snapshots=self.snapshots,
+        )

@@ -33,6 +33,13 @@ Extras over the plain flow:
   Output is byte-identical to a full ``run`` over the folded keyset with the
   same DS-metadata; when the D-bitmap changed since the previous extraction
   (the compressed projection moved), it falls back to the full path.
+* **snapshot publication** — ``run``/``run_incremental`` *produce*; they
+  never mutate a reader-visible index in place.  Passing
+  ``publish_to=<repro.core.snapshot.SnapshotCell>`` freezes the finished
+  result into an immutable, epoch-stamped ``IndexSnapshot`` and atomically
+  swaps it in as the cell's next epoch — readers pinned on the previous
+  epoch keep their answers until they release (double buffering); see
+  ``repro.core.snapshot``.
 """
 
 from __future__ import annotations
@@ -190,6 +197,7 @@ class ReconstructionPipeline:
         meta: DSMeta | None = None,
         full_keys: bool = False,
         watermark: int | None = None,
+        publish_to=None,
     ) -> ReconstructionResult:
         """Reconstruct one index.
 
@@ -198,7 +206,9 @@ class ReconstructionPipeline:
         key width.  DS-metadata is then left as-is (the baseline has none to
         refresh).  ``watermark`` stamps the result with the LSN it is
         current through (replication consumers use it for lag accounting
-        and to elide no-op rebuilds).
+        and to elide no-op rebuilds).  ``publish_to`` (a
+        ``repro.core.snapshot.SnapshotCell``) atomically publishes the
+        finished result as the cell's next snapshot epoch before returning.
         """
         words = jnp.asarray(keyset.words, jnp.uint32)
         rids = jnp.asarray(keyset.rids, jnp.uint32)
@@ -253,7 +263,7 @@ class ReconstructionPipeline:
             "total": t_extract + t_sort + t_build,
         }
         stats = self._stats(keyset, meta, comp_sorted, row_sorted, tree, fused_used)
-        return ReconstructionResult(
+        res = ReconstructionResult(
             tree=tree,
             meta=new_meta,
             comp_sorted=comp_sorted,
@@ -264,6 +274,9 @@ class ReconstructionPipeline:
             extract_bitmap=np.array(meta.dbitmap, np.uint32, copy=True),
             watermark=watermark,
         )
+        if publish_to is not None:
+            publish_to.publish(res)
+        return res
 
     # -------------------------------------------------- incremental (delta)
     def run_incremental(
@@ -275,6 +288,7 @@ class ReconstructionPipeline:
         keep_rows: np.ndarray | None = None,
         meta: DSMeta | None = None,
         watermark: int | None = None,
+        publish_to=None,
     ) -> tuple[ReconstructionResult, KeySet]:
         """Fold a change set into ``prev`` without re-sorting the base.
 
@@ -311,6 +325,11 @@ class ReconstructionPipeline:
         touching the device — the heartbeat-batch fast path of the stream
         layer.  The short-circuit preserves byte-identity because ``prev``
         already equals a full ``run`` over the (unchanged) folded keyset.
+
+        ``publish_to`` publishes the result — whichever path produced it,
+        the no-op re-stamp included — as the cell's next snapshot epoch,
+        so a reader pinned on the pre-rebuild epoch keeps serving it while
+        this method runs and epochs stay aligned with watermarks.
         """
         if meta is None:
             meta = prev.meta
@@ -328,6 +347,8 @@ class ReconstructionPipeline:
             res = self.run(folded, meta=meta, watermark=watermark)
             res.stats["incremental"] = False
             res.stats["incremental_fallback"] = fallback
+            if publish_to is not None:
+                publish_to.publish(res)
             return res, folded
 
         # -- empty change set: advance the watermark, skip the rebuild -----
@@ -350,6 +371,8 @@ class ReconstructionPipeline:
             res = _dc_replace(
                 prev, timings=timings, stats=stats, watermark=watermark
             )
+            if publish_to is not None:
+                publish_to.publish(res)
             return res, folded
 
         plan = meta.plan()
@@ -429,6 +452,8 @@ class ReconstructionPipeline:
             extract_bitmap=np.array(meta.dbitmap, np.uint32, copy=True),
             watermark=watermark,
         )
+        if publish_to is not None:
+            publish_to.publish(res)
         return res, folded
 
     def _stats(self, keyset, meta, comp_sorted, row_sorted, tree, fused_used):

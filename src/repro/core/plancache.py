@@ -35,6 +35,11 @@ actual program *tracings* (the Python body of a cached program runs only
 while JAX traces it, so the counter increments exactly once per compile).
 ``assert cache.stats()["traces"]`` unchanged across a call is the strong
 form of "zero recompilations" the regression tests use.
+
+Long-lived servers can bound the cache: ``PlanCache(max_programs=N)``
+evicts the least-recently-used program past the bound (``evictions``
+counts them; an evicted program that is needed again simply rebuilds and
+re-traces).  The default is unbounded — the PR-3 behavior.
 """
 
 from __future__ import annotations
@@ -54,6 +59,7 @@ __all__ = [
     "PlanCache",
     "get_cache",
     "reset_cache",
+    "set_max_programs",
     "cache_stats",
     "pad_rows_2d",
     "pad_rows_1d",
@@ -84,22 +90,45 @@ def bucket(n: int, minimum: int = BUCKET_MIN) -> int:
 
 @dataclass
 class PlanCache:
-    """Memoized compiled programs + hit/miss/trace counters."""
+    """Memoized compiled programs + hit/miss/trace/eviction counters.
+
+    ``max_programs`` (optional) bounds the cache: past the bound the
+    least-recently-used program is evicted (``programs`` is kept in
+    recency order — a hit re-inserts its key at the end).
+    """
 
     programs: dict = field(default_factory=dict)
     hits: int = 0
     misses: int = 0
     traces: int = 0
+    evictions: int = 0
+    max_programs: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.max_programs is not None and int(self.max_programs) < 1:
+            raise ValueError(
+                f"max_programs must be >= 1 or None, got {self.max_programs}"
+            )
 
     def program(self, key: tuple, builder: Callable[[], Callable]) -> Callable:
         """The compiled program for ``key``, building it on first use."""
         prog = self.programs.get(key)
-        if prog is None:
-            self.misses += 1
-            prog = builder()
-            self.programs[key] = prog
-        else:
+        if prog is not None:
             self.hits += 1
+            if self.max_programs is not None:
+                # refresh recency: dicts iterate in insertion order, so
+                # re-inserting makes the oldest entry the LRU victim
+                del self.programs[key]
+                self.programs[key] = prog
+            return prog
+        self.misses += 1
+        prog = builder()
+        self.programs[key] = prog
+        if self.max_programs is not None:
+            while len(self.programs) > int(self.max_programs):
+                victim = next(iter(self.programs))
+                del self.programs[victim]
+                self.evictions += 1
         return prog
 
     def jit(self, fn: Callable, **jit_kwargs) -> Callable:
@@ -115,18 +144,22 @@ class PlanCache:
     def stats(self) -> dict[str, Any]:
         """Counter snapshot: ``programs`` (cached), ``hits``/``misses``
         (cache lookups), ``traces`` (actual JAX tracings — the number that
-        must stay flat across a warm same-bucket call)."""
+        must stay flat across a warm same-bucket call), ``evictions``
+        (LRU victims) and the configured ``max_programs`` bound."""
         return {
             "programs": len(self.programs),
             "hits": self.hits,
             "misses": self.misses,
             "traces": self.traces,
+            "evictions": self.evictions,
+            "max_programs": self.max_programs,
         }
 
     def reset(self) -> None:
-        """Drop every cached program and zero the counters (tests)."""
+        """Drop every cached program and zero the counters (tests); the
+        ``max_programs`` bound is configuration and survives."""
         self.programs.clear()
-        self.hits = self.misses = self.traces = 0
+        self.hits = self.misses = self.traces = self.evictions = 0
 
 
 _GLOBAL = PlanCache()
@@ -140,6 +173,23 @@ def get_cache() -> PlanCache:
 def reset_cache() -> None:
     """Reset the process-global cache (see :meth:`PlanCache.reset`)."""
     _GLOBAL.reset()
+
+
+def set_max_programs(max_programs: int | None) -> None:
+    """Bound (or unbound, with ``None``) the process-global cache.
+
+    ``max_programs`` must be >= 1 (the hot program itself must stay
+    cached) or ``None``.  Takes effect on the next
+    :meth:`PlanCache.program` insert; already cached programs are
+    evicted lazily as new ones land.
+    """
+    if max_programs is not None and int(max_programs) < 1:
+        raise ValueError(
+            f"max_programs must be >= 1 or None, got {max_programs}"
+        )
+    _GLOBAL.max_programs = (
+        None if max_programs is None else int(max_programs)
+    )
 
 
 def cache_stats() -> dict[str, Any]:

@@ -1,0 +1,222 @@
+"""Versioned, immutable index snapshots with epoch-based publish (reads).
+
+The write path produces: every ``ReconstructionPipeline.run`` /
+``run_incremental`` yields a fresh set of device arrays (tree levels,
+sorted compressed keys, rid permutation) plus host metadata.  The *read*
+path must never observe a half-swapped mixture of two reconstructions —
+a replica answering queries while ``poll`` folds the next log span, a
+serving engine routing page gets across a restart rebuild.  This module
+is the seam between the two:
+
+* :class:`IndexSnapshot` freezes one reconstruction into an immutable,
+  epoch-stamped artifact: the tree, the DS-metadata, the sorted run, the
+  extraction bitmap, and the LSN watermark the state is current through.
+  The arrays are the (already immutable) device buffers the pipeline
+  produced; the host-side metadata is copied at freeze time so later
+  in-place mutation by the producer cannot leak in.
+* :class:`SnapshotCell` is the publish/acquire protocol — a one-slot
+  double buffer.  ``publish`` atomically swaps the current snapshot to
+  the next epoch; readers ``acquire`` (pin) the current epoch and
+  ``release`` it when done.  A publish never invalidates a pinned
+  snapshot: the previous epoch is *retired* and kept alive until its
+  last pin drops, so a reader that pinned epoch ``e`` keeps getting
+  epoch-``e`` answers even if rebuilds publish ``e+1, e+2, …``
+  underneath it — the double-buffering the replica read scale-out needs.
+
+Epochs are dense and monotonically increasing.  Consumers that persist
+state (the checkpoint layer) record the epoch next to the watermark and
+resume the cell at it, so a bootstrapped replica's snapshot history
+continues the primary's numbering rather than restarting at zero.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Iterator
+
+import numpy as np
+
+if TYPE_CHECKING:  # the pipeline imports this module; keep the cycle lazy
+    from .btree import BTree
+    from .metadata import DSMeta
+    from .pipeline import ReconstructionResult
+
+__all__ = ["IndexSnapshot", "SnapshotCell"]
+
+
+@dataclass(frozen=True)
+class IndexSnapshot:
+    """One reconstruction, frozen: epoch-stamped, device-resident, immutable.
+
+    ``tree``/``comp_sorted``/``rid_sorted``/``row_sorted`` are the
+    pipeline's device arrays; ``meta`` is the refreshed DS-metadata and
+    ``extract_bitmap`` the D-bitmap the compressed run was extracted
+    under (both copied at freeze time); ``watermark`` is the LSN the
+    state is current through (``None`` when not log-driven).
+    """
+
+    epoch: int
+    tree: "BTree"
+    meta: "DSMeta"
+    comp_sorted: object
+    rid_sorted: object
+    row_sorted: object | None
+    extract_bitmap: np.ndarray | None
+    watermark: int | None
+
+    @property
+    def n_keys(self) -> int:
+        """Number of live keys in the snapshot's tree."""
+        return int(self.tree.n_keys)
+
+    @staticmethod
+    def from_result(result: "ReconstructionResult", epoch: int) -> "IndexSnapshot":
+        """Freeze a pipeline result at ``epoch``.
+
+        The device arrays are shared (jax arrays are immutable); the
+        host-side metadata is deep-copied so producers that keep mutating
+        their working ``DSMeta``/``extract_bitmap`` (the §4.3 insert rule
+        runs in place on some consumers) cannot reach into a published
+        snapshot.
+        """
+        from dataclasses import replace as _replace
+
+        meta = result.meta
+        frozen_meta = _replace(
+            meta,
+            dbitmap=np.array(meta.dbitmap, np.uint32, copy=True),
+            varbitmap=np.array(meta.varbitmap, np.uint32, copy=True),
+            refkey=np.array(meta.refkey, np.uint32, copy=True),
+        )
+        eb = result.extract_bitmap
+        return IndexSnapshot(
+            epoch=int(epoch),
+            tree=result.tree,
+            meta=frozen_meta,
+            comp_sorted=result.comp_sorted,
+            rid_sorted=result.rid_sorted,
+            row_sorted=result.row_sorted,
+            extract_bitmap=None if eb is None else np.array(eb, np.uint32, copy=True),
+            watermark=result.watermark,
+        )
+
+    def lookup(self, backend, queries):
+        """Batched point lookup through a backend's ``lookup`` op.
+
+        Convenience for read-path consumers: ``backend`` is any
+        ``ExecutionBackend``; returns the op's ``(found, rid)`` pair.
+        """
+        return backend.lookup(self.tree, queries)
+
+
+class SnapshotCell:
+    """The epoch-based publish/acquire protocol (a one-slot double buffer).
+
+    Writers call :meth:`publish` with each finished reconstruction;
+    readers wrap their lookups in :meth:`pin` (or the explicit
+    ``acquire``/``release`` pair).  The cell retires — but does not drop —
+    the previous snapshot while any reader still pins it, which is what
+    lets a rebuild proceed concurrently with reads: queries pinned before
+    the swap keep answering from the pre-rebuild epoch, queries pinned
+    after it see the new one, and no query ever sees a mixture.
+
+    ``start_epoch`` seeds the numbering: the first publish lands at
+    ``start_epoch + 1`` (the default ``-1`` makes it epoch 0).  A
+    checkpoint-restored consumer resumes the cell at the persisted epoch
+    so its history continues the producer's.
+    """
+
+    def __init__(self, start_epoch: int = -1) -> None:
+        self._current: IndexSnapshot | None = None
+        self._epoch = int(start_epoch)
+        self._pins: dict[int, int] = {}
+        self._retired: dict[int, IndexSnapshot] = {}
+        self.n_published = 0
+        self.n_acquired = 0
+
+    # --------------------------------------------------------------- state
+    @property
+    def current(self) -> IndexSnapshot | None:
+        """The currently published snapshot (``None`` before the first)."""
+        return self._current
+
+    @property
+    def epoch(self) -> int:
+        """Epoch of the current snapshot (``start_epoch`` before any)."""
+        return self._epoch
+
+    def pinned_epochs(self) -> list[int]:
+        """Epochs with at least one outstanding pin, ascending."""
+        return sorted(e for e, c in self._pins.items() if c > 0)
+
+    # ------------------------------------------------------------- publish
+    def publish(
+        self, result: "ReconstructionResult", epoch: int | None = None
+    ) -> IndexSnapshot:
+        """Freeze ``result`` and atomically swap it in as the next epoch.
+
+        ``epoch`` defaults to ``current + 1`` and must be strictly
+        increasing when given explicitly (the checkpoint-resume path).
+        The previous snapshot is retired while pinned and dropped once its
+        last pin releases; an unpinned previous snapshot is dropped
+        immediately (double buffering, not an unbounded history).
+        """
+        epoch = self._epoch + 1 if epoch is None else int(epoch)
+        if epoch <= self._epoch and self._current is not None:
+            raise ValueError(
+                f"epoch must increase: publishing {epoch} over {self._epoch}"
+            )
+        snap = IndexSnapshot.from_result(result, epoch)
+        prev = self._current
+        self._current = snap
+        self._epoch = epoch
+        self.n_published += 1
+        if prev is not None and self._pins.get(prev.epoch, 0) > 0:
+            self._retired[prev.epoch] = prev
+        return snap
+
+    # ------------------------------------------------------------- readers
+    def acquire(self) -> IndexSnapshot:
+        """Pin and return the current snapshot (raises before any publish).
+
+        Every ``acquire`` must be paired with a :meth:`release` of the
+        returned snapshot; prefer the :meth:`pin` context manager.
+        """
+        if self._current is None:
+            raise RuntimeError("no snapshot published yet")
+        snap = self._current
+        self._pins[snap.epoch] = self._pins.get(snap.epoch, 0) + 1
+        self.n_acquired += 1
+        return snap
+
+    def release(self, snap: IndexSnapshot) -> None:
+        """Drop one pin on ``snap``; a fully-unpinned retired epoch is freed."""
+        n = self._pins.get(snap.epoch, 0)
+        if n <= 0:
+            raise RuntimeError(f"release of unpinned epoch {snap.epoch}")
+        if n == 1:
+            del self._pins[snap.epoch]
+            self._retired.pop(snap.epoch, None)
+        else:
+            self._pins[snap.epoch] = n - 1
+
+    @contextmanager
+    def pin(self) -> Iterator[IndexSnapshot]:
+        """``with cell.pin() as snap:`` — acquire/release, exception-safe."""
+        snap = self.acquire()
+        try:
+            yield snap
+        finally:
+            self.release(snap)
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Cell counters: current epoch, publishes, pins, retired epochs."""
+        return {
+            "epoch": self._epoch,
+            "n_published": self.n_published,
+            "n_acquired": self.n_acquired,
+            "pinned": sum(self._pins.values()),
+            "retired": len(self._retired),
+        }

@@ -1,0 +1,2 @@
+from . import ops, ref  # noqa: F401
+from .ops import leaf_match_fn, probe  # noqa: F401

@@ -1,0 +1,63 @@
+"""Jit-friendly public wrappers for the partial-key probe kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_TILE, probe_planes
+
+
+def probe(
+    queries: jnp.ndarray,
+    starts: jnp.ndarray,
+    entry_pk: jnp.ndarray,
+    pk: int,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(m, W) query keys + (m,) window starts + (m,) stored partial keys
+    -> (m,) bool candidate mask (query window == stored partial key).
+
+    Pads the pair axis to a tile multiple (pad starts/pks are 0 — garbage
+    lanes, stripped before return), transposes to word planes, and runs
+    the tiled kernel.  Traces inside the cached lookup program, exactly
+    like ``kernels/build``'s ``slice_fn`` does inside the build programs.
+    """
+    m, w = queries.shape
+    pad = (-m) % tile
+    planes = jnp.asarray(queries, jnp.uint32).T
+    starts = jnp.asarray(starts, jnp.int32)
+    entry_pk = jnp.asarray(entry_pk, jnp.uint32)
+    if pad:
+        planes = jnp.concatenate([planes, jnp.zeros((w, pad), jnp.uint32)], axis=1)
+        starts = jnp.concatenate([starts, jnp.zeros((pad,), jnp.int32)])
+        entry_pk = jnp.concatenate([entry_pk, jnp.zeros((pad,), jnp.uint32)])
+    out = probe_planes(planes, starts, entry_pk, int(pk), tile=tile, interpret=interpret)
+    return out[:m].astype(bool)
+
+
+def leaf_match_fn(tile: int = DEFAULT_TILE, interpret: bool = True):
+    """A ``lookup_batch_planned(leaf_match_fn=...)``-shaped closure.
+
+    Screens every (query, leaf entry) pair with the probe kernel, then
+    confirms candidates with the full-key compare — byte-identical to the
+    unscreened compare (a full match always window-matches), which is the
+    pallas ``lookup`` op's realization of the backend contract.
+    """
+
+    def fn(tree, node, keys, queries):
+        q, lc = node.shape[0], tree.config.leaf_cap
+        dpos = tree.leaf["dpos"][node]  # (q, lc)
+        entry_pk = tree.leaf["pk"][node]  # (q, lc)
+        flat_q = jnp.repeat(queries, lc, axis=0)  # (q*lc, W) pair queries
+        cand = probe(
+            flat_q,
+            (dpos + 1).reshape(-1),
+            entry_pk.reshape(-1),
+            tree.config.pk_bits,
+            tile=tile,
+            interpret=interpret,
+        ).reshape(q, lc)
+        return cand & jnp.all(keys == queries[:, None, :], axis=-1)
+
+    return fn

@@ -19,6 +19,7 @@ from .stream import (  # noqa: F401
     BatchFrame,
     CheckpointFrame,
     LsnGapError,
+    ShedFrame,
     StreamError,
     StreamPrimary,
     StreamReplica,
@@ -45,6 +46,7 @@ __all__ = [
     "StreamReplica",
     "BatchFrame",
     "CheckpointFrame",
+    "ShedFrame",
     "encode_frame",
     "decode_frame",
     "StreamError",

@@ -26,7 +26,7 @@ from dataclasses import replace
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.btree import BTreeConfig, search_batch
+from repro.core.btree import BTreeConfig
 from repro.core.dbits import (
     NO_DBIT,
     compute_dbitmap,
@@ -37,6 +37,7 @@ from repro.core.dbits import (
 from repro.core.keyformat import KeySet  # noqa: F401  (public API type)
 from repro.core.metadata import DSMeta, shed_or_pin
 from repro.core.pipeline import ReconstructionPipeline, ReconstructionResult
+from repro.core.snapshot import SnapshotCell
 
 from .log import ChangeLog
 
@@ -62,6 +63,9 @@ class Replica:
                         (``-1`` = nothing applied; a bootstrap resumes at
                         the checkpoint's watermark).
     deletes_since_shed: resume value for the shed-policy volume counter.
+    snapshot_epoch:     epoch the bring-up snapshot is published at (a
+                        checkpoint bootstrap resumes the primary's
+                        numbering; the default starts at 0).
     """
 
     def __init__(
@@ -74,13 +78,18 @@ class Replica:
         shed_delete_frac: float | None = None,
         applied_lsn: int = -1,
         deletes_since_shed: int = 0,
+        snapshot_epoch: int = 0,
     ) -> None:
         self.pipeline = ReconstructionPipeline(
             backend=backend, config=config, backend_opts=backend_opts
         )
         self.keyset = keyset
+        # the versioned read path: every rebuild publishes the next epoch
+        # here and every search pins the current one (double buffering)
+        self.snapshots = SnapshotCell(start_epoch=int(snapshot_epoch) - 1)
         self.result: ReconstructionResult = self.pipeline.run(
-            keyset, meta=meta, watermark=applied_lsn if applied_lsn >= 0 else None
+            keyset, meta=meta, watermark=applied_lsn if applied_lsn >= 0 else None,
+            publish_to=self.snapshots,
         )
         # the working metadata mirrors the *extraction* bitmap (plus insert
         # bits as batches arrive): keeping it pinned to what comp_sorted was
@@ -118,10 +127,33 @@ class Replica:
         return self._deletes_since_shed
 
     # ------------------------------------------------------------- lookup
+    def search_batch(
+        self, query_words: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched point lookup: (q, W) keys -> ((q,) found, (q,) rid).
+
+        Pins the current snapshot epoch and probes it with the backend's
+        plan-cached ``lookup`` op — a query stream interleaved with
+        ``apply`` keeps answering from the pre-rebuild epoch until the new
+        one is published, never a torn mixture.  Miss lanes carry
+        ``repro.core.btree.NOT_FOUND_RID``.
+        """
+        q = jnp.asarray(
+            np.asarray(query_words, np.uint32).reshape(-1, self.keyset.n_words)
+        )
+        with self.snapshots.pin() as snap:
+            found, rid = self.pipeline.backend.lookup(snap.tree, q)
+        return np.asarray(found, bool), np.asarray(rid, np.uint32)
+
     def search(self, query_words: np.ndarray) -> tuple[bool, int]:
-        """Point lookup through the standing tree: ``(found, rid)``."""
-        q = jnp.asarray(query_words, jnp.uint32)[None, :]
-        found, rid, _ = search_batch(self.result.tree, q)
+        """Point lookup through the pinned snapshot: ``(found, rid)``.
+
+        A thin wrapper over :meth:`search_batch` (one implementation for
+        scalar and batched lookups).
+        """
+        found, rid = self.search_batch(
+            np.asarray(query_words, np.uint32)[None, :]
+        )
         return bool(found[0]), int(rid[0])
 
     # -------------------------------------------------------------- apply
@@ -160,7 +192,7 @@ class Replica:
 
         res, folded = self.pipeline.run_incremental(
             self.result, self.keyset, delta, keep_rows=keep_rows, meta=meta,
-            watermark=log.next_lsn - 1,
+            watermark=log.next_lsn - 1, publish_to=self.snapshots,
         )
         self.keyset, self.result = folded, res
         self._meta, shed, self._deletes_since_shed = shed_or_pin(
@@ -182,6 +214,30 @@ class Replica:
             "applied_lsn": self.applied_lsn,
             "timings": dict(res.timings),
         }
+
+    # ------------------------------------------------------- shed adoption
+    def adopt_shed(self) -> bool:
+        """Adopt the refreshed (shed) D-bitmap of the last rebuild *now*.
+
+        The stream-driven form of the shed policy: instead of evaluating
+        ``shed_delete_frac`` locally (whose per-rebuild cadence diverges
+        between replicas that poll at different rates), a consumer adopts
+        sheds exactly where the primary logged them — the shed control
+        frame in the stream names the watermark, and this call flips the
+        working metadata from the pinned extraction bitmap to the
+        refreshed one, so the next rebuild pays the one full resort under
+        the narrower projection just as the primary's did.  Returns
+        whether the bitmap actually changed (idempotent on a replica that
+        already shed locally).
+        """
+        refreshed = self.result.meta
+        changed = not np.array_equal(
+            np.asarray(self._meta.dbitmap, np.uint32),
+            np.asarray(refreshed.dbitmap, np.uint32),
+        )
+        self._meta = refreshed
+        self._deletes_since_shed = 0
+        return changed
 
     # ---------------------------------------------------- metadata upkeep
     def _insert_rule(self, ins_words: np.ndarray) -> DSMeta:

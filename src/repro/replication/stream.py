@@ -32,11 +32,18 @@ Determinism: a replica driven only through the stream — including one
 that bootstrapped from a checkpoint — holds the same byte-identity
 contract as ``Replica`` itself: its standing result always equals a full
 ``ReconstructionPipeline.run`` over its folded keyset under its working
-metadata, on every backend.  With the default pin-only bitmap policy a
-caught-up replica is byte-identical to a never-lagged one (the checkpoint
-carries the working metadata and the shed bookkeeping); with an active
-shed policy the two converge at the first post-catch-up rebuild under the
-shed bitmap (see docs/replication.md).
+metadata, on every backend.  Shed adoption is a **logged event**: when
+the primary's tracked index sheds its D-bitmap, a :class:`ShedFrame`
+lands in the stream at that watermark and every consumer adopts the shed
+exactly there (``Replica.adopt_shed``) — so tailing, lagging, and
+checkpoint-bootstrapped replicas are byte-identical to the primary at
+*every* watermark, whatever their poll cadence (see docs/replication.md
+§Determinism).
+
+Reads are versioned: every inner ``Replica`` publishes each rebuild into
+a ``repro.core.snapshot.SnapshotCell`` and serves lookups from the
+pinned epoch, so queries interleaved with ``poll`` answer from the
+pre-watermark snapshot — never a torn mixture of two reconstructions.
 """
 
 from __future__ import annotations
@@ -56,6 +63,7 @@ from .transport import FrameTruncated, Transport
 __all__ = [
     "BatchFrame",
     "CheckpointFrame",
+    "ShedFrame",
     "encode_frame",
     "decode_frame",
     "StreamPrimary",
@@ -110,6 +118,24 @@ class BatchFrame:
 
 
 @dataclass(frozen=True)
+class ShedFrame:
+    """A control frame: the primary's index shed its D-bitmap at ``lsn``.
+
+    Shed adoption used to be a local, volume-triggered decision — which
+    meant a replica folding several batches through one rebuild checked
+    the threshold once for the span and could shed at a different
+    watermark than the primary (docs/replication.md §Determinism, the old
+    caveat).  Logging the adoption as a stream frame makes it part of the
+    replay: consumers treat the frame as a span boundary (pending batches
+    through ``lsn`` fold first) and then adopt the refreshed bitmap via
+    ``Replica.adopt_shed`` — so a tailing replica and a caught-up one are
+    identical at *every* watermark, whatever their poll cadence.
+    """
+
+    lsn: int
+
+
+@dataclass(frozen=True)
 class CheckpointFrame:
     """A checkpoint manifest: where a catch-up base lives on disk.
 
@@ -128,12 +154,12 @@ class CheckpointFrame:
     log_state: ChangeLog
 
 
-def encode_frame(frame: "BatchFrame | CheckpointFrame") -> bytes:
+def encode_frame(frame: "BatchFrame | CheckpointFrame | ShedFrame") -> bytes:
     """Serialize a frame for a transport (an npz archive as bytes).
 
     The payload embeds the frame kind, the frame-specific header fields,
-    and the ``log_``-prefixed change-log columns — one self-describing npz
-    per frame, readable by any npz tool.
+    and (for batch/checkpoint frames) the ``log_``-prefixed change-log
+    columns — one self-describing npz per frame, readable by any npz tool.
     """
     buf = io.BytesIO()
     if isinstance(frame, BatchFrame):
@@ -142,6 +168,12 @@ def encode_frame(frame: "BatchFrame | CheckpointFrame") -> bytes:
             frame_kind=np.asarray("batch"),
             frame_bucket=np.asarray(frame.bucket, np.int64),
             **frame.log.to_npz_dict(),
+        )
+    elif isinstance(frame, ShedFrame):
+        np.savez(
+            buf,
+            frame_kind=np.asarray("shed"),
+            frame_lsn=np.asarray(frame.lsn, np.int64),
         )
     elif isinstance(frame, CheckpointFrame):
         np.savez(
@@ -157,7 +189,7 @@ def encode_frame(frame: "BatchFrame | CheckpointFrame") -> bytes:
     return buf.getvalue()
 
 
-def decode_frame(payload: bytes) -> "BatchFrame | CheckpointFrame":
+def decode_frame(payload: bytes) -> "BatchFrame | CheckpointFrame | ShedFrame":
     """Inverse of :func:`encode_frame`."""
     with np.load(io.BytesIO(payload)) as z:
         d = dict(z)
@@ -166,6 +198,8 @@ def decode_frame(payload: bytes) -> "BatchFrame | CheckpointFrame":
         return BatchFrame(
             log=ChangeLog.from_npz_dict(d), bucket=int(d["frame_bucket"])
         )
+    if kind == "shed":
+        return ShedFrame(lsn=int(d["frame_lsn"]))
     if kind == "checkpoint":
         return CheckpointFrame(
             ckpt_dir=str(d["frame_ckpt_dir"]),
@@ -281,6 +315,7 @@ class StreamPrimary:
         self._batches_since_ckpt = 0
         self._in_checkpoint = False
         self.n_batches_published = 0
+        self.n_shed_frames = 0
         self.replica: Replica | None = None
         if keyset is not None:
             genesis = ChangeLog(self.n_words, start_lsn=0)
@@ -349,14 +384,21 @@ class StreamPrimary:
         """Apply to the tracked index, publish the frame, apply backpressure."""
         from repro.core import plancache
 
+        shed = False
         if self.replica is not None and log.next_lsn - 1 > self.replica.applied_lsn:
             # skip only spans the tracked index already covers (the genesis
             # batch, which the Replica constructor consumed) — compare
             # watermarks, not "is this LSN 0"
-            self.replica.apply(log)
+            shed = bool(self.replica.apply(log).get("shed_bits"))
         self.transport.publish(
             encode_frame(BatchFrame(log=log, bucket=plancache.bucket(len(log))))
         )
+        if shed:
+            # shed adoption is a logged event: the control frame pins the
+            # watermark the bitmap shed at, so every consumer adopts it at
+            # exactly that point regardless of its poll cadence
+            self.transport.publish(encode_frame(ShedFrame(lsn=log.next_lsn - 1)))
+            self.n_shed_frames += 1
         self.n_batches_published += 1
         self._batches_since_ckpt += 1
         if (
@@ -412,7 +454,14 @@ class StreamPrimary:
             rep.apply(ChangeLog(self.n_words, start_lsn=rep.applied_lsn + 1))
         step = self._ckpt_step + 1
         state = _state_tree(rep)
-        extra = {"applied_lsn": rep.applied_lsn, "stream_state": True}
+        extra = {
+            "applied_lsn": rep.applied_lsn,
+            "stream_state": True,
+            # the snapshot epoch rides the checkpoint: a bootstrapped
+            # replica resumes the primary's epoch numbering (round-trip
+            # asserted in tests/test_snapshot.py)
+            "snapshot_epoch": rep.snapshots.epoch,
+        }
         if self._ckpt_step == 0:
             save_checkpoint(self.ckpt_dir, step, state, extra_meta=extra)
         else:
@@ -447,6 +496,7 @@ class StreamPrimary:
         return {
             "next_lsn": self._next_lsn,
             "n_batches_published": self.n_batches_published,
+            "n_shed_frames": self.n_shed_frames,
             "batches_since_ckpt": self._batches_since_ckpt,
             "ckpt_step": self._ckpt_step,
             "pending_entries": sum(len(p) for p in self._pending),
@@ -471,6 +521,12 @@ class StreamReplica:
     are skipped, overlapping batches are sliced to the unseen suffix, and
     a forward gap raises :class:`LsnGapError` unless a checkpoint frame
     bridges it (the retention/catch-up path).
+
+    ``shed_delete_frac`` configures a *local* volume-based shed policy
+    and defaults to ``None`` — the recommended mode, where shed adoption
+    is driven entirely by the stream's logged :class:`ShedFrame` control
+    frames (a shed frame splits the drained span at its watermark and
+    the inner replica adopts the refreshed bitmap there).
     """
 
     def __init__(
@@ -494,6 +550,7 @@ class StreamReplica:
         self.n_rebuilds = 0
         self.n_catchups = 0
         self.n_truncation_jumps = 0
+        self.n_shed_adoptions = 0
 
     # ------------------------------------------------------------- state
     @property
@@ -515,6 +572,14 @@ class StreamReplica:
             raise StreamError("replica has no index yet (nothing consumed)")
         return self.replica.search(query_words)
 
+    def search_batch(self, query_words):
+        """Batched point lookup through the inner replica's pinned
+        snapshot: (q, W) keys -> ((q,) found, (q,) rid) — the read
+        scale-out form of :meth:`search` (see ``Replica.search_batch``)."""
+        if self.replica is None:
+            raise StreamError("replica has no index yet (nothing consumed)")
+        return self.replica.search_batch(query_words)
+
     # -------------------------------------------------------------- poll
     def poll(self, max_frames: int | None = None) -> dict:
         """Drain available frames; one incremental rebuild for the span.
@@ -523,11 +588,14 @@ class StreamReplica:
         ``max_frames``): batch frames accumulate into a pending list after
         the LSN watermark check; a checkpoint frame triggers bootstrap
         when the replica is behind its ``base_lsn`` (or has no state yet)
-        and is skipped otherwise.  The pending batches are then stitched
-        and folded through ONE ``Replica.apply`` — the applied-batch
-        watermark, not the frame count, triggers the rebuild.  Returns
-        poll stats (frames seen, batches applied, duplicates, catch-ups,
-        the new watermark, and the apply stats of the rebuild if one ran).
+        and is skipped otherwise; a shed control frame splits the span at
+        its watermark (flush, adopt, continue).  Each span's batches are
+        stitched and folded through ONE ``Replica.apply`` — the
+        applied-batch watermark, not the frame count, triggers the
+        rebuild.  Returns poll stats (frames seen, batches applied,
+        duplicates, catch-ups, shed adoptions, the new watermark;
+        ``applies`` lists every span's apply stats, ``apply`` keeps the
+        last one).
         """
         seen = 0
         pending: list[ChangeLog] = []
@@ -535,7 +603,20 @@ class StreamReplica:
         out = {
             "frames": 0, "applied_batches": 0, "duplicates": 0,
             "catchup": False, "truncated_jump": False, "apply": None,
+            "applies": [], "shed_adopted": 0,
         }
+
+        def _flush_pending():
+            # a shed frame can split one poll into several spans; "apply"
+            # keeps the last span's stats (compat), "applies" all of them
+            if pending:
+                out["applied_batches"] += len(pending)
+                st = self._apply_pending(pending)
+                if st is not None:
+                    out["applies"].append(st)
+                out["apply"] = st
+                pending.clear()
+
         while max_frames is None or seen < max_frames:
             try:
                 raw = self.transport.read(self.pos)
@@ -552,6 +633,20 @@ class StreamReplica:
             frame = decode_frame(raw)
             seen += 1
             out["frames"] += 1
+            if isinstance(frame, ShedFrame):
+                # a shed is a span boundary: the state at frame.lsn must
+                # adopt the refreshed bitmap *before* later batches fold,
+                # or the post-shed full resort lands at the wrong watermark
+                _flush_pending()
+                if self.replica is not None and self.applied_lsn == frame.lsn:
+                    if self.replica.adopt_shed():
+                        self.n_shed_adoptions += 1
+                        out["shed_adopted"] += 1
+                # a frame at a watermark we are already past is stale (the
+                # checkpoint state we bootstrapped from was realigned) —
+                # skip; one ahead of us cannot happen on a contiguous read
+                self.pos += 1
+                continue
             if isinstance(frame, CheckpointFrame):
                 eff = pending[-1].next_lsn - 1 if pending else self.applied_lsn
                 no_state = (
@@ -594,9 +689,7 @@ class StreamReplica:
                     log = log.slice_lsn(expected, log.next_lsn)
                 pending.append(log)
             self.pos += 1
-        if pending:
-            out["applied_batches"] = len(pending)
-            out["apply"] = self._apply_pending(pending)
+        _flush_pending()
         self.n_polls += 1
         out["applied_lsn"] = self.applied_lsn
         out["lag_frames"] = self.lag_frames()
@@ -653,11 +746,15 @@ class StreamReplica:
         """Restore the checkpoint chain; resume tailing at its watermark.
 
         The restored state is the primary's keyset + *working* metadata at
-        ``base_lsn`` plus the shed bookkeeping carried in the frame's
+        ``base_lsn`` plus the shed-volume counter carried in the frame's
         ``log_state`` — constructing the replica from them reproduces,
         byte for byte, the state a never-lagged replica holds at that
-        watermark (pin-only policy; see the module docstring for the shed
-        caveat).
+        watermark.  The shed *policy* is the replica's own configuration
+        (by default ``None``): shed decisions arrive as logged control
+        frames, so a bootstrapped consumer and a tailing one adopt them
+        at the same watermarks instead of re-deriving them locally.  The
+        checkpointed snapshot epoch is resumed, so the bootstrapped
+        replica's epoch history continues the primary's numbering.
         """
         from repro.ckpt.checkpoint import restore_checkpoint
 
@@ -681,9 +778,10 @@ class StreamReplica:
             meta=meta,
             backend=self.backend,
             backend_opts=self.backend_opts,
-            shed_delete_frac=ls.shed_delete_frac,
+            shed_delete_frac=self.shed_delete_frac,
             applied_lsn=frame.base_lsn - 1,
             deletes_since_shed=ls.deletes_since_shed,
+            snapshot_epoch=int(_stats["meta"].get("snapshot_epoch", 0)),
         )
         self._genesis = None
         self.n_catchups += 1
@@ -701,4 +799,5 @@ class StreamReplica:
             "n_duplicates": self.n_duplicates,
             "n_catchups": self.n_catchups,
             "n_truncation_jumps": self.n_truncation_jumps,
+            "n_shed_adoptions": self.n_shed_adoptions,
         }

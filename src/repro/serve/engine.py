@@ -93,6 +93,23 @@ class ServeEngine:
             jnp.int32
         )
 
+    # ------------------------------------------------------------ page gets
+    def lookup_page(self, seq_id: int, page_no: int) -> int | None:
+        """Resolve a logical page through the index read path.
+
+        On a primary this is the pager's snapshot-pinned ``lookup`` (the
+        plan-cached backend op against the current epoch); on a following
+        standby (``follow``) it reads through the stream replica's pinned
+        snapshot — either way a get racing a rebuild answers from the
+        pre-rebuild epoch, never a torn index.
+        """
+        if self._follow is not None:
+            found, rid = self._follow.search(
+                np.asarray([seq_id, page_no], np.uint32)
+            )
+            return int(rid) if found else None
+        return self.pager.lookup(seq_id, page_no)
+
     # ------------------------------------------------------- fault recovery
     def follow(self, stream_replica) -> None:
         """Run this engine as a streaming standby of another engine's pager.
@@ -131,7 +148,11 @@ class ServeEngine:
             if rep is None:
                 raise RuntimeError("standby stream has delivered no state yet")
             res = rep.result
-            st = poll.get("apply") or {}
+            # a shed frame can split the poll into several apply spans —
+            # account for all of them, not just the last
+            applies = poll.get("applies") or (
+                [poll["apply"]] if poll.get("apply") else []
+            )
             return {
                 "index_height": res.tree.height,
                 "compression_ratio": res.stats["compression_ratio"],
@@ -140,9 +161,13 @@ class ServeEngine:
                 "applied_lsn": poll["applied_lsn"],
                 "lag_frames": poll["lag_frames"],
                 "catchup": poll["catchup"],
-                "incremental": bool(st.get("incremental", False)),
-                "log_entries_replayed": st.get("n_delta", 0)
-                + st.get("n_deleted", 0),
+                "incremental": bool(applies)
+                and all(st.get("incremental", False) for st in applies),
+                "log_entries_replayed": sum(
+                    st.get("n_delta", 0) + st.get("n_deleted", 0)
+                    for st in applies
+                ),
+                "snapshot_epoch": rep.snapshots.epoch,
             }
         res = self.pager.rebuild_index(backend=backend)
         tm = res.timings
@@ -156,5 +181,6 @@ class ServeEngine:
             "rebuild_s": tm["meta"] + tm["total"] + tm["refresh_meta"],
             "backend": res.stats["backend"],
             "stage_s": {k: tm[k] for k in stage_keys if k in tm},
+            "snapshot_epoch": self.pager.stats["snapshot_epoch"],
             **self.pager.stats["last_rebuild"],
         }

@@ -17,6 +17,11 @@ onto the keyset of the previous build and
 standing sorted run — paying the full resort only when an alloc introduced
 a new distinction bit.  ``rebuild_index`` *is* the paper's recovery path on
 this table, now with its incremental fast path.
+
+Gets are versioned: every rebuild publishes an epoch-stamped snapshot
+into a ``repro.core.snapshot.SnapshotCell`` and ``lookup``/``lookup_batch``
+pin the current epoch around the backend's plan-cached ``lookup`` op —
+page gets racing a restart rebuild answer from the pre-rebuild index.
 """
 
 from __future__ import annotations
@@ -26,11 +31,12 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.btree import search_batch
+from repro.core.btree import NOT_FOUND_RID  # noqa: F401  (re-export for callers)
 from repro.core.keyformat import KeySet
 from repro.core.metadata import DSMeta, meta_on_insert, shed_or_pin
 from repro.core.pipeline import ReconstructionPipeline
 from repro.core.reconstruct import ReconstructionResult
+from repro.core.snapshot import SnapshotCell
 from repro.replication import ChangeLog
 
 __all__ = ["PagedKVManager"]
@@ -62,6 +68,9 @@ class PagedKVManager:
     _meta: DSMeta | None = field(default=None, repr=False)
     _sorted_keys: list | None = field(default=None, repr=False)
     _last_rebuild: dict = field(default_factory=dict, repr=False)
+    # versioned read path: rebuilds publish epochs here, gets pin them
+    _snapshots: SnapshotCell = field(default_factory=SnapshotCell, repr=False)
+    _lookup_backend: object | None = field(default=None, repr=False)
 
     def __post_init__(self):
         self._free = list(range(self.n_pages - 1, -1, -1))
@@ -165,13 +174,14 @@ class PagedKVManager:
             ks = KeySet(
                 words=words, lengths=np.full(len(items), 8, np.int32), rids=rids
             )
-            res = pipe.run(ks)
+            res = pipe.run(ks, publish_to=self._snapshots)
             folded = ks
         else:
             keep_rows, delta = self._log.fold_keyset(self._base_keyset)
             res, folded = pipe.run_incremental(
                 self._index, self._base_keyset, delta,
                 keep_rows=keep_rows, meta=self._meta,
+                publish_to=self._snapshots,
             )
         self._index, self._base_keyset = res, folded
         # pin the working bitmap to the extraction bitmap so the next
@@ -195,14 +205,40 @@ class PagedKVManager:
         self._index_dirty = False
         return res
 
-    def lookup(self, seq_id: int, page_no: int) -> int | None:
-        """Index-backed point lookup (tree search, not the dict)."""
-        if self._index is None or self._index_dirty:
-            self.rebuild_index()
+    def _backend_obj(self):
+        """The lookup backend instance (lazy; matches ``self.backend``)."""
+        if self._lookup_backend is None:
+            from repro.backends import get_backend
+
+            self._lookup_backend = get_backend(self.backend)
+        return self._lookup_backend
+
+    def lookup_batch(self, pairs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Batched page gets: (q, 2) (seq_id, page_no) rows -> (found, rid).
+
+        Routes through the snapshot protocol: the current epoch is pinned
+        for the whole probe, so gets racing a ``rebuild_index`` (a restart
+        folding the journal) answer from the pre-rebuild index — never a
+        torn one.  The probe is the backend's plan-cached ``lookup`` op.
+        """
         import jax.numpy as jnp
 
-        q = jnp.asarray(_pack_key(seq_id, page_no))[None, :]
-        found, rid, _ = search_batch(self._index.tree, q)
+        if self._index is None or self._index_dirty:
+            self.rebuild_index()
+        q = jnp.asarray(np.asarray(pairs, np.uint32).reshape(-1, 2))
+        with self._snapshots.pin() as snap:
+            found, rid = self._backend_obj().lookup(snap.tree, q)
+        return np.asarray(found, bool), np.asarray(rid, np.uint32)
+
+    def lookup(self, seq_id: int, page_no: int) -> int | None:
+        """Index-backed point lookup (tree search, not the dict).
+
+        A thin wrapper over :meth:`lookup_batch` — one implementation for
+        scalar and batched gets.
+        """
+        found, rid = self.lookup_batch(
+            _pack_key(seq_id, page_no)[None, :]
+        )
         return int(rid[0]) if bool(found[0]) else None
 
     @property
@@ -216,4 +252,6 @@ class PagedKVManager:
             ),
             "last_rebuild": dict(self._last_rebuild),
             "log_entries_pending": len(self._log),
+            "snapshot_epoch": self._snapshots.epoch,
+            "snapshot": self._snapshots.stats(),
         }

@@ -23,6 +23,7 @@ SRC = REPO / "src" / "repro"
 SURFACE = [
     SRC / "core" / "pipeline.py",
     SRC / "core" / "plancache.py",
+    SRC / "core" / "snapshot.py",
     SRC / "backends" / "base.py",
     SRC / "replication" / "log.py",
     SRC / "replication" / "replica.py",

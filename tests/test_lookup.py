@@ -1,0 +1,259 @@
+"""The ``lookup`` backend op: parity, padding, plan-cache behaviour.
+
+The contract under test: batched point lookups return ``(found, rid)``
+with miss lanes normalized to ``NOT_FOUND_RID``, byte-identical across
+the jnp oracle, the pallas partial-key probe kernel, and the distributed
+owner-shard routing — including duplicate keys, all-ones sentinel-shaped
+keys, and query batches straddling plan-cache bucket boundaries — while
+a steady query stream at drifting batch sizes replays one compiled
+program (the trace counter stays flat).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import get_backend
+from repro.core import plancache
+from repro.core.btree import NOT_FOUND_RID, lookup_batch_planned, search_batch
+from repro.core.keyformat import KeySet
+from repro.core.pipeline import ReconstructionPipeline
+
+BACKENDS = ("jnp", "pallas", "distributed")
+
+
+def _backend(name):
+    return get_backend(name, **({"interpret": True} if name == "pallas" else {}))
+
+
+def _keyset(rng, n, w=3, mask=0x00FF0F0F):
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(mask)
+    return KeySet(
+        words=words, lengths=np.full(n, w * 4, np.int32),
+        rids=np.arange(n, dtype=np.uint32),
+    )
+
+
+def _oracle(tree, queries):
+    """search_batch with the op's miss normalization — the reference."""
+    found, rid, _ = search_batch(tree, jnp.asarray(queries, jnp.uint32))
+    found = np.asarray(found, bool)
+    return found, np.where(found, np.asarray(rid, np.uint32), NOT_FOUND_RID)
+
+
+def _mixed_queries(rng, words):
+    """Hits, misses, duplicate-key hits, and all-ones keys in one batch."""
+    n = words.shape[0]
+    hits = words[rng.integers(0, n, size=40)]
+    misses = words[rng.integers(0, n, size=20)] ^ np.uint32(0x1)
+    ones = np.full((3, words.shape[1]), 0xFFFFFFFF, np.uint32)
+    return np.concatenate([hits, misses, ones], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# parity across backends
+# ---------------------------------------------------------------------------
+
+
+def test_lookup_parity_hit_miss_dup_allones(rng):
+    ks = _keyset(rng, 900)
+    words = np.asarray(ks.words)
+    words[5] = words[6]          # duplicate keys, distinct rids
+    words[7] = 0xFFFFFFFF        # a real all-ones key (pad-sentinel shaped)
+    ks = KeySet(words=words, lengths=ks.lengths, rids=ks.rids)
+    res = ReconstructionPipeline(backend="jnp").run(ks)
+    queries = np.concatenate(
+        [_mixed_queries(rng, words), words[5][None, :]], axis=0
+    )
+    want_f, want_r = _oracle(res.tree, queries)
+    assert want_f.any() and (~want_f).any()  # the batch exercises both
+    for name in BACKENDS:
+        got_f, got_r = _backend(name).lookup(res.tree, jnp.asarray(queries))
+        np.testing.assert_array_equal(want_f, np.asarray(got_f), err_msg=name)
+        np.testing.assert_array_equal(want_r, np.asarray(got_r), err_msg=name)
+    # the duplicate-key query resolves to the first equal entry in
+    # (key, row) order on every backend
+    dup_q = words[5][None, :]
+    rids = {n: int(_backend(n).lookup(res.tree, jnp.asarray(dup_q))[1][0])
+            for n in BACKENDS}
+    assert len(set(rids.values())) == 1, rids
+
+
+@pytest.mark.parametrize("off", [-1, 0, 1])
+def test_lookup_bucket_boundary_batches(rng, off):
+    """Query batches straddling a bucket boundary answer identically to
+    the unpadded oracle (pad lanes are invisible)."""
+    ks = _keyset(rng, 1200)
+    res = ReconstructionPipeline(backend="jnp").run(ks)
+    q = plancache.BUCKET_MIN + off
+    queries = np.asarray(ks.words)[rng.integers(0, ks.n, size=q)]
+    queries[::3] ^= np.uint32(0x2)  # sprinkle misses
+    want_f, want_r = _oracle(res.tree, queries)
+    for name in BACKENDS:
+        got_f, got_r = _backend(name).lookup(res.tree, jnp.asarray(queries))
+        np.testing.assert_array_equal(want_f, np.asarray(got_f), err_msg=name)
+        np.testing.assert_array_equal(want_r, np.asarray(got_r), err_msg=name)
+
+
+def test_lookup_distributed_routing_parity(rng, monkeypatch):
+    """The owner-shard routed path (p > 1) scatters per-shard answers back
+    into query order, byte-identical to the unrouted oracle."""
+    from repro.backends.distributed import DistributedBackend
+
+    ks = _keyset(rng, 800)
+    res = ReconstructionPipeline(backend="jnp").run(ks)
+    b = get_backend("distributed")
+    monkeypatch.setattr(DistributedBackend, "n_devices", property(lambda self: 4))
+    queries = _mixed_queries(rng, np.asarray(ks.words))
+    want_f, want_r = _oracle(res.tree, queries)
+    got_f, got_r = b.lookup(res.tree, jnp.asarray(queries))
+    np.testing.assert_array_equal(want_f, np.asarray(got_f))
+    np.testing.assert_array_equal(want_r, np.asarray(got_r))
+    routed = b.last_info["lookup_routed"]
+    assert len(routed) == 4 and sum(routed) == queries.shape[0]
+    assert sum(1 for c in routed if c) >= 2  # the mix actually spread out
+
+
+# ---------------------------------------------------------------------------
+# plan-cache behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_lookup_steady_stream_zero_retrace(rng):
+    """Drifting same-bucket batch sizes replay one compiled program."""
+    ks = _keyset(rng, 1000)
+    res = ReconstructionPipeline(backend="jnp").run(ks)
+    b = _backend("jnp")
+    b.lookup(res.tree, jnp.asarray(np.asarray(ks.words)[:200]))  # trace
+    s0 = plancache.cache_stats()
+    for q in (130, 255, 64, 201):
+        b.lookup(res.tree, jnp.asarray(np.asarray(ks.words)[:q]))
+    s1 = plancache.cache_stats()
+    assert s1["traces"] == s0["traces"], (s0, s1)
+    assert s1["hits"] >= s0["hits"] + 4
+
+
+def test_lookup_zero_retrace_across_snapshot_versions(rng):
+    """A rebuild of the same-sized index (a new snapshot epoch) replays
+    the cached lookup program — the steady read path never recompiles."""
+    from repro.core.pipeline import fold_keyset
+
+    ks = _keyset(rng, 1000)
+    pipe = ReconstructionPipeline(backend="jnp")
+    prev = pipe.run(ks)
+    b = _backend("jnp")
+    queries = jnp.asarray(np.asarray(ks.words)[:100])
+    b.lookup(prev.tree, queries)  # trace
+    # balanced churn: delete 30 rows, insert 30 redrawn ones — n unchanged
+    keep = np.ones(ks.n, bool)
+    keep[rng.choice(ks.n, size=30, replace=False)] = False
+    delta = KeySet(
+        words=np.asarray(ks.words)[rng.integers(0, ks.n, size=30)],
+        lengths=np.full(30, 12, np.int32),
+        rids=np.arange(5000, 5030, dtype=np.uint32),
+    )
+    from repro.core.metadata import meta_from_keys
+
+    meta = meta_from_keys(np.concatenate([ks.words, delta.words]))
+    prev = pipe.run(ks, meta=meta)
+    b.lookup(prev.tree, queries)  # (re)trace under this meta's geometry
+    nxt, folded = pipe.run_incremental(prev, ks, delta, keep_rows=keep, meta=meta)
+    assert folded.n == ks.n
+    s0 = plancache.cache_stats()
+    got_f, got_r = b.lookup(nxt.tree, queries)
+    s1 = plancache.cache_stats()
+    assert s1["traces"] == s0["traces"], (s0, s1)
+    want_f, want_r = _oracle(nxt.tree, np.asarray(queries))
+    np.testing.assert_array_equal(want_f, np.asarray(got_f))
+    np.testing.assert_array_equal(want_r, np.asarray(got_r))
+
+
+# ---------------------------------------------------------------------------
+# the probe kernel itself
+# ---------------------------------------------------------------------------
+
+
+def test_lookup_kernel_probe_matches_ref(rng):
+    from repro.kernels.lookup import probe
+    from repro.kernels.lookup.ref import probe_ref
+
+    for m, w in ((37, 2), (512, 3), (700, 3)):
+        queries = rng.integers(0, 2**32, size=(m, w), dtype=np.uint32)
+        starts = rng.integers(-4, w * 32 + 4, size=(m,)).astype(np.int32)
+        for pk in (8, 16):
+            # half the lanes get their true window (match), half garbage
+            from repro.kernels.build.ref import pk_windows_ref
+
+            entry_pk = pk_windows_ref(queries, starts, pk)
+            entry_pk[::2] ^= np.uint32(1)
+            want = probe_ref(queries, starts, entry_pk, pk)
+            got = np.asarray(
+                probe(jnp.asarray(queries), jnp.asarray(starts),
+                      jnp.asarray(entry_pk), pk, interpret=True)
+            )
+            np.testing.assert_array_equal(want, got)
+            assert want[1::2].all() and not want[::2].any()
+
+
+def test_scalar_search_is_batched_row(rng):
+    """The bugfix contract: OnlineIndex.search is a thin wrapper over
+    search_batch, so the scalar and batched answers cannot diverge."""
+    from repro.core.index import OnlineIndex
+
+    ks = _keyset(rng, 400)
+    oi = OnlineIndex.build(ks)
+    oi.insert(np.asarray([9, 9, 9], np.uint32), 777)
+    oi.delete(np.asarray(ks.words[3]))
+    queries = np.concatenate(
+        [np.asarray(ks.words)[:8], np.asarray([[9, 9, 9]], np.uint32)]
+    )
+    fb, rb = oi.search_batch(queries)
+    for i, q in enumerate(queries):
+        f, r = oi.search(q)
+        assert (f, r) == (bool(fb[i]), int(rb[i]))
+    assert not fb[3]  # the tombstoned row
+    assert fb[-1] and rb[-1] == 777  # the delta row
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (parity across backends and bucket boundaries)
+# ---------------------------------------------------------------------------
+
+
+def test_lookup_parity_hypothesis(rng):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 10**6),
+        n=st.integers(280, 600),
+        q_off=st.integers(-2, 2),
+        dup=st.booleans(),
+        ones=st.booleans(),
+    )
+    def check(seed, n, q_off, dup, ones):
+        r = np.random.default_rng(seed)
+        words = r.integers(0, 2**32, size=(n, 2), dtype=np.uint32) & np.uint32(
+            0x0FFF00FF
+        )
+        if dup:
+            words[1] = words[0]
+        if ones:
+            words[2] = 0xFFFFFFFF
+        ks = KeySet(
+            words=words, lengths=np.full(n, 8, np.int32),
+            rids=np.arange(n, dtype=np.uint32),
+        )
+        res = ReconstructionPipeline(backend="jnp").run(ks)
+        q = max(1, plancache.BUCKET_MIN + q_off)
+        queries = words[r.integers(0, n, size=q)]
+        queries[::2] ^= np.uint32(0x4)
+        want_f, want_r = _oracle(res.tree, queries)
+        for name in BACKENDS:
+            got_f, got_r = _backend(name).lookup(res.tree, jnp.asarray(queries))
+            np.testing.assert_array_equal(want_f, np.asarray(got_f), err_msg=name)
+            np.testing.assert_array_equal(want_r, np.asarray(got_r), err_msg=name)
+
+    check()

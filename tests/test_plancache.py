@@ -71,6 +71,75 @@ def test_cache_counters_hit_miss():
     assert cache.stats()["misses"] == 1 and cache.stats()["hits"] == 1
 
 
+def test_cache_lru_bound_and_eviction_counters():
+    """The optional ``max_programs`` bound evicts least-recently-used
+    programs and counts the victims (long-lived-server hygiene)."""
+    cache = plancache.PlanCache(max_programs=2)
+    built = []
+
+    def make(tag):
+        return lambda: built.append(tag) or (lambda: tag)
+
+    cache.program(("a",), make("a"))
+    cache.program(("b",), make("b"))
+    cache.program(("a",), make("a2"))  # hit: refreshes a's recency
+    cache.program(("c",), make("c"))   # evicts b (the LRU), not a
+    st = cache.stats()
+    assert st["programs"] == 2 and st["evictions"] == 1
+    assert st["max_programs"] == 2
+    assert built == ["a", "b", "c"]
+    assert cache.program(("a",), make("a3"))() == "a"  # a survived
+    assert cache.program(("b",), make("b2"))() == "b2"  # b rebuilds...
+    assert built == ["a", "b", "c", "b2"]
+    assert cache.stats()["evictions"] == 2  # ...evicting the next LRU (c)
+    # unbounded cache never evicts
+    unbounded = plancache.PlanCache()
+    for i in range(64):
+        unbounded.program(("k", i), make(i))
+    assert unbounded.stats()["evictions"] == 0
+    assert unbounded.stats()["programs"] == 64
+    # reset zeroes counters but keeps the configured bound
+    cache.reset()
+    assert cache.stats() == {
+        "programs": 0, "hits": 0, "misses": 0, "traces": 0,
+        "evictions": 0, "max_programs": 2,
+    }
+
+
+def test_cache_lru_bound_stays_correct_under_real_ops(rng):
+    """A tightly bounded cache re-traces evicted programs but never
+    answers wrong: padded sorts at many buckets stay byte-identical."""
+    cache = plancache.PlanCache(max_programs=1)
+    from repro.core.dbits import sort_words_keyed
+
+    for n in (255, 300, 600, 257):
+        keys = jnp.asarray(
+            rng.integers(0, 2**32, size=(n, 2), dtype=np.uint32), jnp.uint32
+        )
+        rows = jnp.asarray(rng.permutation(n).astype(np.uint32))
+        ks_ref, rs_ref = sort_words_keyed(keys, rows)
+        ks, rs = plancache.sort_padded(keys, rows, cache=cache)
+        np.testing.assert_array_equal(np.asarray(ks_ref), np.asarray(ks))
+        np.testing.assert_array_equal(np.asarray(rs_ref), np.asarray(rs))
+        assert cache.stats()["programs"] <= 1
+    assert cache.stats()["evictions"] >= 1
+
+
+def test_set_max_programs_global():
+    plancache.reset_cache()
+    try:
+        plancache.set_max_programs(3)
+        assert plancache.cache_stats()["max_programs"] == 3
+    finally:
+        plancache.set_max_programs(None)
+        assert plancache.cache_stats()["max_programs"] is None
+    # a zero bound is rejected, not silently floored at 1
+    with pytest.raises(ValueError):
+        plancache.set_max_programs(0)
+    with pytest.raises(ValueError):
+        plancache.PlanCache(max_programs=0)
+
+
 def test_trace_counter_counts_traces_not_calls():
     cache = plancache.PlanCache()
     f = cache.jit(lambda x: x + 1)

@@ -1,0 +1,276 @@
+"""Versioned snapshot read path: publish/acquire protocol, torn reads.
+
+The acceptance contract: queries issued concurrently with
+``StreamReplica.poll`` / ``OnlineIndex.rebuild`` are answered from the
+pinned snapshot — every answer matches exactly one published epoch,
+never a mixture of two reconstructions — and the snapshot epoch
+round-trips through the checkpoint layer.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import plancache
+from repro.core.keyformat import KeySet
+from repro.core.pipeline import ReconstructionPipeline
+from repro.core.snapshot import SnapshotCell
+from repro.replication import ChangeLog, QueueTransport, StreamPrimary, StreamReplica
+from repro.replication.replica import Replica
+
+
+def _keyset(rng, n, w=3, mask=0x00FF0F0F, rid_base=0):
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(mask)
+    return KeySet(
+        words=words, lengths=np.full(n, w * 4, np.int32),
+        rids=np.arange(rid_base, rid_base + n, dtype=np.uint32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the cell protocol
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_cell_publish_pin_retire(rng):
+    ks = _keyset(rng, 300)
+    pipe = ReconstructionPipeline(backend="jnp")
+    cell = SnapshotCell()
+    with pytest.raises(RuntimeError):
+        cell.acquire()  # nothing published yet
+    res0 = pipe.run(ks, publish_to=cell)
+    assert cell.epoch == 0 and cell.current.tree is res0.tree
+
+    pinned = cell.acquire()
+    res1 = pipe.run(ks, publish_to=cell)  # double buffer: next epoch
+    assert cell.epoch == 1 and cell.current.tree is res1.tree
+    # the pinned epoch-0 snapshot survives the swap, untouched
+    assert pinned.epoch == 0 and pinned.tree is res0.tree
+    assert cell.stats()["retired"] == 1
+    cell.release(pinned)
+    assert cell.stats()["retired"] == 0  # dropped once unpinned
+
+    # an unpinned previous snapshot is dropped immediately on publish
+    pipe.run(ks, publish_to=cell)
+    assert cell.epoch == 2 and cell.stats()["retired"] == 0
+
+    with pytest.raises(RuntimeError):
+        cell.release(pinned)  # double release is a bug, not a no-op
+    with pytest.raises(ValueError):
+        cell.publish(res1, epoch=1)  # epochs must increase
+
+    # frozen metadata: mutating the producer's result cannot reach a snapshot
+    snap = cell.current
+    res1.meta.dbitmap[:] = 0
+    assert snap.meta.dbitmap.any() or snap.meta.dbitmap.shape == (0,)
+
+
+def test_snapshot_cell_resume_epoch(rng):
+    ks = _keyset(rng, 280)
+    cell = SnapshotCell(start_epoch=41)
+    ReconstructionPipeline(backend="jnp").run(ks, publish_to=cell)
+    assert cell.epoch == 42  # resumed numbering, not restarted at 0
+
+
+# ---------------------------------------------------------------------------
+# readers pinned across a rebuild (OnlineIndex + Replica)
+# ---------------------------------------------------------------------------
+
+
+def test_online_index_reader_pinned_across_rebuild(rng):
+    from repro.core.index import OnlineIndex
+
+    ks = _keyset(rng, 400)
+    oi = OnlineIndex.build(ks)
+    victim = np.asarray(ks.words[7])
+    pinned = oi.snapshots.acquire()
+    oi.delete(victim)
+    oi2 = oi.rebuild()
+    assert oi2.snapshots is oi.snapshots and oi2.snapshots.epoch == 1
+    # the new epoch answers post-delete; the pinned epoch still finds it
+    f_new, _ = oi2.search(victim)
+    assert not f_new
+    f_old, _ = pinned.lookup(oi2._backend_obj(), victim[None, :])
+    assert bool(f_old[0])
+    oi.snapshots.release(pinned)
+    # the pre-rebuild *instance* stays bound to its own epoch: its
+    # overlay (which recorded the delete) composes with the pre-rebuild
+    # tree, never with the successor's — rid reuse in the successor
+    # cannot make the old instance's tombstones mask a live key
+    assert oi._snapshot.epoch == 0 and oi2._snapshot.epoch == 1
+    f, _ = oi.search(victim)
+    assert not f  # old instance: base hit masked by its own tombstone
+    f, r = oi.search(np.asarray(ks.words[8]))
+    assert f and r == 8  # and untouched keys still answer from epoch 0
+
+
+def test_replica_epochs_align_with_watermarks(rng):
+    ks = _keyset(rng, 350)
+    rep = Replica(ks)
+    assert rep.snapshots.epoch == 0
+    assert rep.snapshots.current.watermark is None
+    lsn = 0
+    for i in range(3):
+        log = ChangeLog(3, start_lsn=lsn)
+        log.append_inserts(np.asarray(ks.words)[i : i + 2],
+                           np.arange(9000 + 2 * i, 9002 + 2 * i, dtype=np.uint32))
+        lsn = log.next_lsn
+        rep.apply(log)
+        assert rep.snapshots.epoch == i + 1
+        assert rep.snapshots.current.watermark == lsn - 1
+    # a net-empty (noop) batch still publishes: epochs track watermarks
+    log = ChangeLog(3, start_lsn=lsn)
+    log.append_inserts(np.asarray(ks.words)[:1], [4242])
+    log.append_deletes([4242])
+    st = rep.apply(log)
+    assert st["noop"] and rep.snapshots.epoch == 4
+    assert rep.snapshots.current.watermark == log.next_lsn - 1
+
+
+# ---------------------------------------------------------------------------
+# the torn-read acceptance test
+# ---------------------------------------------------------------------------
+
+
+class _ProbingTransport(QueueTransport):
+    """A transport whose reads fire a probe — queries *inside* poll()."""
+
+    def __init__(self):
+        super().__init__()
+        self.probe = None
+
+    def read(self, pos):
+        if self.probe is not None:
+            self.probe("transport-read")
+        return super().read(pos)
+
+
+def test_no_torn_reads_during_poll(rng):
+    """Queries interleaved with ``StreamReplica.poll`` — fired between
+    frame reads and at the instants just before and after each snapshot
+    swap — must each match exactly ONE published epoch's answers."""
+    base = _keyset(rng, 500)
+    t = _ProbingTransport()
+    prim = StreamPrimary(t, base)
+    rep = StreamReplica(t)
+    rep.poll()  # bring-up (no probing yet)
+
+    # the probe keys: X is deleted by the batch, Y inserted by it — the
+    # two epochs answer (found_x, found_y) as (True, False) / (False, True)
+    x = np.asarray(base.words[11])
+    y = (np.asarray(base.words[12]) ^ np.uint32(0x30000)).astype(np.uint32)
+    log = ChangeLog(3, start_lsn=prim.next_lsn)
+    log.append_deletes([11])
+    log.append_inserts(y[None, :], [7777])
+    answers = []
+
+    def probe(where):
+        if rep.replica is None:
+            return
+        fx, _ = rep.replica.search(x)
+        fy, rid_y = rep.replica.search(y)
+        answers.append((where, fx, fy, rid_y))
+
+    # also probe at the swap itself: just before publish the rebuild is
+    # complete but unpublished — reads must still see the old epoch
+    cell = rep.replica.snapshots
+    orig_publish = cell.publish
+
+    def probed_publish(result, epoch=None):
+        probe("pre-swap")
+        snap = orig_publish(result, epoch=epoch)
+        probe("post-swap")
+        return snap
+
+    cell.publish = probed_publish
+    t.probe = probe
+    prim.publish(log)
+    rep.poll()
+    t.probe = None
+    cell.publish = orig_publish
+
+    assert len(answers) >= 3
+    pre = (True, False)
+    post = (False, True)
+    for where, fx, fy, rid_y in answers:
+        assert (fx, fy) in (pre, post), (where, fx, fy)
+        if (fx, fy) == post:
+            assert rid_y == 7777
+    # both epochs were actually observed (pre-swap probes the old one,
+    # post-swap the new one)
+    observed = {(fx, fy) for _, fx, fy, _ in answers}
+    assert observed == {pre, post}, answers
+    # and a fresh query now sees the post-watermark answer
+    assert rep.replica.search(x) == (False, int(0xFFFFFFFF))
+
+
+def test_steady_query_stream_zero_retrace_across_polls(rng):
+    """The acceptance criterion: a same-bucket query stream interleaved
+    with balanced-churn polls records zero new traces once warm."""
+    base = _keyset(rng, 600)
+    t = QueueTransport()
+    prim = StreamPrimary(t, base)
+    rep = StreamReplica(t)
+    rep.poll()
+    queries = np.asarray(base.words)[:: 3]
+
+    def churn():
+        # redraw 10 live keys: n stays constant, tree geometry stable
+        log = ChangeLog(3, start_lsn=prim.next_lsn)
+        dead = np.asarray(prim.replica.keyset.rids)[:10]
+        log.append_deletes(dead)
+        log.append_inserts(
+            np.asarray(prim.replica.keyset.words)[:10],
+            np.asarray(dead) + np.uint32(50000),
+        )
+        prim.publish(log)
+        rep.poll()
+
+    churn()
+    rep.search_batch(queries)  # warm the lookup program (the delegate)
+    churn()
+    s0 = plancache.cache_stats()
+    for q in (len(queries), len(queries) - 7, len(queries) - 40):
+        f, r = rep.search_batch(queries[:q])
+        assert f.shape == (q,) and r.dtype == np.uint32
+    churn()
+    rep.search_batch(queries)
+    s1 = plancache.cache_stats()
+    assert s1["traces"] == s0["traces"], (s0, s1)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round trip of the snapshot epoch
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_epoch_roundtrips_through_checkpoint(tmp_path, rng):
+    base = _keyset(rng, 400)
+    t = QueueTransport()
+    prim = StreamPrimary(t, base, ckpt_dir=str(tmp_path / "ckpt"))
+    rep = StreamReplica(t)
+    for i in range(3):
+        log = ChangeLog(3, start_lsn=prim.next_lsn)
+        log.append_inserts(np.asarray(base.words)[i : i + 4],
+                           np.arange(8000 + 4 * i, 8004 + 4 * i, dtype=np.uint32))
+        prim.publish(log)
+    man = prim.checkpoint()
+    assert man["meta"]["snapshot_epoch"] == prim.replica.snapshots.epoch
+
+    from repro.ckpt.checkpoint import restore_checkpoint
+
+    _, stats = restore_checkpoint(tmp_path / "ckpt", man["step"], {})
+    assert stats["snapshot_epoch"] == man["meta"]["snapshot_epoch"]
+
+    # a bootstrapped replica resumes the primary's epoch numbering
+    st = rep.poll()
+    assert st["catchup"] is False or True  # poll drains; bootstrap only on gap
+    lag = StreamReplica(t, start_pos=t.end() - 1)  # sees only the ckpt frame
+    st = lag.poll()
+    assert st["catchup"]
+    assert lag.replica.snapshots.epoch == man["meta"]["snapshot_epoch"]
+    # and subsequent batches keep incrementing from there
+    log = ChangeLog(3, start_lsn=prim.next_lsn)
+    log.append_deletes([0])
+    prim.publish(log)
+    lag.poll()
+    assert lag.replica.snapshots.epoch == man["meta"]["snapshot_epoch"] + 1

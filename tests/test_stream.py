@@ -371,6 +371,99 @@ def test_catchup_equals_never_lagged_hypothesis(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# shed adoption as a logged event (control frames)
+# ---------------------------------------------------------------------------
+
+
+def _stale_bit_base() -> KeySet:
+    """Rows 0/1 differ only at bit 63; deleting both makes that bit stale."""
+    words = np.zeros((6, 2), np.uint32)
+    words[0] = (0, 0)
+    words[1] = (0, 1)
+    for i in range(2, 6):
+        words[i] = (i << 8, 0)
+    return KeySet(
+        words=words, lengths=np.full(6, 8, np.int32),
+        rids=np.arange(6, dtype=np.uint32),
+    )
+
+
+def test_shed_frame_keeps_replicas_identical_at_every_watermark():
+    """The primary's shed lands in the stream as a control frame; a
+    per-batch tailing replica and one draining the whole span in a single
+    poll both adopt it at the shed watermark — byte-identical metadata and
+    state at head, whatever the poll cadence (closes the ROADMAP item)."""
+    from repro.replication import ShedFrame
+
+    t = QueueTransport()
+    prim = StreamPrimary(t, _stale_bit_base(), shed_delete_frac=0.1)
+    tail = StreamReplica(t)   # polls after every publish
+    span = StreamReplica(t)   # drains everything after genesis in one poll
+    tail.poll()
+    span.poll()
+
+    shed_batch = ChangeLog(2, start_lsn=prim.next_lsn)
+    shed_batch.append_deletes([0, 1])  # crosses the 10% threshold
+    prim.publish(shed_batch)
+    assert prim.stats["n_shed_frames"] == 1
+    frame = decode_frame(t.read(t.end() - 1))
+    assert isinstance(frame, ShedFrame)
+    assert frame.lsn == shed_batch.next_lsn - 1
+    # the frame round-trips through the wire encoding
+    assert decode_frame(encode_frame(frame)) == frame
+
+    st = tail.poll()
+    assert st["shed_adopted"] == 1
+    # the per-batch tail adopted at the watermark: stale bit 63 is gone
+    # and the metadata equals the primary's exactly
+    assert not (tail.replica.meta.dbitmap[1] & np.uint32(1))
+    np.testing.assert_array_equal(tail.replica.meta.dbitmap,
+                                  prim.replica.meta.dbitmap)
+
+    post = ChangeLog(2, start_lsn=prim.next_lsn)
+    post.append_inserts(np.asarray([[7 << 8, 0]], np.uint32), [100])
+    prim.publish(post)
+    tail.poll()
+    st_span = span.poll()  # shed batch + shed frame + post batch, one poll
+    assert st_span["shed_adopted"] == 1
+    # the shed frame split the span: BOTH spans' apply stats are kept
+    # ("applies"), and the post-shed one paid the full resort under the
+    # narrow bitmap, exactly like the primary's
+    assert len(st_span["applies"]) == 2
+    assert st_span["applies"][0]["n_deleted"] == 2
+    assert st_span["apply"] is st_span["applies"][-1]
+    assert st_span["apply"]["fallback"] == "dbitmap_changed"
+    for rep in (tail, span):
+        _assert_replica_state_identical(rep.replica, prim.replica)
+        _assert_matches_full_run(rep.replica, "jnp")
+
+
+def test_shed_frame_stale_and_bootstrap_cases(tmp_path):
+    """A bootstrapped replica's checkpoint already reflects the shed (the
+    primary realigns before snapshotting); a stale duplicate shed frame at
+    a watermark the replica is past is skipped, not re-adopted."""
+    from repro.replication import ShedFrame
+
+    t = QueueTransport()
+    prim = StreamPrimary(t, _stale_bit_base(), shed_delete_frac=0.1,
+                         ckpt_dir=str(tmp_path / "ckpt"))
+    log = ChangeLog(2, start_lsn=prim.next_lsn)
+    log.append_deletes([0, 1])
+    prim.publish(log)  # sheds, publishes the control frame
+    prim.checkpoint()  # realigned snapshot at the shed watermark
+    late = StreamReplica(t, start_pos=t.end() - 1)  # only the ckpt frame
+    st = late.poll()
+    assert st["catchup"] and st["shed_adopted"] == 0
+    _assert_replica_state_identical(late.replica, prim.replica)
+    # a stale duplicate of the shed control frame (delivery fault) at a
+    # watermark the replica has passed is skipped
+    t.publish(encode_frame(ShedFrame(lsn=0)))
+    st = late.poll()
+    assert st["shed_adopted"] == 0 and late.stats["n_shed_adoptions"] == 0
+    _assert_replica_state_identical(late.replica, prim.replica)
+
+
+# ---------------------------------------------------------------------------
 # serve layer: pager journal shipping + engine follow mode
 # ---------------------------------------------------------------------------
 
