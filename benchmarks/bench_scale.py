@@ -1,0 +1,134 @@
+"""Million-key reconstruction scaling sweep (BENCH_scale.json).
+
+The PR-6 claim measured: with in-program dynamic valid-count padding the
+warm rebuild is a shape-stable replay (zero retraces, zero eager host
+pads) at *every* size, and the chunked large-N sort path carries the same
+property past the chunk threshold — a million-key rebuild runs entirely
+on the handful of chunk-bucket programs plus a cascade of cached merges.
+
+Per (backend x size) cell: cold wall (pays every trace), warm per-stage
+wall (median of ``iters``), warm trace count (asserted zero), achieved
+effective bandwidth against a one-pass byte model, and the fraction of
+the ``repro.launch.roofline`` HBM roof that bandwidth represents.
+
+Byte model (one pass per stage — a deliberate lower bound, so the
+reported bytes/s never flatters):
+
+  extract: read n*W*4, write n*Wc*4
+  sort:    read + write n*(Wc+1)*4   (key words + the rid word)
+  build:   read n*(Wc+W)*4, write ~n*(2+1+1)*4 leaf entry fields
+
+  python -m benchmarks.run --only scale --json BENCH_scale.json
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import plancache
+from repro.core.keyformat import KeySet
+from repro.core.pipeline import ReconstructionPipeline
+from repro.launch.roofline import HBM_BW
+
+from .common import emit, timed
+
+DEFAULT_SIZES = (65536, 262144, 1048576 + 4096)  # 64k -> 1M+ (off-boundary)
+
+
+def _keyset(rng, n: int, n_words: int) -> KeySet:
+    words = rng.integers(
+        0, 2**32, size=(n, n_words), dtype=np.uint32
+    ) & np.uint32(0x0FFF0FFF)
+    return KeySet(
+        words=words,
+        lengths=np.full(n, n_words * 4, np.int32),
+        rids=np.arange(n, dtype=np.uint32),
+    )
+
+
+def _stage_bytes(n: int, w: int, wc: int) -> dict[str, float]:
+    return {
+        "extract": n * 4.0 * (w + wc),
+        "sort": n * 4.0 * 2 * (wc + 1),
+        "build": n * 4.0 * (wc + w + 4),
+    }
+
+
+def run(
+    sizes: tuple[int, ...] = DEFAULT_SIZES,
+    backends: tuple[str, ...] = ("jnp", "pallas"),
+    n_words: int = 3,
+    iters: int = 3,
+    assert_zero_warm_traces: bool = True,
+) -> list[dict]:
+    print(f"# Scaling sweep: sizes={list(sizes)}, backends={list(backends)}")
+    rng = np.random.default_rng(0)
+    rows: list[dict] = []
+    for name in backends:
+        pipe = ReconstructionPipeline(backend=name)
+        for n in sizes:
+            ks = _keyset(rng, n, n_words)
+
+            t0 = time.perf_counter()
+            res_cold = pipe.run(ks)
+            cold_wall = time.perf_counter() - t0
+
+            meta = res_cold.meta  # reuse: warm calls skip meta_from_keys
+            s0 = plancache.cache_stats()
+            t_warm, res_warm = timed(lambda: pipe.run(ks, meta=meta),
+                                     warmup=1, iters=iters)
+            warm_traces = plancache.cache_stats()["traces"] - s0["traces"]
+
+            warm = dict(res_warm.timings)
+            wc = int(res_warm.comp_sorted.shape[1])
+            bmodel = _stage_bytes(n, n_words, wc)
+            total_bytes = sum(bmodel.values())
+            stage_wall = (
+                warm["extract"] + warm["sort"] + warm["build"]
+            )
+            achieved = total_bytes / max(stage_wall, 1e-9)
+            per_stage_bw = {
+                k: bmodel[k] / max(warm[k], 1e-9) for k in bmodel
+            }
+            row = {
+                "name": f"scale/{name}/{n}",
+                "backend": name,
+                "n_keys": n,
+                "n_words": n_words,
+                "comp_words": wc,
+                "chunked": res_warm.stats["chunked"],
+                "cold_wall_s": cold_wall,
+                "warm_wall_s": t_warm,
+                "warm": {
+                    k: warm[k]
+                    for k in ("extract", "sort", "build", "refresh_meta",
+                              "total")
+                },
+                "warm_traces": warm_traces,
+                "model_bytes": bmodel,
+                "achieved_bytes_per_s": achieved,
+                "hbm_roof_fraction": achieved / HBM_BW,
+                "per_stage_bytes_per_s": per_stage_bw,
+                "plan_cache": plancache.cache_stats(),
+            }
+            rows.append(row)
+            emit(
+                f"scale/{name}/{n}",
+                warm["total"],
+                f"cold={cold_wall:.3f}s;warm_total={warm['total']:.4f}s;"
+                f"sort={warm['sort']:.4f}s;build={warm['build']:.4f}s;"
+                f"chunked={row['chunked']};traces={warm_traces};"
+                f"GBps={achieved / 1e9:.2f};"
+                f"hbm_frac={row['hbm_roof_fraction']:.4f}",
+            )
+            if assert_zero_warm_traces:
+                assert warm_traces == 0, (
+                    f"{name}/{n}: warm run recompiled {warm_traces} programs"
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -18,8 +18,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: pipeline,incremental,build,lookup,"
-                         "stream,table1,table2,table3,table4,table5,table6,"
-                         "apps")
+                         "stream,scale,table1,table2,table3,table4,table5,"
+                         "table6,apps")
     ap.add_argument("--fast", action="store_true", help="smaller datasets")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write structured suite results (timings per stage "
@@ -37,6 +37,7 @@ def main() -> None:
         bench_parallel_scaling,
         bench_pipeline,
         bench_replication_stream,
+        bench_scale,
         bench_sort_comparison,
         bench_zipf_sensitivity,
     )
@@ -58,6 +59,9 @@ def main() -> None:
             n_base=4096 if args.fast else 16384,
             batch_sizes=(64, 256) if args.fast else (64, 256, 1024),
             n_batches=4 if args.fast else 8,
+        ),
+        "scale": lambda: bench_scale.run(
+            sizes=(65536, 262144) if args.fast else bench_scale.DEFAULT_SIZES
         ),
         "table1": lambda: bench_construction.run(scale=scale),
         "table2": lambda: bench_datasets.run(scale=scale),

@@ -131,19 +131,40 @@ class ExecutionBackend(abc.ABC):
     # --------------------------------------------------------------- sort
     @abc.abstractmethod
     def sort(
-        self, keys: jnp.ndarray, rows: jnp.ndarray
+        self,
+        keys: jnp.ndarray,
+        rows: jnp.ndarray,
+        *,
+        n_valid: int | None = None,
+        keep_padded: bool = False,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Sort (n, W) keys with (n,) distinct row positions in [0, n).
 
         Returns (keys_sorted, rows_sorted) in ascending (key, row) order —
         see the determinism contract in the module docstring.
+
+        ``n_valid`` marks the inputs as already bucket-shaped with
+        ``n_valid`` real rows (pad lanes may be arbitrary; the cached
+        program normalizes them from the dynamic count).  ``keep_padded``
+        returns the bucket-shaped outputs (pads sorted to the tail) so
+        the pipeline can chain into the build programs without slicing
+        and re-padding.
         """
 
     # -------------------------------------------------------- fused path
     def fused_extract_sort(
-        self, words: jnp.ndarray, plan: ExtractionPlan, rows: jnp.ndarray
+        self,
+        words: jnp.ndarray,
+        plan: ExtractionPlan,
+        rows: jnp.ndarray,
+        *,
+        n_valid: int | None = None,
+        keep_padded: bool = False,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """extract+sort as one program; only if ``supports_fused``."""
+        """extract+sort as one program; only if ``supports_fused``.
+
+        ``n_valid`` / ``keep_padded`` behave as in :meth:`sort`.
+        """
         raise NotImplementedError(f"backend {self.name} has no fused path")
 
     # -------------------------------------------------------------- merge
@@ -180,19 +201,23 @@ class ExecutionBackend(abc.ABC):
         lengths: jnp.ndarray | None,
         config,
         rids: jnp.ndarray | None = None,
+        n_valid: int | None = None,
     ):
         """Stage 3 (§5.3): bottom-up bulk build of the partial-key B+tree.
 
         The default runs the cached jnp build programs; backends may
         substitute their own entry-gather realization (the Pallas backend
         passes its ``kernels/build`` pk-window kernel) — output trees must
-        be byte-identical across backends.
+        be byte-identical across backends.  ``n_valid`` marks
+        ``comp_sorted``/``row_sorted`` as bucket-shaped with ``n_valid``
+        real rows (the pipeline chains the sort stage's padded outputs in
+        without re-padding).
         """
         from repro.core.btree import build_btree
 
         return build_btree(
             comp_sorted, row_sorted, meta, words, lengths, config,
-            rids=rids, backend_name=self.name,
+            rids=rids, backend_name=self.name, n_valid=n_valid,
         )
 
     # ------------------------------------------------------------- lookup
@@ -216,12 +241,16 @@ class ExecutionBackend(abc.ABC):
         )
 
     # ------------------------------------------------------- refresh meta
-    def refresh_meta(self, comp_sorted: jnp.ndarray, meta, ref_key):
+    def refresh_meta(self, comp_sorted: jnp.ndarray, meta, ref_key,
+                     n_valid: int | None = None):
         """Stage 4 (§4.3): recompute DS-metadata at the opportune time.
 
         The adjacent D-bit positions run as a cached, shape-bucketed
         device program; the scatter-OR into the bitmap words is one
-        vectorized host op (``meta_on_rebuild``).
+        vectorized host op (``meta_on_rebuild``).  ``n_valid`` marks
+        ``comp_sorted`` as bucket-shaped with ``n_valid`` real rows.
+        Only the (n-1,) device dpos vector crosses to the host — the
+        sorted keys themselves stay on device.
         """
         import numpy as np
 
@@ -229,10 +258,15 @@ class ExecutionBackend(abc.ABC):
         from repro.core.plancache import adjacent_dpos_padded
 
         dpos = adjacent_dpos_padded(
-            jnp.asarray(comp_sorted, jnp.uint32), backend=self.name
+            jnp.asarray(comp_sorted, jnp.uint32), backend=self.name,
+            n_valid=n_valid,
         )
+        # comp_sorted is unused by meta_on_rebuild when dpos_comp is given;
+        # pass an empty view rather than forcing a device->host transfer of
+        # the (possibly bucket-padded) sorted run
+        comp_unused = np.zeros((0, int(comp_sorted.shape[1])), np.uint32)
         return meta_on_rebuild(
-            np.asarray(comp_sorted), meta, np.asarray(ref_key), dpos_comp=dpos
+            comp_unused, meta, np.asarray(ref_key), dpos_comp=dpos
         )
 
     # ----------------------------------------------------- batched (many)

@@ -26,11 +26,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compat import make_mesh
+from repro.compat import make_mesh, shard_map
 from repro.core.compress import ExtractionPlan, extract_bits
 from repro.core.dbits import rank_in_sorted_keyed
 from repro.core.distsort import make_sample_sort
-from repro.core.plancache import merge_padded
+from repro.core.plancache import (
+    bucket_for,
+    get_cache,
+    iota_u32,
+    merge_padded,
+    pad_run,
+    pad_tail,
+)
 
 from .base import ExecutionBackend, register_backend
 
@@ -42,6 +49,8 @@ _SENTINEL = np.uint32(0xFFFFFFFF)
 @register_backend("distributed")
 class DistributedBackend(ExecutionBackend):
     """shard_map sample sort over ``axis_name`` of ``mesh``."""
+
+    supports_batched = True
 
     def __init__(
         self,
@@ -78,30 +87,43 @@ class DistributedBackend(ExecutionBackend):
             )
         return self._fns[key]
 
-    def sort(self, keys, rows):
+    def sort(self, keys, rows, *, n_valid=None, keep_padded=False):
         keys = jnp.asarray(keys, jnp.uint32)
         rows = jnp.asarray(rows, jnp.uint32)
-        n, w = keys.shape
+        b, w = (int(s) for s in keys.shape)
+        n = b if n_valid is None else int(n_valid)
         p = self.n_devices
+
+        if n_valid is not None:
+            # inputs are bucket-shaped with arbitrary pad lanes; normalize
+            # from the dynamic count (scalar broadcasts — no materialized
+            # per-call fill): pad keys to the sentinel, pad rows to their
+            # lane index (>= n, so compaction strips them)
+            lane = iota_u32(b)
+            valid = lane < jnp.uint32(n)
+            keys = jnp.where(valid[:, None], keys, jnp.uint32(_SENTINEL))
+            rows = jnp.where(valid, rows, lane)
 
         # shard padding occupies row ids n..; reject out-of-range rows
         # rather than silently confusing them with padding
-        if int(jnp.max(rows)) >= n:
+        if n and int(jnp.max(rows[:n])) >= n:
             raise ValueError(
                 "distributed backend requires row positions in [0, n); "
-                f"got max row {int(jnp.max(rows))} for n={n}"
+                f"got max row {int(jnp.max(rows[:n]))} for n={n}"
             )
 
         # pad to a shard multiple; sentinel keys sort last, pad row ids are
-        # n.. so the (key, row) tie-break keeps real all-ones keys ahead
-        pad = (-n) % p
-        if pad:
-            keys = jnp.concatenate(
-                [keys, jnp.full((pad, w), _SENTINEL, jnp.uint32)], axis=0
-            )
-            rows = jnp.concatenate(
-                [rows, jnp.arange(n, n + pad, dtype=jnp.uint32)], axis=0
-            )
+        # n.. so the (key, row) tie-break keeps real all-ones keys ahead.
+        # Concat-free: sentinel tail via the cached-constant pad, row tail
+        # via one dynamic_update_slice of the real rows into a cached iota
+        # (its untouched tail lanes are exactly the pad ids cur_n..total-1)
+        cur = int(keys.shape[0])
+        total = cur + ((-cur) % p)
+        if total != cur:
+            keys = pad_tail(keys, total, _SENTINEL)
+            import jax.lax as lax
+
+            rows = lax.dynamic_update_slice(iota_u32(total), rows, (0,))
 
         res = self.sample_sort_raw(keys, rows)
 
@@ -109,10 +131,13 @@ class DistributedBackend(ExecutionBackend):
         valid = np.asarray(res.valid)
         k = np.asarray(res.keys)[valid]
         r = np.asarray(res.rids)[valid]
-        if pad:
-            real = r < n
-            k, r = k[real], r[real]
-        return jnp.asarray(k, jnp.uint32), jnp.asarray(r, jnp.uint32)
+        real = r < n
+        k, r = k[real], r[real]
+        ks = jnp.asarray(k, jnp.uint32)
+        rs = jnp.asarray(r, jnp.uint32)
+        if keep_padded:
+            return pad_run(ks, rs, b if n_valid is not None else bucket_for("sort", n))
+        return ks, rs
 
     def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):
         """Owner-shard routing + shard-local merges.
@@ -216,6 +241,57 @@ class DistributedBackend(ExecutionBackend):
             rid[sel] = np.asarray(r)
         self.last_info = {"mesh_devices": p, "lookup_routed": routed}
         return jnp.asarray(found), jnp.asarray(rid, jnp.uint32)
+
+    def batched_extract_sort(self, words, bitmaps, rows, plans):
+        """Shards ``run_many``'s *batch* axis across the mesh.
+
+        Each device extracts + sorts its ``k / p`` keysets entirely
+        shard-locally — batch parallelism instead of the sample sort's key
+        parallelism, so no bytes cross the interconnect at all.  The
+        shard_mapped program is memoized in the shared plan cache per
+        ``(k, n, W, Wc, p)``, so replication batches replay it.  Falls
+        back to the single-device vmap when the batch does not tile the
+        mesh axis.
+        """
+        k = int(words.shape[0])
+        p = self.n_devices
+        if p == 1 or k % p:
+            return super().batched_extract_sort(words, bitmaps, rows, plans)
+
+        from jax.sharding import PartitionSpec as P
+
+        cache = get_cache()
+        _, n, w = (int(s) for s in words.shape)
+        n_words_out = plans[0].n_words_out  # equal across the batch
+
+        def builder():
+            from repro.core.compress import extract_bits_dynamic
+            from repro.core.dbits import sort_words_keyed
+
+            def one(wds, bm, r):
+                comp = extract_bits_dynamic(wds, bm, n_words_out)
+                return sort_words_keyed(comp, r)
+
+            local = jax.vmap(one, in_axes=(0, 0, 0))
+            spec3 = P(self.axis_name, None, None)
+            spec2 = P(self.axis_name, None)
+            fn = shard_map(
+                local,
+                mesh=self.mesh,
+                in_specs=(spec3, spec2, spec2),
+                out_specs=(spec3, spec2),
+            )
+            return cache.jit(fn)
+
+        prog = cache.program(
+            ("run_many", self.name, k, n, w, n_words_out, p), builder
+        )
+        self.last_info = {"mesh_devices": p, "batch_per_shard": k // p}
+        return prog(
+            jnp.asarray(words, jnp.uint32),
+            jnp.asarray(bitmaps, jnp.uint32),
+            jnp.asarray(rows, jnp.uint32),
+        )
 
     def sample_sort_raw(self, keys, rows):
         """Device-side sample sort with overflow retry: the shard-padded

@@ -39,16 +39,16 @@ class JnpBackend(ExecutionBackend):
 
         return extract_bits(words, plan)
 
-    def sort(self, keys, rows):
+    def sort(self, keys, rows, *, n_valid=None, keep_padded=False):
         return sort_padded(
             jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32),
-            backend=self.name,
+            backend=self.name, n_valid=n_valid, keep_padded=keep_padded,
         )
 
-    def fused_extract_sort(self, words, plan, rows):
+    def fused_extract_sort(self, words, plan, rows, *, n_valid=None, keep_padded=False):
         return fused_extract_sort_padded(
             jnp.asarray(words, jnp.uint32), plan, jnp.asarray(rows, jnp.uint32),
-            backend=self.name,
+            backend=self.name, n_valid=n_valid, keep_padded=keep_padded,
         )
 
     def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):

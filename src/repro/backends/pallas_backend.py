@@ -73,7 +73,7 @@ class PallasBackend(ExecutionBackend):
             interpret=self.interpret,
         )
 
-    def sort(self, keys, rows):
+    def sort(self, keys, rows, *, n_valid=None, keep_padded=False):
         block, interpret = self.block, self.interpret
 
         def impl(kp, rp):
@@ -86,6 +86,7 @@ class PallasBackend(ExecutionBackend):
         return sort_padded(
             jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32),
             backend=self.name, impl=impl, extra_key=(block, interpret),
+            n_valid=n_valid, keep_padded=keep_padded,
         )
 
     def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):
@@ -102,7 +103,8 @@ class PallasBackend(ExecutionBackend):
             backend=self.name, impl=impl, extra_key=(tile, interpret),
         )
 
-    def build(self, comp_sorted, row_sorted, meta, words, lengths, config, rids=None):
+    def build(self, comp_sorted, row_sorted, meta, words, lengths, config,
+              rids=None, n_valid=None):
         """Cached build programs with the kernels/build tiled pk-window
         gather substituted for the jnp ``_slice_bits`` (bit-identical)."""
         from repro.core.btree import build_btree
@@ -112,6 +114,7 @@ class PallasBackend(ExecutionBackend):
             backend_name=self.name,
             slice_fn=build_ops.slice_fn(tile=self.build_tile, interpret=self.interpret),
             program_key_extra=(self.build_tile, self.interpret),
+            n_valid=n_valid,
         )
 
     def lookup(self, tree, queries):

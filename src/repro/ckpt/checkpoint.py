@@ -152,6 +152,7 @@ def _manifest_view(root: Path, step: int):
         names = [str(x) for x in m["names"]]
         keys = m["keys"].astype(np.uint32)
         return keys, np.arange(len(files), dtype=np.uint32), files, names
+    from repro.core.pipeline import fold_keyset
     from repro.replication import ChangeLog
 
     with np.load(step_dir / "delta_log.npz") as z:
@@ -159,9 +160,27 @@ def _manifest_view(root: Path, step: int):
     base_step = int(d["base_step"])
     bkeys, brids, bfiles, bnames = _manifest_view(root, base_step)
     log = ChangeLog.from_npz_dict(d)
-    keep, ins_words, _ins_lengths, ins_rids = log.fold(brids)
-    keys = np.concatenate([bkeys[keep], ins_words], axis=0)
-    rids = np.concatenate([brids[keep], ins_rids])
+    keep, ins_words, ins_lengths, ins_rids = log.fold(brids)
+    # fold through the pipeline's shared keyset fold — the same vectorized
+    # mask+append every incremental call site uses — instead of a private
+    # concatenate of the manifest columns
+    base_ks = KeySet(
+        words=bkeys,
+        lengths=np.full(bkeys.shape[0], bkeys.shape[1] * 4, np.int32),
+        rids=brids,
+    )
+    delta_ks = (
+        KeySet(
+            words=np.asarray(ins_words, np.uint32),
+            lengths=np.asarray(ins_lengths, np.int32),
+            rids=np.asarray(ins_rids, np.uint32),
+        )
+        if len(ins_rids)
+        else None
+    )
+    folded = fold_keyset(base_ks, keep_rows=keep, delta=delta_ks)
+    keys = np.asarray(folded.words, np.uint32)
+    rids = np.asarray(folded.rids, np.uint32)
     rel = f"../step_{base_step:08d}/"
     files = [rel + f for f in bfiles] + [str(x) for x in d["files"]]
     names = list(bnames) + [str(x) for x in d["names"]]

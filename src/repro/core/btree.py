@@ -212,6 +212,7 @@ def build_btree(
     backend_name: str = "jnp",
     program_key_extra: tuple = (),
     cache=None,
+    n_valid: int | None = None,
 ) -> BTree:
     """Bulk-build the tree from sorted compressed keys + row positions (§5.3).
 
@@ -232,6 +233,14 @@ def build_btree(
     the closure (tile size, interpret mode) must travel in
     ``program_key_extra`` so differently-configured backends never share a
     cached program.
+
+    ``n_valid`` marks ``comp_sorted``/``row_sorted`` as already
+    bucket-shaped with ``n_valid`` real rows (the pipeline's zero-copy
+    chaining out of the sort stage: the sort's padded outputs feed the
+    build programs directly).  Pad lanes may carry arbitrary content —
+    sort sentinels or zeros — because every program gather clips to the
+    dynamic ``n``/``n_off`` operands and the padded tail is sliced off
+    before assembly; the pad-contents property test pins this down.
     """
     from . import plancache
 
@@ -239,7 +248,7 @@ def build_btree(
     if slice_fn is None:
         slice_fn = _slice_bits
 
-    n = int(comp_sorted.shape[0])
+    n = int(comp_sorted.shape[0]) if n_valid is None else int(n_valid)
     W = int(table_words.shape[1])
     Wc = int(comp_sorted.shape[1])
     lc, nc = config.leaf_cap, config.nonleaf_cap
@@ -250,18 +259,25 @@ def build_btree(
     DB = W * 32  # d_off is padded to the max possible D-bit count (static)
     d_off_pad = jnp.asarray(_np_pad(d_off_np, DB, 0))
 
-    B = plancache.bucket(n)
-    comp_pad = plancache.pad_rows_2d(jnp.asarray(comp_sorted, jnp.uint32), B, 0)
-    words_pad = plancache.pad_rows_2d(jnp.asarray(table_words, jnp.uint32), B, 0)
-    row_pad = plancache.pad_rows_1d(jnp.asarray(row_sorted, jnp.uint32), B, 0)
+    B = (
+        int(comp_sorted.shape[0])
+        if n_valid is not None
+        else plancache.bucket_for("build", n)
+    )
+    # pad_tail is identity on already-bucket-shaped inputs (the warm path)
+    # and one dynamic_update_slice against a cached constant otherwise —
+    # no per-call jnp.concatenate / jnp.full anywhere in the build
+    comp_pad = plancache.pad_tail(jnp.asarray(comp_sorted, jnp.uint32), B, 0)
+    words_pad = plancache.pad_tail(jnp.asarray(table_words, jnp.uint32), B, 0)
+    row_pad = plancache.pad_tail(jnp.asarray(row_sorted, jnp.uint32), B, 0)
     if table_lengths is None:
-        lengths_pad = jnp.full((B,), W * 4, jnp.int32)
+        lengths_pad = plancache.const_full((B,), W * 4, jnp.int32)
     else:
-        lengths_pad = plancache.pad_rows_1d(jnp.asarray(table_lengths, jnp.int32), B, 0)
-    rids_pad = plancache.pad_rows_1d(
-        jnp.arange(n, dtype=jnp.uint32) if rids is None else jnp.asarray(rids, jnp.uint32),
-        B,
-        0,
+        lengths_pad = plancache.pad_tail(jnp.asarray(table_lengths, jnp.int32), B, 0)
+    rids_pad = (
+        plancache.iota_u32(B)
+        if rids is None
+        else plancache.pad_tail(jnp.asarray(rids, jnp.uint32), B, 0)
     )
 
     # ---------------- leaf level (one cached program + host reshape) -------
@@ -454,7 +470,14 @@ def _lookup_program(cache, leaf_match_fn):
     cache's ``traces``).
     """
 
-    def prog(tree, queries):
+    def prog(tree, queries, n_valid):
+        # normalize pad lanes in-program: the host pads with a cached
+        # constant whose content is irrelevant — lanes >= n_valid become
+        # all-ones queries (harmless descents, sliced off by the caller)
+        lane = jnp.arange(queries.shape[0], dtype=jnp.uint32)
+        queries = jnp.where(
+            (lane < n_valid)[:, None], queries, jnp.uint32(0xFFFFFFFF)
+        )
         node = _descend(tree, queries)
         valid = tree.leaf["valid"][node]
         _, keys = _leaf_keys(tree, node)
@@ -481,9 +504,13 @@ def lookup_batch_planned(
     Returns ``(found (q,) bool, rid (q,) uint32)`` with miss lanes
     normalized to :data:`NOT_FOUND_RID` — the backend ``lookup`` op's
     byte-identity contract.  The query batch pads to a plan-cache bucket
-    with all-ones sentinel queries (their lanes are garbage, sliced off
-    before return), so a steady query stream at drifting batch sizes
-    replays one compiled program per bucket.  ``leaf_match_fn`` substitutes
+    (floor tunable via ``plancache.set_bucket_floor("lookup", ...)``)
+    against a cached fill constant; the dynamic valid count travels as a
+    program operand and the pad lanes are normalized to all-ones queries
+    *inside* the program (their answers are garbage, sliced off before
+    return), so a steady query stream at drifting batch sizes replays one
+    compiled program per bucket with zero host-side pad allocation.
+    ``leaf_match_fn`` substitutes
     the leaf probe (it must imply full-key equality bit-for-bit — see
     ``_lookup_program``); configuration baked into it travels in
     ``program_key_extra`` so differently-configured backends never share a
@@ -496,11 +523,11 @@ def lookup_batch_planned(
         leaf_match_fn = _leaf_match_full
     queries = jnp.asarray(queries, jnp.uint32)
     q, w = int(queries.shape[0]), int(queries.shape[1])
-    b = plancache.bucket(q)
+    b = plancache.bucket_for("lookup", q)
     prog = cache.program(
         ("lookup", backend_name, b, w) + program_key_extra,
         lambda: _lookup_program(cache, leaf_match_fn),
     )
-    qp = plancache.pad_rows_2d(queries, b, 0xFFFFFFFF)
-    found, rid = prog(tree, qp)
+    qp = plancache.pad_tail(queries, b, 0xFFFFFFFF)
+    found, rid = prog(tree, qp, np.uint32(q))
     return found[:q], rid[:q]

@@ -153,6 +153,13 @@ class ReconstructionPipeline:
     backend_opts:  forwarded to the backend constructor when ``backend`` is
                    a name (e.g. ``{"interpret": False}`` for pallas on TPU,
                    ``{"mesh": mesh, "capacity_factor": 2.0}`` for distributed).
+    chunk_threshold: key counts above this take the chunked large-N sort
+                   path: the keyset splits into ``chunk_size``-aligned
+                   chunks, each sorted through the (small-bucket) cached
+                   sort programs, folded with a binary cascade of cached
+                   merges.  Keeps million-key rebuilds on the same handful
+                   of compiled programs the serving sizes already trace.
+    chunk_size:    chunk length for the large-N path (power of two).
     """
 
     def __init__(
@@ -161,6 +168,8 @@ class ReconstructionPipeline:
         config: BTreeConfig = BTreeConfig(),
         fused: bool = False,
         backend_opts: dict | None = None,
+        chunk_threshold: int = 1 << 19,
+        chunk_size: int = 1 << 17,
     ) -> None:
         if isinstance(backend, ExecutionBackend):
             self.backend = backend
@@ -168,27 +177,73 @@ class ReconstructionPipeline:
             self.backend = get_backend(backend, **(backend_opts or {}))
         self.config = config
         self.fused = bool(fused)
+        self.chunk_threshold = int(chunk_threshold)
+        self.chunk_size = int(chunk_size)
+        if self.chunk_size & (self.chunk_size - 1):
+            raise ValueError(f"chunk_size must be a power of two, got {chunk_size}")
 
     # ------------------------------------------------------------- stages
     def extract(self, words: jnp.ndarray, plan) -> jnp.ndarray:
         """Stage 1 (§5.1): full keys -> compressed keys via the D-bitmap."""
         return self.backend.extract(words, plan)
 
-    def sort(self, comp: jnp.ndarray, rows: jnp.ndarray):
+    def sort(self, comp: jnp.ndarray, rows: jnp.ndarray, *,
+             n_valid: int | None = None, keep_padded: bool = False):
         """Stage 2 (§5.2): parallel sort of (comp key, row) pairs."""
-        return self.backend.sort(comp, rows)
+        return self.backend.sort(
+            comp, rows, n_valid=n_valid, keep_padded=keep_padded
+        )
 
-    def build(self, comp_sorted, row_sorted, meta, words, lengths, rids) -> BTree:
+    def build(self, comp_sorted, row_sorted, meta, words, lengths, rids,
+              n_valid: int | None = None) -> BTree:
         """Stage 3 (§5.3): bottom-up bulk build (backend-dispatched — the
         cached per-level build programs, with backend entry gathers)."""
         return self.backend.build(
-            comp_sorted, row_sorted, meta, words, lengths, self.config, rids=rids
+            comp_sorted, row_sorted, meta, words, lengths, self.config,
+            rids=rids, n_valid=n_valid,
         )
 
-    def refresh_meta(self, comp_sorted, meta: DSMeta, ref_key) -> DSMeta:
+    def refresh_meta(self, comp_sorted, meta: DSMeta, ref_key,
+                     n_valid: int | None = None) -> DSMeta:
         """Stage 4 (§4.3): recompute DS-metadata at the opportune time
         (backend-dispatched: cached device dpos program + host scatter-OR)."""
-        return self.backend.refresh_meta(comp_sorted, meta, ref_key)
+        return self.backend.refresh_meta(comp_sorted, meta, ref_key,
+                                         n_valid=n_valid)
+
+    def _sort_chunked(self, comp: jnp.ndarray, n: int, b: int):
+        """Large-N sort: bucket-aligned chunks + a cascade of cached merges.
+
+        Each chunk sorts with *local* rows (every chunk replays the same
+        small-bucket cached program and satisfies the [0, m) row contract);
+        the chunk offset is added afterwards, which preserves the sorted
+        (key, row) order because the offset is monotone within the chunk.
+        The binary merge cascade then runs entirely on cached
+        ``merge_sorted`` programs, so the fold is byte-identical to one
+        monolithic sort by associativity of the total (key, row) order.
+        Returns ``(b,)``-padded buffers (pads at the tail) for zero-copy
+        chaining into the build programs.
+        """
+        from . import plancache
+
+        c = self.chunk_size
+        runs = []
+        for s in range(0, n, c):
+            m = min(c, n - s)
+            ck, cr = self.backend.sort(comp[s : s + m], plancache.iota_u32(m))
+            runs.append((ck, jnp.asarray(cr, jnp.uint32) + jnp.uint32(s)))
+        while len(runs) > 1:
+            nxt = []
+            for i in range(0, len(runs) - 1, 2):
+                ka, ra = runs[i]
+                kb, rb = runs[i + 1]
+                nxt.append(self.backend.merge_sorted(ka, ra, kb, rb))
+            if len(runs) % 2:
+                nxt.append(runs[-1])
+            runs = nxt
+        ks, rs = runs[0]
+        return plancache.pad_run(
+            jnp.asarray(ks, jnp.uint32), jnp.asarray(rs, jnp.uint32), b
+        )
 
     # ---------------------------------------------------------------- run
     def run(
@@ -210,10 +265,21 @@ class ReconstructionPipeline:
         ``repro.core.snapshot.SnapshotCell``) atomically publishes the
         finished result as the cell's next snapshot epoch before returning.
         """
-        words = jnp.asarray(keyset.words, jnp.uint32)
+        from . import plancache
+
+        n = keyset.n
         rids = jnp.asarray(keyset.rids, jnp.uint32)
         lengths = jnp.asarray(keyset.lengths, jnp.int32)
-        rows = jnp.arange(keyset.n, dtype=jnp.uint32)
+        # enter the bucket world once: pad the full keys to the sort bucket
+        # against cached constants (one dynamic_update_slice, no per-call
+        # concatenate/fill) and take the cached iota as the row ids.  Pad
+        # lane *content* is irrelevant from here on — every cached program
+        # renormalizes its pads from the dynamic valid-count operand.
+        b = plancache.bucket_for("sort", n)
+        words_dev = plancache.pad_tail(
+            jnp.asarray(keyset.words, jnp.uint32), b, 0xFFFFFFFF
+        )
+        rows_dev = plancache.iota_u32(b)
 
         t_meta = 0.0
         if full_keys:
@@ -226,24 +292,48 @@ class ReconstructionPipeline:
 
         # -- extract / sort (backend-dispatched, optionally fused) ---------
         fused_used = False
-        if full_keys:
-            comp, t_extract = words, 0.0
-            (comp_sorted, row_sorted), t_sort = _timed(self.sort, comp, rows)
+        chunks = 0
+        if n > self.chunk_threshold:
+            # large-N path: extraction stays one bucket-shaped program; the
+            # sort splits into chunk-bucket programs + a merge cascade
+            chunks = -(-n // self.chunk_size)
+            if full_keys:
+                comp, t_extract = words_dev, 0.0
+            else:
+                comp, t_extract = _timed(self.extract, words_dev, plan)
+            (comp_sorted_p, row_sorted_p), t_sort = _timed(
+                lambda: self._sort_chunked(comp, n, b)
+            )
+        elif full_keys:
+            t_extract = 0.0
+            (comp_sorted_p, row_sorted_p), t_sort = _timed(
+                lambda: self.sort(words_dev, rows_dev, n_valid=n, keep_padded=True)
+            )
         elif self.fused and self.backend.supports_fused:
             fused_used = True
             t_extract = 0.0
-            (comp_sorted, row_sorted), t_sort = _timed(
-                self.backend.fused_extract_sort, words, plan, rows
+            (comp_sorted_p, row_sorted_p), t_sort = _timed(
+                lambda: self.backend.fused_extract_sort(
+                    words_dev, plan, rows_dev, n_valid=n, keep_padded=True
+                )
             )
         else:
-            comp, t_extract = _timed(self.extract, words, plan)
-            (comp_sorted, row_sorted), t_sort = _timed(self.sort, comp, rows)
-        row_sorted = jnp.asarray(row_sorted, jnp.uint32)
+            comp, t_extract = _timed(self.extract, words_dev, plan)
+            (comp_sorted_p, row_sorted_p), t_sort = _timed(
+                lambda: self.sort(comp, rows_dev, n_valid=n, keep_padded=True)
+            )
+        row_sorted_p = jnp.asarray(row_sorted_p, jnp.uint32)
+        comp_sorted = comp_sorted_p[:n]
+        row_sorted = row_sorted_p[:n]
         rid_sorted = rids[row_sorted]
 
-        # -- build ---------------------------------------------------------
+        # -- build (padded buffers chain straight in; n_valid carries the
+        # -- real count, so no slice-and-re-pad between the stages) --------
         tree, t_build = _timed(
-            self.build, comp_sorted, row_sorted, meta, words, lengths, rids
+            lambda: self.build(
+                comp_sorted_p, row_sorted_p, meta, words_dev, lengths, rids,
+                n_valid=n,
+            )
         )
 
         # -- refresh DS-metadata (opportune time, §4.3) ----------------------
@@ -251,7 +341,9 @@ class ReconstructionPipeline:
         new_meta = meta
         if not full_keys:
             t0 = time.perf_counter()
-            new_meta = self.refresh_meta(comp_sorted, meta, keyset.words[0])
+            new_meta = self.refresh_meta(
+                comp_sorted_p, meta, keyset.words[0], n_valid=n
+            )
             t_refresh = time.perf_counter() - t0
 
         timings = {
@@ -263,6 +355,7 @@ class ReconstructionPipeline:
             "total": t_extract + t_sort + t_build,
         }
         stats = self._stats(keyset, meta, comp_sorted, row_sorted, tree, fused_used)
+        stats["chunked"] = chunks
         res = ReconstructionResult(
             tree=tree,
             meta=new_meta,
@@ -523,7 +616,12 @@ class ReconstructionPipeline:
         groups: dict[tuple[int, int, int], list[int]] = {}
         for i, (ks, m) in enumerate(zip(keysets, metas)):
             groups.setdefault(
-                (plancache.bucket(ks.n), ks.n_words, m.plan().n_words_out), []
+                (
+                    plancache.bucket_for("run_many", ks.n),
+                    ks.n_words,
+                    m.plan().n_words_out,
+                ),
+                [],
             ).append(i)
 
         t_meta = t_meta_total / max(len(keysets), 1)
@@ -543,7 +641,7 @@ class ReconstructionPipeline:
 
         k = len(keysets)
         plans = [m.plan() for m in metas]
-        b = plancache.bucket(max(ks.n for ks in keysets))
+        b = plancache.bucket_for("run_many", max(ks.n for ks in keysets))
         # members pad to the shared bucket boundary: all-ones sentinel keys
         # extract to the maximal compressed pattern and the reserved row-id
         # range breaks ties, so each member's pads sort strictly last and

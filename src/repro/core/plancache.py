@@ -9,26 +9,39 @@ worse one).  Under a churny workload the sizes drift every call and the
 hot path never stops compiling.
 
 This module fixes the program count, not the programs: inputs are padded
-up to **bucket boundaries** (powers of two with a floor), compiled
+up to **bucket boundaries** (powers of two with a per-op floor), compiled
 programs are memoized in a :class:`PlanCache` keyed by
 ``(op, backend, bucket(s), n_words, static config)``, and the dynamic
-part of the shape travels as data — either a valid-count scalar operand or
-sentinel padding rows that sort strictly after every real row.  A serving
-load whose sizes drift within a bucket replays one compiled program
-forever; crossing a bucket boundary costs exactly one new compile.
+part of the shape travels as data — a ``n_valid`` scalar operand.  A
+serving load whose sizes drift within a bucket replays one compiled
+program forever; crossing a bucket boundary costs exactly one new compile.
 
-Padding discipline (what keeps byte-identity):
+Padding is an **in-program** concept: every cached program takes
+bucket-shaped buffers plus the dynamic valid count, and the first thing
+the traced body does is normalize the pad lanes with masked
+``jnp.where`` writes over the static bucket shape.  The host side
+therefore never materializes sentinel rows per call — the pad fill is a
+**cached device constant** (built once per ``(shape, fill, dtype)``, on
+the cold path only) that inputs are copied into with one
+``lax.dynamic_update_slice``.  Warm same-bucket calls are shape-stable
+replays with zero host allocation and zero eager ``jnp.concatenate`` /
+``jnp.full`` dispatches — the property the warm-path regression test
+asserts by monkeypatching those two functions.
 
-* **sort / merge / fused extract+sort** — pad rows carry the all-ones
-  sentinel key and row ids from a reserved range (``>= 2**31``, above any
-  real row position, which the backend contract bounds by ``n < 2**31``).
-  Under the (key, row) determinism contract the pads therefore compare
-  strictly after every real pair — equal-key ties break on the row id —
-  so the first ``n`` output rows are bit-for-bit the unpadded result and
-  the pads are sliced off before anything downstream sees them.
-* **build / refresh** — pads are inert garbage lanes: every consumer
-  clips its gathers to the valid count (carried as a dynamic scalar
-  operand) and the padded tail is sliced off host-side.
+Normalization discipline (what keeps byte-identity):
+
+* **sort / merge / fused extract+sort** — pad lanes are rewritten to the
+  all-ones sentinel key and row ids from a reserved range (``>= 2**31``,
+  above any real row position, which the backend contract bounds by
+  ``n < 2**31``).  Under the (key, row) determinism contract the pads
+  therefore compare strictly after every real pair — equal-key ties break
+  on the row id — so the first ``n`` output rows are bit-for-bit the
+  unpadded result and the pads are sliced off before anything downstream
+  sees them.  Because the normalization happens *inside* the program, the
+  incoming pad lanes may carry arbitrary garbage.
+* **build / refresh / lookup** — pads are inert garbage lanes: every
+  consumer clips its gathers to the valid count (carried as a dynamic
+  scalar operand) and the padded tail is sliced off host-side.
 
 Counters: ``hits``/``misses`` count cache lookups; ``traces`` counts
 actual program *tracings* (the Python body of a cached program runs only
@@ -39,7 +52,10 @@ form of "zero recompilations" the regression tests use.
 Long-lived servers can bound the cache: ``PlanCache(max_programs=N)``
 evicts the least-recently-used program past the bound (``evictions``
 counts them; an evicted program that is needed again simply rebuilds and
-re-traces).  The default is unbounded — the PR-3 behavior.
+re-traces).  ``auto_size=True`` additionally grows the bound when a
+recent window of lookups shows a low hit rate *while* evictions occur —
+the thrash signature of a bound set below the working set — doubling
+``max_programs`` up to ``auto_size_cap``.  The default is unbounded.
 """
 
 from __future__ import annotations
@@ -56,11 +72,17 @@ __all__ = [
     "ROW_PAD_A",
     "ROW_PAD_B",
     "bucket",
+    "bucket_for",
+    "set_bucket_floor",
+    "get_bucket_floor",
     "PlanCache",
     "get_cache",
     "reset_cache",
     "set_max_programs",
     "cache_stats",
+    "const_full",
+    "iota_u32",
+    "pad_tail",
     "pad_rows_2d",
     "pad_rows_1d",
     "pad_run",
@@ -70,7 +92,8 @@ __all__ = [
     "adjacent_dpos_padded",
 ]
 
-#: bucket floor — tiny inputs share one program instead of one per size
+#: default bucket floor — tiny inputs share one program instead of one per
+#: size; per-op overrides via :func:`set_bucket_floor`
 BUCKET_MIN = 256
 
 #: sentinel key word for pad rows (sorts last; ties break on the row id)
@@ -88,6 +111,36 @@ def bucket(n: int, minimum: int = BUCKET_MIN) -> int:
     return 1 << (n - 1).bit_length()
 
 
+#: per-op bucket floors (op -> floor); ops not listed use ``BUCKET_MIN``.
+#: The knob exists because one floor does not fit every op: a lookup
+#: query batch of 32 paying a 256-lane descent is pure wasted work, while
+#: the sort floor below 256 would shatter the program cache for no win.
+_FLOORS: dict[str, int] = {}
+
+
+def set_bucket_floor(op: str, floor: int | None) -> None:
+    """Override the bucket floor for one op family (``None`` restores the
+    ``BUCKET_MIN`` default).  Lowering a floor after programs were traced
+    at the old floor costs one re-trace per newly reachable bucket —
+    change floors at startup, not mid-stream."""
+    if floor is None:
+        _FLOORS.pop(op, None)
+        return
+    if int(floor) < 1:
+        raise ValueError(f"bucket floor must be >= 1, got {floor}")
+    _FLOORS[op] = int(floor)
+
+
+def get_bucket_floor(op: str) -> int:
+    """The effective bucket floor for ``op``."""
+    return _FLOORS.get(op, BUCKET_MIN)
+
+
+def bucket_for(op: str, n: int) -> int:
+    """Bucket of ``n`` under ``op``'s floor (see :func:`set_bucket_floor`)."""
+    return bucket(n, get_bucket_floor(op))
+
+
 @dataclass
 class PlanCache:
     """Memoized compiled programs + hit/miss/trace/eviction counters.
@@ -95,6 +148,14 @@ class PlanCache:
     ``max_programs`` (optional) bounds the cache: past the bound the
     least-recently-used program is evicted (``programs`` is kept in
     recency order — a hit re-inserts its key at the end).
+
+    ``auto_size=True`` turns on hit-rate-driven growth of the bound:
+    whenever a window of ``auto_size_window`` lookups closes with a hit
+    rate below ``auto_size_hit_rate`` *and* at least one eviction inside
+    the window (i.e. the cache is thrashing, not merely cold), the bound
+    doubles, capped at ``auto_size_cap``.  ``resizes`` counts the growth
+    events (not part of :meth:`stats` — the zero-retrace assertions diff
+    that dict exactly).
     """
 
     programs: dict = field(default_factory=dict)
@@ -103,6 +164,14 @@ class PlanCache:
     traces: int = 0
     evictions: int = 0
     max_programs: int | None = None
+    auto_size: bool = False
+    auto_size_cap: int = 4096
+    auto_size_window: int = 64
+    auto_size_hit_rate: float = 0.5
+    resizes: int = 0
+    _win_lookups: int = 0
+    _win_hits: int = 0
+    _win_evictions: int = 0
 
     def __post_init__(self) -> None:
         if self.max_programs is not None and int(self.max_programs) < 1:
@@ -112,14 +181,17 @@ class PlanCache:
 
     def program(self, key: tuple, builder: Callable[[], Callable]) -> Callable:
         """The compiled program for ``key``, building it on first use."""
+        self._win_lookups += 1
         prog = self.programs.get(key)
         if prog is not None:
             self.hits += 1
+            self._win_hits += 1
             if self.max_programs is not None:
                 # refresh recency: dicts iterate in insertion order, so
                 # re-inserting makes the oldest entry the LRU victim
                 del self.programs[key]
                 self.programs[key] = prog
+            self._maybe_grow()
             return prog
         self.misses += 1
         prog = builder()
@@ -129,7 +201,23 @@ class PlanCache:
                 victim = next(iter(self.programs))
                 del self.programs[victim]
                 self.evictions += 1
+                self._win_evictions += 1
+        self._maybe_grow()
         return prog
+
+    def _maybe_grow(self) -> None:
+        """Close an auto-size window and grow the bound on thrash."""
+        if not self.auto_size or self.max_programs is None:
+            return
+        if self._win_lookups < int(self.auto_size_window):
+            return
+        hit_rate = self._win_hits / max(self._win_lookups, 1)
+        if self._win_evictions > 0 and hit_rate < float(self.auto_size_hit_rate):
+            grown = min(int(self.max_programs) * 2, int(self.auto_size_cap))
+            if grown > int(self.max_programs):
+                self.max_programs = grown
+                self.resizes += 1
+        self._win_lookups = self._win_hits = self._win_evictions = 0
 
     def jit(self, fn: Callable, **jit_kwargs) -> Callable:
         """``jax.jit`` with trace counting: the wrapper body executes only
@@ -157,9 +245,11 @@ class PlanCache:
 
     def reset(self) -> None:
         """Drop every cached program and zero the counters (tests); the
-        ``max_programs`` bound is configuration and survives."""
+        ``max_programs`` bound and auto-size configuration survive."""
         self.programs.clear()
         self.hits = self.misses = self.traces = self.evictions = 0
+        self.resizes = 0
+        self._win_lookups = self._win_hits = self._win_evictions = 0
 
 
 _GLOBAL = PlanCache()
@@ -171,8 +261,10 @@ def get_cache() -> PlanCache:
 
 
 def reset_cache() -> None:
-    """Reset the process-global cache (see :meth:`PlanCache.reset`)."""
+    """Reset the process-global cache (see :meth:`PlanCache.reset`) and
+    drop the cached pad-fill device constants."""
     _GLOBAL.reset()
+    _CONSTS.clear()
 
 
 def set_max_programs(max_programs: int | None) -> None:
@@ -199,48 +291,123 @@ def cache_stats() -> dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
-# padding helpers
+# padding helpers — cached fill constants + one dynamic_update_slice; no
+# per-call jnp.concatenate / jnp.full on the warm path
 # ---------------------------------------------------------------------------
+
+#: (shape, dtype name, fill) -> committed device constant.  Bounded by the
+#: set of distinct bucket shapes in flight — the same cardinality as the
+#: program cache itself.  Cleared by :func:`reset_cache`.
+_CONSTS: dict[tuple, jnp.ndarray] = {}
+
+
+def const_full(shape: tuple, fill, dtype) -> jnp.ndarray:
+    """A cached device constant of ``shape`` filled with ``fill``.
+
+    Built with ``jnp.full`` exactly once per ``(shape, dtype, fill)`` —
+    the cold path; warm callers get the committed array back.  Callers
+    must treat it as immutable (every consumer copies out of it via
+    ``dynamic_update_slice``, which is out-of-place).
+
+    Values produced while JAX is *tracing* (the pad helpers also run
+    inside traced program bodies, e.g. the kernel ops' tile pads) are
+    tracers and must never enter the cache — they would leak out of
+    their trace.  Tracer results are returned uncached; the constant
+    commits the first time the helper runs eagerly.
+    """
+    dtype = jnp.dtype(dtype)
+    key = (tuple(shape), dtype.name, int(fill))
+    out = _CONSTS.get(key)
+    if out is None:
+        out = jnp.full(tuple(shape), fill, dtype)
+        if not isinstance(out, jax.core.Tracer):
+            _CONSTS[key] = out
+    return out
+
+
+def iota_u32(n: int) -> jnp.ndarray:
+    """Cached ``arange(n)`` uint32 — the row-position operand of a freshly
+    scanned table, shared across calls (lane i of a bucket-shaped buffer
+    holds row i, which is exactly the iota's lane i).  Tracer results are
+    never cached (see :func:`const_full`)."""
+    key = ((int(n),), "uint32", -1)  # fill -1 never collides with const_full
+    out = _CONSTS.get(key)
+    if out is None:
+        out = jnp.arange(int(n), dtype=jnp.uint32)
+        if not isinstance(out, jax.core.Tracer):
+            _CONSTS[key] = out
+    return out
+
+
+def pad_tail(x: jnp.ndarray, total: int, fill, axis: int = 0) -> jnp.ndarray:
+    """Grow ``x`` to ``total`` along ``axis`` against a cached fill constant.
+
+    Identity when ``x`` is already ``total`` long (the warm zero-copy
+    case); otherwise one ``lax.dynamic_update_slice`` into the cached
+    constant — no ``jnp.concatenate``, no per-call ``jnp.full``.  The
+    pad content is ``fill``; cached programs that take a dynamic valid
+    count normalize their pads in-program and do not depend on it.
+    """
+    x = jnp.asarray(x)
+    n = int(x.shape[axis])
+    total = int(total)
+    if n == total:
+        return x
+    if n > total:
+        raise ValueError(f"cannot pad {n} rows down to {total}")
+    shape = list(x.shape)
+    shape[axis] = total
+    base = const_full(tuple(shape), fill, x.dtype)
+    if n == 0:
+        return base
+    return jax.lax.dynamic_update_slice(base, x, (0,) * x.ndim)
+
 
 def pad_rows_2d(x: jnp.ndarray, rows: int, fill) -> jnp.ndarray:
     """Pad the leading axis of (n, W) to ``rows`` with ``fill``."""
-    pad = rows - int(x.shape[0])
-    if pad <= 0:
-        return x
-    return jnp.concatenate(
-        [x, jnp.full((pad,) + tuple(x.shape[1:]), fill, x.dtype)], axis=0
-    )
+    return pad_tail(x, rows, fill, axis=0)
 
 
 def pad_rows_1d(x: jnp.ndarray, rows: int, fill) -> jnp.ndarray:
     """Pad a (n,) vector to ``rows`` with ``fill`` (1-D twin of
     :func:`pad_rows_2d`)."""
-    pad = rows - int(x.shape[0])
-    if pad <= 0:
-        return x
-    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    return pad_tail(x, rows, fill, axis=0)
 
 
 def pad_run(
     keys: jnp.ndarray, rows: jnp.ndarray, b: int, row_base: np.uint32 = ROW_PAD_A
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Pad a (key, row) run to ``b`` rows with sentinel pairs that sort last."""
+    """Pad a (key, row) run to ``b`` rows with sentinel pairs that sort last.
+
+    Pad lane ``i`` gets the all-ones key and row id ``row_base + i`` —
+    the same values the in-program normalization writes, so eagerly
+    padded runs and dynamically counted ones are interchangeable.
+    """
     n = int(keys.shape[0])
-    pad = b - n
-    if pad <= 0:
-        return jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32)
-    keys_p = pad_rows_2d(jnp.asarray(keys, jnp.uint32), b, SENTINEL)
-    rows_p = jnp.concatenate(
-        [
-            jnp.asarray(rows, jnp.uint32),
-            jnp.uint32(row_base) + jnp.arange(pad, dtype=jnp.uint32),
-        ]
-    )
+    keys = jnp.asarray(keys, jnp.uint32)
+    rows = jnp.asarray(rows, jnp.uint32)
+    if n >= b:
+        return keys, rows
+    keys_p = pad_tail(keys, b, SENTINEL)
+    pad_ids = jnp.uint32(row_base) + iota_u32(b)
+    rows_p = jax.lax.dynamic_update_slice(pad_ids, rows, (0,))
     return keys_p, rows_p
 
 
+def _mask_run(keys, rows, n_valid, row_base):
+    """In-program pad normalization: lanes >= n_valid become (all-ones
+    key, reserved row id) pairs that sort strictly last.  Runs inside the
+    traced body, so the incoming pad lanes may be arbitrary garbage."""
+    lane = jnp.arange(keys.shape[0], dtype=jnp.uint32)
+    valid = lane < n_valid
+    keys = jnp.where(valid[:, None], keys, jnp.uint32(SENTINEL))
+    rows = jnp.where(valid, rows, jnp.uint32(row_base) + lane)
+    return keys, rows
+
+
 # ---------------------------------------------------------------------------
-# bucketed stage wrappers
+# bucketed stage wrappers — every program takes bucket-shaped buffers plus
+# a dynamic n_valid operand (a np.uint32 scalar: fixed dtype, no retrace)
 # ---------------------------------------------------------------------------
 
 def sort_padded(
@@ -251,25 +418,47 @@ def sort_padded(
     impl: Callable | None = None,
     extra_key: tuple = (),
     cache: PlanCache | None = None,
+    n_valid: int | None = None,
+    keep_padded: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Bucketed keyed sort: one compiled program per (backend, bucket, W).
 
     ``impl(keys_pad, rows_pad) -> (keys_sorted, rows_sorted)`` is the
     backend's sort body (default: the jnp keyed sort); it runs inside one
-    jitted, cached program over the padded shapes.
+    jitted, cached program over the padded shapes, after the in-program
+    pad normalization.  ``n_valid`` (optional) marks the inputs as
+    already bucket-shaped with ``n_valid`` real rows — the zero-copy warm
+    path; without it the inputs are padded here (one
+    ``dynamic_update_slice`` against a cached constant).  ``keep_padded``
+    returns the full bucket-shaped outputs (pads sorted to the tail) for
+    callers that chain into another bucket-shaped stage.
     """
     cache = cache or _GLOBAL
-    n, w = int(keys.shape[0]), int(keys.shape[1])
-    b = bucket(n)
+    w = int(keys.shape[1])
+    if n_valid is None:
+        n = int(keys.shape[0])
+        b = bucket_for("sort", n)
+        keys = pad_tail(jnp.asarray(keys, jnp.uint32), b, SENTINEL)
+        rows = pad_tail(jnp.asarray(rows, jnp.uint32), b, 0)
+    else:
+        n = int(n_valid)
+        b = int(keys.shape[0])
     if impl is None:
         from .dbits import sort_words_keyed
 
         impl = sort_words_keyed
-    prog = cache.program(
-        ("sort", backend, b, w) + extra_key, lambda: cache.jit(impl)
-    )
-    kp, rp = pad_run(keys, rows, b)
-    ks, rs = prog(kp, rp)
+
+    def builder():
+        def prog(kp, rp, nv):
+            kp, rp = _mask_run(kp, rp, nv, ROW_PAD_A)
+            return impl(kp, rp)
+
+        return cache.jit(prog)
+
+    prog = cache.program(("sort", backend, b, w) + extra_key, builder)
+    ks, rs = prog(keys, rows, np.uint32(n))
+    if keep_padded:
+        return ks, rs
     return ks[:n], rs[:n]
 
 
@@ -283,29 +472,49 @@ def merge_padded(
     impl: Callable | None = None,
     extra_key: tuple = (),
     cache: PlanCache | None = None,
+    n_valid_a: int | None = None,
+    n_valid_b: int | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Bucketed two-run merge: one program per (backend, bucket_a, bucket_b, W).
 
     Fixes the per-``(na, nb)`` retrace of the jnp merge (ROADMAP): any
     (na, nb) inside the same bucket pair replays the cached program.  Pad
-    pairs sort after every real pair (sentinel key, reserved row range,
-    distinct between the runs), so the first ``na + nb`` merged rows are
-    byte-identical to the unpadded merge.
+    lanes are normalized *inside* the program (sentinel key, reserved row
+    range, distinct between the runs), so the first ``na + nb`` merged
+    rows are byte-identical to the unpadded merge regardless of what the
+    incoming pad lanes carried.
     """
     cache = cache or _GLOBAL
-    na, nb = int(keys_a.shape[0]), int(keys_b.shape[0])
     w = int(keys_a.shape[1])
-    ba, bb = bucket(na), bucket(nb)
+    if n_valid_a is None:
+        na = int(keys_a.shape[0])
+        ba = bucket_for("merge", na)
+        keys_a = pad_tail(jnp.asarray(keys_a, jnp.uint32), ba, SENTINEL)
+        rows_a = pad_tail(jnp.asarray(rows_a, jnp.uint32), ba, 0)
+    else:
+        na, ba = int(n_valid_a), int(keys_a.shape[0])
+    if n_valid_b is None:
+        nb = int(keys_b.shape[0])
+        bb = bucket_for("merge", nb)
+        keys_b = pad_tail(jnp.asarray(keys_b, jnp.uint32), bb, SENTINEL)
+        rows_b = pad_tail(jnp.asarray(rows_b, jnp.uint32), bb, 0)
+    else:
+        nb, bb = int(n_valid_b), int(keys_b.shape[0])
     if impl is None:
         from .dbits import merge_words_keyed
 
         impl = merge_words_keyed
-    prog = cache.program(
-        ("merge", backend, ba, bb, w) + extra_key, lambda: cache.jit(impl)
-    )
-    ka, ra = pad_run(keys_a, rows_a, ba, ROW_PAD_A)
-    kb, rb = pad_run(keys_b, rows_b, bb, ROW_PAD_B)
-    km, rm = prog(ka, ra, kb, rb)
+
+    def builder():
+        def prog(ka, ra, kb, rb, nva, nvb):
+            ka, ra = _mask_run(ka, ra, nva, ROW_PAD_A)
+            kb, rb = _mask_run(kb, rb, nvb, ROW_PAD_B)
+            return impl(ka, ra, kb, rb)
+
+        return cache.jit(prog)
+
+    prog = cache.program(("merge", backend, ba, bb, w) + extra_key, builder)
+    km, rm = prog(keys_a, rows_a, keys_b, rows_b, np.uint32(na), np.uint32(nb))
     return km[: na + nb], rm[: na + nb]
 
 
@@ -316,30 +525,42 @@ def fused_extract_sort_padded(
     *,
     backend: str = "jnp",
     cache: PlanCache | None = None,
+    n_valid: int | None = None,
+    keep_padded: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Bucketed fused extract+sort (one program per bucket *and* plan).
 
     All-ones pad keys extract to the all-ones compressed pattern — the
     maximum any real key can compress to, since the slack bits of the last
     compressed word are zero for every key — and the reserved row range
-    breaks the tie, so pads still sort strictly last.
+    breaks the tie, so pads still sort strictly last.  The pads are
+    normalized in-program from the dynamic valid count.
     """
     cache = cache or _GLOBAL
-    n, w = int(words.shape[0]), int(words.shape[1])
-    b = bucket(n)
+    w = int(words.shape[1])
+    if n_valid is None:
+        n = int(words.shape[0])
+        b = bucket_for("sort", n)
+        words = pad_tail(jnp.asarray(words, jnp.uint32), b, SENTINEL)
+        rows = pad_tail(jnp.asarray(rows, jnp.uint32), b, 0)
+    else:
+        n = int(n_valid)
+        b = int(words.shape[0])
 
     def builder():
         from .compress import extract_bits
         from .dbits import sort_words_keyed
 
-        def prog(wp, rp):
+        def prog(wp, rp, nv):
+            wp, rp = _mask_run(wp, rp, nv, ROW_PAD_A)
             return sort_words_keyed(extract_bits(wp, plan), rp)
 
         return cache.jit(prog)
 
     prog = cache.program(("fused", backend, b, w, plan), builder)
-    wp, rp = pad_run(words, rows, b)
-    ks, rs = prog(wp, rp)
+    ks, rs = prog(words, rows, np.uint32(n))
+    if keep_padded:
+        return ks, rs
     return ks[:n], rs[:n]
 
 
@@ -348,26 +569,41 @@ def adjacent_dpos_padded(
     *,
     backend: str = "jnp",
     cache: PlanCache | None = None,
+    n_valid: int | None = None,
 ) -> np.ndarray:
     """Adjacent distinction-bit positions of a sorted run, bucketed.
 
     The refresh stage's device half: one cached program per (backend,
-    bucket, Wc) computes all n-1 adjacent D-bit positions; the host half
-    (the scatter-OR into the 32-bit bitmap words) lives in
+    bucket, Wc) computes all bucket-1 adjacent D-bit positions over
+    in-program-normalized lanes (pads become all-ones rows, whose
+    adjacencies land past the ``n - 1`` slice); the host half (the
+    scatter-OR into the 32-bit bitmap words) lives in
     ``repro.core.metadata.meta_on_rebuild``.  Returns (n-1,) int32 with
     ``NO_DBIT`` at equal-key adjacencies.
     """
     cache = cache or _GLOBAL
-    n, wc = int(comp_sorted.shape[0]), int(comp_sorted.shape[1])
-    if n < 2:
-        return np.zeros((0,), np.int32)
-    b = bucket(n)
+    wc = int(comp_sorted.shape[1])
+    if n_valid is None:
+        n = int(comp_sorted.shape[0])
+        if n < 2:
+            return np.zeros((0,), np.int32)
+        b = bucket_for("refresh", n)
+        comp_sorted = pad_tail(jnp.asarray(comp_sorted, jnp.uint32), b, SENTINEL)
+    else:
+        n = int(n_valid)
+        if n < 2:
+            return np.zeros((0,), np.int32)
+        b = int(comp_sorted.shape[0])
 
     def builder():
         from .dbits import adjacent_dbit_positions
 
-        return cache.jit(adjacent_dbit_positions)
+        def prog(cp, nv):
+            lane = jnp.arange(cp.shape[0], dtype=jnp.uint32)
+            cp = jnp.where((lane < nv)[:, None], cp, jnp.uint32(SENTINEL))
+            return adjacent_dbit_positions(cp)
+
+        return cache.jit(prog)
 
     prog = cache.program(("refresh_dpos", backend, b, wc), builder)
-    comp_pad = pad_rows_2d(jnp.asarray(comp_sorted, jnp.uint32), b, SENTINEL)
-    return np.asarray(prog(comp_pad)[: n - 1], np.int32)
+    return np.asarray(prog(comp_sorted, np.uint32(n))[: n - 1], np.int32)

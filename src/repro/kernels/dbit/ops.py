@@ -4,22 +4,25 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.plancache import pad_tail
+
 from .kernel import DEFAULT_TILE, dbit_planes
 
 
 def adjacent_dbits(
     sorted_words: jnp.ndarray, tile: int = DEFAULT_TILE, interpret: bool = True
 ) -> jnp.ndarray:
-    """(n, W) sorted keys -> (n-1,) adjacent distinction bit positions."""
+    """(n, W) sorted keys -> (n-1,) adjacent distinction bit positions.
+
+    The tile pad rides ``plancache.pad_tail`` (cached zero constants, no
+    per-call concatenate); pad columns are equal in both operands, so
+    their positions are garbage that the ``[:m]`` slice strips.
+    """
     n, w = sorted_words.shape
     planes = jnp.asarray(sorted_words, jnp.uint32).T  # (W, n)
-    prev = planes[:, : n - 1]
-    cur = planes[:, 1:]
     m = n - 1
-    pad = (-m) % tile
-    if pad:
-        z = jnp.zeros((w, pad), jnp.uint32)
-        prev = jnp.concatenate([prev, z], axis=1)
-        cur = jnp.concatenate([cur, z], axis=1)
+    total = m + ((-m) % tile)
+    prev = pad_tail(planes[:, : n - 1], total, 0, axis=1)
+    cur = pad_tail(planes[:, 1:], total, 0, axis=1)
     out = dbit_planes(prev, cur, tile=tile, interpret=interpret)
     return out[:m]

@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.plancache import pad_tail
+
 from .kernel import DEFAULT_TILE, probe_planes
 
 
@@ -18,20 +20,18 @@ def probe(
     """(m, W) query keys + (m,) window starts + (m,) stored partial keys
     -> (m,) bool candidate mask (query window == stored partial key).
 
-    Pads the pair axis to a tile multiple (pad starts/pks are 0 — garbage
-    lanes, stripped before return), transposes to word planes, and runs
-    the tiled kernel.  Traces inside the cached lookup program, exactly
-    like ``kernels/build``'s ``slice_fn`` does inside the build programs.
+    Pads the pair axis to a tile multiple via ``plancache.pad_tail`` (pad
+    starts/pks are 0 — garbage lanes, stripped before return; cached zero
+    constants, no per-call concatenate), transposes to word planes, and
+    runs the tiled kernel.  Traces inside the cached lookup program,
+    exactly like ``kernels/build``'s ``slice_fn`` does inside the build
+    programs.
     """
     m, w = queries.shape
-    pad = (-m) % tile
-    planes = jnp.asarray(queries, jnp.uint32).T
-    starts = jnp.asarray(starts, jnp.int32)
-    entry_pk = jnp.asarray(entry_pk, jnp.uint32)
-    if pad:
-        planes = jnp.concatenate([planes, jnp.zeros((w, pad), jnp.uint32)], axis=1)
-        starts = jnp.concatenate([starts, jnp.zeros((pad,), jnp.int32)])
-        entry_pk = jnp.concatenate([entry_pk, jnp.zeros((pad,), jnp.uint32)])
+    total = m + ((-m) % tile)
+    planes = pad_tail(jnp.asarray(queries, jnp.uint32).T, total, 0, axis=1)
+    starts = pad_tail(jnp.asarray(starts, jnp.int32), total, 0)
+    entry_pk = pad_tail(jnp.asarray(entry_pk, jnp.uint32), total, 0)
     out = probe_planes(planes, starts, entry_pk, int(pk), tile=tile, interpret=interpret)
     return out[:m].astype(bool)
 

@@ -5,6 +5,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plancache import pad_tail
+
 from .kernel import DEFAULT_TILE, merge_rank_planes
 
 # Pad queries with the all-ones sentinel: their ranks are garbage but they
@@ -23,21 +25,18 @@ def merge_ranks(
     """#{i : (key_s, row_s)_i < (key_q, row_q)} per query, via the kernel.
 
     ``(keys_s, rows_s)`` ascending in (key, row); queries unrestricted.
-    Returns (n_q,) int32.
+    Returns (n_q,) int32.  The tile pad rides ``plancache.pad_tail``
+    (cached sentinel constant, no per-call concatenate).
     """
     n_q, w = keys_q.shape
     n_s = int(keys_s.shape[0])
     if n_q == 0 or n_s == 0:
         return jnp.zeros((n_q,), jnp.int32)
-    pad = (-n_q) % tile
     q_planes = jnp.concatenate(
         [jnp.asarray(keys_q, jnp.uint32).T, jnp.asarray(rows_q, jnp.uint32)[None, :]],
         axis=0,
     )
-    if pad:
-        q_planes = jnp.concatenate(
-            [q_planes, jnp.full((w + 1, pad), _SENTINEL, jnp.uint32)], axis=1
-        )
+    q_planes = pad_tail(q_planes, n_q + ((-n_q) % tile), _SENTINEL, axis=1)
     s_planes = jnp.concatenate(
         [jnp.asarray(keys_s, jnp.uint32).T, jnp.asarray(rows_s, jnp.uint32)[None, :]],
         axis=0,

@@ -1,0 +1,154 @@
+"""Chunked large-N sort path: byte-identity vs the monolithic sort on
+every backend, boundary sizes (2^k - 1, 2^k, 2^k + 1), cascade retrace
+stability, and the run_many batched grouping under per-op floors.
+
+The chunk sizes here are scaled far below the production defaults
+(``chunk_threshold=1<<19``) so the cascade runs in test time; the code
+path is identical — only the constants differ.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import plancache
+from repro.core.keyformat import KeySet
+from repro.core.metadata import meta_from_keys
+from repro.core.pipeline import ReconstructionPipeline
+
+
+def _keyset(rng, n, w=3, mask=0x0FFF00FF):
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(mask)
+    rids = np.arange(n, dtype=np.uint32)
+    rng.shuffle(rids)
+    return KeySet(words=words, lengths=np.full(n, w * 4, np.int32), rids=rids)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(11)
+
+
+def _assert_results_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.comp_sorted), np.asarray(b.comp_sorted))
+    np.testing.assert_array_equal(np.asarray(a.row_sorted), np.asarray(b.row_sorted))
+    np.testing.assert_array_equal(np.asarray(a.rid_sorted), np.asarray(b.rid_sorted))
+    np.testing.assert_array_equal(
+        np.asarray(a.tree.sorted_full), np.asarray(b.tree.sorted_full)
+    )
+    assert a.tree.height == b.tree.height
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "distributed"])
+@pytest.mark.parametrize("n", [2**12 - 1, 2**12, 2**12 + 1])
+def test_chunked_byte_identical_to_monolithic(rng, backend, n):
+    """The cascade fold must reproduce the monolithic sort bit-for-bit at
+    the awkward boundary sizes (last chunk of 1, exact tiling, one short)
+    on all three backends."""
+    ks = _keyset(rng, n)
+    meta = meta_from_keys(ks.words)
+    mono = ReconstructionPipeline(backend=backend, chunk_threshold=1 << 30)
+    chunked = ReconstructionPipeline(
+        backend=backend, chunk_threshold=2048, chunk_size=1024
+    )
+    res_m = mono.run(ks, meta=meta)
+    res_c = chunked.run(ks, meta=meta)
+    assert res_m.stats["chunked"] == 0
+    assert res_c.stats["chunked"] == -(-n // 1024)
+    _assert_results_equal(res_m, res_c)
+
+
+def test_chunked_full_keys_baseline(rng):
+    """The uncompressed baseline takes the chunked path too."""
+    n = 3000
+    ks = _keyset(rng, n)
+    mono = ReconstructionPipeline(backend="jnp", chunk_threshold=1 << 30)
+    chunked = ReconstructionPipeline(
+        backend="jnp", chunk_threshold=1024, chunk_size=512
+    )
+    res_m = mono.run(ks, full_keys=True)
+    res_c = chunked.run(ks, full_keys=True)
+    assert res_c.stats["chunked"] == -(-n // 512)
+    _assert_results_equal(res_m, res_c)
+
+
+def test_chunked_warm_zero_retrace(rng):
+    """A warm chunked rebuild replays entirely from the program cache:
+    chunk sorts, cascade merges, build levels, refresh — zero traces."""
+    plancache.reset_cache()
+    pipe = ReconstructionPipeline(
+        backend="jnp", chunk_threshold=2048, chunk_size=1024
+    )
+    ks = _keyset(rng, 5000)
+    meta = meta_from_keys(ks.words)
+    pipe.run(ks, meta=meta)
+    traced = plancache.get_cache().stats()["traces"]
+    pipe.run(_keyset(rng, 5000), meta=meta)  # same n -> same chunking
+    pipe.run(_keyset(rng, 4993), meta=meta)  # same buckets, drifted n
+    assert plancache.get_cache().stats()["traces"] == traced
+
+
+def test_chunk_size_must_be_power_of_two():
+    with pytest.raises(ValueError, match="power of two"):
+        ReconstructionPipeline(chunk_size=1000)
+
+
+def test_chunked_preserves_tree_queries(rng):
+    """End-to-end: lookups against a chunked-path tree answer exactly as
+    against the monolithic tree."""
+    from repro.backends import get_backend
+    import jax.numpy as jnp
+
+    n = 2**12 + 5
+    ks = _keyset(rng, n)
+    meta = meta_from_keys(ks.words)
+    res = ReconstructionPipeline(
+        backend="jnp", chunk_threshold=2048, chunk_size=1024
+    ).run(ks, meta=meta)
+    be = get_backend("jnp")
+    queries = jnp.asarray(ks.words[:64], jnp.uint32)
+    found, rid = be.lookup(res.tree, queries)
+    assert bool(np.all(np.asarray(found)))
+    np.testing.assert_array_equal(np.asarray(rid), np.asarray(ks.rids[:64]))
+
+
+def test_distributed_batched_extract_sort_sharded_subprocess():
+    """run_many's batch axis shards across the mesh: the sharded batched
+    program must reproduce the per-index jnp results exactly."""
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    import os
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = src
+    code = textwrap.dedent("""
+        import numpy as np
+        from repro.core.keyformat import KeySet
+        from repro.core.pipeline import ReconstructionPipeline
+        rng = np.random.default_rng(3)
+        def ks_of(seed, n=600, w=3):
+            r = np.random.default_rng(seed)
+            words = r.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(0x00FF0F0F)
+            rids = np.arange(n, dtype=np.uint32); r.shuffle(rids)
+            return KeySet(words=words, lengths=np.full(n, w * 4, np.int32), rids=rids)
+        keysets = [ks_of(s) for s in range(8)]  # 8 % 4 == 0 -> sharded path
+        dist = ReconstructionPipeline(backend="distributed")
+        ref = ReconstructionPipeline(backend="jnp")
+        outs = dist.run_many(keysets)
+        refs = [ref.run(k) for k in keysets]
+        assert all(o.stats.get("batched") == 8 for o in outs), [o.stats.get("batched") for o in outs]
+        for o, r in zip(outs, refs):
+            np.testing.assert_array_equal(np.asarray(o.comp_sorted), np.asarray(r.comp_sorted))
+            np.testing.assert_array_equal(np.asarray(o.rid_sorted), np.asarray(r.rid_sorted))
+        print("SHARDED RUN_MANY OK")
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SHARDED RUN_MANY OK" in r.stdout

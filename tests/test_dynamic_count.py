@@ -1,0 +1,310 @@
+"""Dynamic valid-count padding: retrace stability, warm-path zero host
+alloc, pad-content independence, per-op bucket floors, LRU auto-sizing.
+
+The tentpole invariant under test: every cached program takes pre-padded
+bucket-shaped buffers plus a dynamic ``n_valid`` operand and normalizes
+its pad lanes *in-program* — so (a) any ``n`` inside a bucket (including
+``n == bucket``) replays one compiled program, (b) a warm same-bucket
+call never dispatches an eager ``jnp.concatenate`` / ``jnp.full``, and
+(c) whatever garbage sits in the pad lanes cannot change the bytes of
+the first ``n`` output rows.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import get_backend
+from repro.core import plancache
+from repro.core.keyformat import KeySet
+from repro.core.metadata import meta_from_keys
+from repro.core.pipeline import ReconstructionPipeline
+
+
+def _keyset(rng, n, w=3, mask=0x00FF0F0F):
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(mask)
+    rids = np.arange(n, dtype=np.uint32)
+    rng.shuffle(rids)
+    return KeySet(words=words, lengths=np.full(n, w * 4, np.int32), rids=rids)
+
+
+# ---------------------------------------------------------------------------
+# retrace property: one program per bucket, any n_valid inside it
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_sort_zero_retrace_across_n_valid_in_bucket(rng, backend):
+    """Every n in a bucket — the bucket boundary itself included — must
+    replay the program traced by the first call."""
+    plancache.reset_cache()
+    be = get_backend(backend)
+    cache = plancache.get_cache()
+
+    def one(n):
+        keys = jnp.asarray(
+            rng.integers(0, 2**32, size=(n, 2), dtype=np.uint32)
+        )
+        sk, sr = be.sort(keys, jnp.arange(n, dtype=jnp.uint32))
+        assert sk.shape[0] == n and sr.shape[0] == n
+
+    one(200)  # traces the bucket-256 program
+    traced = cache.stats()["traces"]
+    for n in (130, 255, 256, 64, 201, 1):  # 256 == the bucket itself
+        one(n)
+    assert cache.stats()["traces"] == traced, "same-bucket call retraced"
+
+
+def test_pipeline_zero_retrace_across_n_valid_in_bucket(rng):
+    """Full run() — extract, sort, build, refresh — stays replay-only for
+    drifting n inside one bucket."""
+    plancache.reset_cache()
+    pipe = ReconstructionPipeline(backend="jnp")
+    cache = plancache.get_cache()
+    meta = None
+
+    ks0 = _keyset(rng, 300)
+    meta = meta_from_keys(ks0.words)
+    pipe.run(ks0, meta=meta)
+    traced = cache.stats()["traces"]
+    for n in (257, 400, 512, 511):  # bucket(300) == bucket(512) == 512
+        pipe.run(_keyset(rng, n), meta=meta)
+    assert cache.stats()["traces"] == traced
+
+
+# ---------------------------------------------------------------------------
+# warm path: zero eager concatenate/full, zero retraces
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_warm_run_no_eager_concat_or_full(rng, monkeypatch, fused):
+    """After one cold call, a warm same-bucket run() must execute zero
+    eager ``jnp.concatenate`` / ``jnp.full`` dispatches and zero traces.
+    (Calls inside traced program bodies don't count — traced bodies do
+    not run on replay, which is exactly the point.)"""
+    import jax
+
+    plancache.reset_cache()
+    pipe = ReconstructionPipeline(backend="jnp", fused=fused)
+    ks = _keyset(rng, 700)
+    meta = meta_from_keys(ks.words)
+    pipe.run(ks, meta=meta)  # cold: traces + commits the pad constants
+    traced = plancache.get_cache().stats()["traces"]
+
+    calls = {"concatenate": 0, "full": 0}
+    real_concat, real_full = jnp.concatenate, jnp.full
+
+    def counting_concat(*a, **k):
+        if not isinstance(jnp.zeros(()), jax.core.Tracer):
+            calls["concatenate"] += 1
+        return real_concat(*a, **k)
+
+    def counting_full(*a, **k):
+        calls["full"] += 1
+        return real_full(*a, **k)
+
+    monkeypatch.setattr(jnp, "concatenate", counting_concat)
+    monkeypatch.setattr(jnp, "full", counting_full)
+
+    ks2 = _keyset(rng, 690)  # same bucket, different n
+    pipe.run(ks2, meta=meta)
+
+    assert calls["concatenate"] == 0, "warm run dispatched eager concatenate"
+    assert calls["full"] == 0, "warm run dispatched eager jnp.full"
+    assert plancache.get_cache().stats()["traces"] == traced
+
+
+# ---------------------------------------------------------------------------
+# pad-content independence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_sort_output_independent_of_pad_contents(rng, backend):
+    """Bucket-shaped sort inputs with *different* garbage in the pad lanes
+    must produce byte-identical first-n output rows."""
+    be = get_backend(backend)
+    n, w = 100, 2
+    b = plancache.bucket_for("sort", n)
+    keys = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32)
+    rows = np.arange(n, dtype=np.uint32)
+
+    def padded(fill):
+        kp = np.full((b, w), fill, np.uint32)
+        rp = np.full((b,), fill & 0x7FFFFFFF, np.uint32)
+        kp[:n], rp[:n] = keys, rows
+        return jnp.asarray(kp), jnp.asarray(rp)
+
+    outs = []
+    for fill in (0, 0xDEADBEEF, 0xFFFFFFFF):
+        kp, rp = padded(fill)
+        sk, sr = be.sort(kp, rp, n_valid=n)
+        outs.append((np.asarray(sk), np.asarray(sr)))
+    for got_k, got_r in outs[1:]:
+        np.testing.assert_array_equal(outs[0][0], got_k)
+        np.testing.assert_array_equal(outs[0][1], got_r)
+
+
+def test_build_tree_independent_of_pad_contents(rng):
+    """pk-windows (and every other build gather) must clip to the dynamic
+    count: trees built from padded buffers with different pad garbage are
+    byte-identical."""
+    be = get_backend("jnp")
+    ks = _keyset(rng, 300)
+    meta = meta_from_keys(ks.words)
+    pipe = ReconstructionPipeline(backend="jnp")
+    res = pipe.run(ks, meta=meta)
+    n = ks.n
+    b = plancache.bucket_for("sort", n)
+
+    comp = np.asarray(res.comp_sorted)
+    rowp = np.asarray(res.row_sorted)
+    words = np.asarray(ks.words, np.uint32)
+
+    trees = []
+    for fill in (0, 0xA5A5A5A5):
+        comp_p = np.full((b, comp.shape[1]), fill, np.uint32)
+        row_p = np.full((b,), fill & 0x7FFFFFFF, np.uint32)
+        words_p = np.full((b, words.shape[1]), fill, np.uint32)
+        comp_p[:n], row_p[:n], words_p[:n] = comp, rowp, words
+        trees.append(
+            be.build(
+                jnp.asarray(comp_p), jnp.asarray(row_p), meta,
+                jnp.asarray(words_p), jnp.asarray(ks.lengths, jnp.int32),
+                pipe.config, rids=jnp.asarray(ks.rids, jnp.uint32), n_valid=n,
+            )
+        )
+    a, c = trees
+    np.testing.assert_array_equal(np.asarray(a.sorted_full), np.asarray(c.sorted_full))
+    np.testing.assert_array_equal(np.asarray(a.sorted_rids), np.asarray(c.sorted_rids))
+    for fname in ("rid", "pk", "dpos", "klen", "valid"):
+        np.testing.assert_array_equal(
+            np.asarray(a.leaf[fname]), np.asarray(c.leaf[fname]), err_msg=fname
+        )
+    assert len(a.levels) == len(c.levels)
+    for la, lc in zip(a.levels, c.levels):
+        for fname in ("child", "hi", "pk", "dpos", "klen"):
+            np.testing.assert_array_equal(
+                np.asarray(la[fname]), np.asarray(lc[fname]), err_msg=fname
+            )
+
+
+def test_lookup_miss_normalization_independent_of_pad_contents(rng):
+    """The cached lookup program normalizes its pad lanes in-program:
+    calling it with zero-filled pads instead of the all-ones pads the
+    wrapper uses must not change any real lane — found flags, hit rids,
+    and miss-lane NOT_FOUND_RID normalization included."""
+    from repro.core.btree import NOT_FOUND_RID, lookup_batch_planned
+
+    plancache.reset_cache()
+    ks = _keyset(rng, 500)
+    meta = meta_from_keys(ks.words)
+    res = ReconstructionPipeline(backend="jnp").run(ks, meta=meta)
+
+    q = 100
+    queries = np.asarray(ks.words[:q], np.uint32).copy()
+    queries[::3] ^= 0x1  # a mix of hits and misses
+    queries_j = jnp.asarray(queries)
+
+    f1, r1 = lookup_batch_planned(res.tree, queries_j, backend_name="jnp")
+    assert np.all(np.asarray(r1)[~np.asarray(f1)] == NOT_FOUND_RID)
+
+    b = plancache.bucket_for("lookup", q)
+    prog = plancache.get_cache().programs[("lookup", "jnp", b, ks.n_words)]
+    qp = np.zeros((b, ks.n_words), np.uint32)  # zero pads, not all-ones
+    qp[:q] = queries
+    f2, r2 = prog(res.tree, jnp.asarray(qp), np.uint32(q))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2[:q]))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2[:q]))
+
+
+# ---------------------------------------------------------------------------
+# per-op bucket floors
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_floor_per_op_override():
+    assert plancache.bucket_for("lookup", 10) == plancache.BUCKET_MIN
+    try:
+        plancache.set_bucket_floor("lookup", 32)
+        assert plancache.bucket_for("lookup", 10) == 32
+        assert plancache.bucket_for("lookup", 33) == 64
+        # other ops keep the default floor
+        assert plancache.bucket_for("sort", 10) == plancache.BUCKET_MIN
+        assert plancache.get_bucket_floor("lookup") == 32
+    finally:
+        plancache.set_bucket_floor("lookup", None)
+    assert plancache.bucket_for("lookup", 10) == plancache.BUCKET_MIN
+
+
+def test_bucket_floor_lowered_lookup_still_correct(rng):
+    """Lowering the lookup floor changes the program bucket, not answers."""
+    plancache.reset_cache()
+    ks = _keyset(rng, 300)
+    meta = meta_from_keys(ks.words)
+    res = ReconstructionPipeline(backend="jnp").run(ks, meta=meta)
+    queries = jnp.asarray(ks.words[:20], jnp.uint32)
+    be = get_backend("jnp")
+    f_ref, r_ref = be.lookup(res.tree, queries)
+    try:
+        plancache.set_bucket_floor("lookup", 32)
+        plancache.reset_cache()
+        f_lo, r_lo = be.lookup(res.tree, queries)
+    finally:
+        plancache.set_bucket_floor("lookup", None)
+        plancache.reset_cache()
+    np.testing.assert_array_equal(np.asarray(f_ref), np.asarray(f_lo))
+    np.testing.assert_array_equal(np.asarray(r_ref), np.asarray(r_lo))
+
+    rejected = plancache.set_bucket_floor
+    with pytest.raises(ValueError):
+        rejected("lookup", 0)
+
+
+# ---------------------------------------------------------------------------
+# LRU auto-sizing
+# ---------------------------------------------------------------------------
+
+
+def test_plancache_auto_size_grows_on_thrash():
+    cache = plancache.PlanCache(
+        max_programs=2, auto_size=True, auto_size_window=8, auto_size_cap=16
+    )
+    # 4 distinct hot programs against a bound of 2: every window closes
+    # with evictions and a ~0 hit rate -> the bound must double
+    for _ in range(8):
+        for k in range(4):
+            cache.program(("op", k), lambda: (lambda: None))
+    assert cache.resizes >= 1
+    assert cache.max_programs > 2
+    # stats() keeps its exact legacy shape (the zero-retrace tests diff it)
+    assert set(cache.stats()) == {
+        "programs", "hits", "misses", "traces", "evictions", "max_programs"
+    }
+
+
+def test_plancache_auto_size_respects_cap():
+    cache = plancache.PlanCache(
+        max_programs=2, auto_size=True, auto_size_window=4, auto_size_cap=4
+    )
+    for _ in range(32):
+        for k in range(8):
+            cache.program(("op", k), lambda: (lambda: None))
+    assert cache.max_programs == 4  # capped
+
+
+def test_plancache_auto_size_no_growth_without_evictions():
+    """A merely *cold* cache (low hit rate, no evictions) must not grow."""
+    cache = plancache.PlanCache(
+        max_programs=64, auto_size=True, auto_size_window=4
+    )
+    for k in range(16):
+        cache.program(("op", k), lambda: (lambda: None))
+    assert cache.resizes == 0
+    assert cache.max_programs == 64
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(42)
