@@ -61,7 +61,9 @@ def main() -> None:
             n_batches=4 if args.fast else 8,
         ),
         "scale": lambda: bench_scale.run(
-            sizes=(65536, 262144) if args.fast else bench_scale.DEFAULT_SIZES
+            sizes=(65536, 262144) if args.fast else bench_scale.DEFAULT_SIZES,
+            iters=2 if args.fast else 3,
+            auto_tune=not args.fast,
         ),
         "table1": lambda: bench_construction.run(scale=scale),
         "table2": lambda: bench_datasets.run(scale=scale),

@@ -137,6 +137,7 @@ class ExecutionBackend(abc.ABC):
         *,
         n_valid: int | None = None,
         keep_padded: bool = False,
+        donate: bool = False,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Sort (n, W) keys with (n,) distinct row positions in [0, n).
 
@@ -149,6 +150,13 @@ class ExecutionBackend(abc.ABC):
         returns the bucket-shaped outputs (pads sorted to the tail) so
         the pipeline can chain into the build programs without slicing
         and re-padding.
+
+        ``donate=True`` is the caller's assertion that nothing else reads
+        the *keys* buffer again — the compiled program consumes it
+        (``donate_argnums``) and XLA reuses its storage.  The rows operand
+        is never donated (it is often the shared cached iota).  Backends
+        without compiled-program donation (the distributed host-routing
+        path) may ignore the flag; outputs are identical either way.
         """
 
     # -------------------------------------------------------- fused path
@@ -160,10 +168,12 @@ class ExecutionBackend(abc.ABC):
         *,
         n_valid: int | None = None,
         keep_padded: bool = False,
+        donate: bool = False,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """extract+sort as one program; only if ``supports_fused``.
 
-        ``n_valid`` / ``keep_padded`` behave as in :meth:`sort`.
+        ``n_valid`` / ``keep_padded`` / ``donate`` behave as in
+        :meth:`sort` (``donate`` consumes the words operand).
         """
         raise NotImplementedError(f"backend {self.name} has no fused path")
 
@@ -174,6 +184,11 @@ class ExecutionBackend(abc.ABC):
         rows_a: jnp.ndarray,
         keys_b: jnp.ndarray,
         rows_b: jnp.ndarray,
+        *,
+        n_valid_a: int | None = None,
+        n_valid_b: int | None = None,
+        keep_padded: bool = False,
+        donate: bool = False,
     ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Merge two ascending (key, row) runs into one.
 
@@ -182,13 +197,21 @@ class ExecutionBackend(abc.ABC):
         The default is the jnp merge-path reference, shape-bucketed so
         drifting ``(na, nb)`` pairs inside a bucket replay one compiled
         program; backends override with their native realization.
+
+        ``n_valid_a``/``n_valid_b`` mark the runs as bucket-shaped with
+        that many valid rows; ``keep_padded`` returns the full
+        ``(ba + bb,)`` outputs with pads at the tail (cascade chaining).
+        ``donate=True`` consumes all four run operands — a merge's inputs
+        are dead after it, so the cascade's peak live footprint stays
+        O(log) runs.  Backends that merge host-side may ignore ``donate``.
         """
         from repro.core.plancache import merge_padded
 
         return merge_padded(
             jnp.asarray(keys_a, jnp.uint32), jnp.asarray(rows_a, jnp.uint32),
             jnp.asarray(keys_b, jnp.uint32), jnp.asarray(rows_b, jnp.uint32),
-            backend=self.name,
+            backend=self.name, n_valid_a=n_valid_a, n_valid_b=n_valid_b,
+            keep_padded=keep_padded, donate=donate,
         )
 
     # -------------------------------------------------------------- build
@@ -202,6 +225,7 @@ class ExecutionBackend(abc.ABC):
         config,
         rids: jnp.ndarray | None = None,
         n_valid: int | None = None,
+        donate: bool = False,
     ):
         """Stage 3 (§5.3): bottom-up bulk build of the partial-key B+tree.
 
@@ -211,13 +235,17 @@ class ExecutionBackend(abc.ABC):
         be byte-identical across backends.  ``n_valid`` marks
         ``comp_sorted``/``row_sorted`` as bucket-shaped with ``n_valid``
         real rows (the pipeline chains the sort stage's padded outputs in
-        without re-padding).
+        without re-padding).  ``donate=True`` lets the build programs
+        consume their scratch operands (the sort permutation and the
+        per-level hi-index buffer) — only safe when the caller no longer
+        reads the padded row buffer afterwards.
         """
         from repro.core.btree import build_btree
 
         return build_btree(
             comp_sorted, row_sorted, meta, words, lengths, config,
             rids=rids, backend_name=self.name, n_valid=n_valid,
+            donate=donate,
         )
 
     # ------------------------------------------------------------- lookup
@@ -242,7 +270,7 @@ class ExecutionBackend(abc.ABC):
 
     # ------------------------------------------------------- refresh meta
     def refresh_meta(self, comp_sorted: jnp.ndarray, meta, ref_key,
-                     n_valid: int | None = None):
+                     n_valid: int | None = None, donate: bool = False):
         """Stage 4 (§4.3): recompute DS-metadata at the opportune time.
 
         The adjacent D-bit positions run as a cached, shape-bucketed
@@ -250,7 +278,10 @@ class ExecutionBackend(abc.ABC):
         vectorized host op (``meta_on_rebuild``).  ``n_valid`` marks
         ``comp_sorted`` as bucket-shaped with ``n_valid`` real rows.
         Only the (n-1,) device dpos vector crosses to the host — the
-        sorted keys themselves stay on device.
+        sorted keys themselves stay on device.  ``donate=True`` consumes
+        ``comp_sorted`` — refresh is the pipeline's last consumer of the
+        padded sorted run, so its buffer is reclaimed in place; only pass
+        it when nothing else reads that buffer again.
         """
         import numpy as np
 
@@ -259,7 +290,7 @@ class ExecutionBackend(abc.ABC):
 
         dpos = adjacent_dpos_padded(
             jnp.asarray(comp_sorted, jnp.uint32), backend=self.name,
-            n_valid=n_valid,
+            n_valid=n_valid, donate=donate,
         )
         # comp_sorted is unused by meta_on_rebuild when dpos_comp is given;
         # pass an empty view rather than forcing a device->host transfer of

@@ -87,7 +87,13 @@ class DistributedBackend(ExecutionBackend):
             )
         return self._fns[key]
 
-    def sort(self, keys, rows, *, n_valid=None, keep_padded=False):
+    def sort(self, keys, rows, *, n_valid=None, keep_padded=False, donate=False):
+        # ``donate`` is accepted for signature parity but ignored: the
+        # sample sort compacts its shard-padded result host-side, so there
+        # is no single compiled program whose output could alias the input
+        # buffer.  Outputs are identical either way (the flag is a memory
+        # hint, never a semantic one).
+        del donate
         keys = jnp.asarray(keys, jnp.uint32)
         rows = jnp.asarray(rows, jnp.uint32)
         b, w = (int(s) for s in keys.shape)
@@ -139,7 +145,9 @@ class DistributedBackend(ExecutionBackend):
             return pad_run(ks, rs, b if n_valid is not None else bucket_for("sort", n))
         return ks, rs
 
-    def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):
+    def merge_sorted(self, keys_a, rows_a, keys_b, rows_b, *,
+                     n_valid_a=None, n_valid_b=None, keep_padded=False,
+                     donate=False):
         """Owner-shard routing + shard-local merges.
 
         The base run A is globally sorted, i.e. already range-partitioned
@@ -150,17 +158,36 @@ class DistributedBackend(ExecutionBackend):
         the delta, never the base.  This is the same economics as the
         extract-before-all_to_all ordering of the sort stage: incremental
         maintenance keeps the bulk data shard-resident.
+
+        ``n_valid_a``/``n_valid_b`` mark bucket-shaped runs (the valid
+        prefix merges; pads are dropped before routing); ``keep_padded``
+        re-pads the merged run to ``ba + bb`` rows.  ``donate`` is ignored
+        — the routing path is host-side, so there is no program whose
+        output could alias the inputs (see :meth:`sort`).
         """
+        del donate
         keys_a = jnp.asarray(keys_a, jnp.uint32)
         rows_a = jnp.asarray(rows_a, jnp.uint32)
         keys_b = jnp.asarray(keys_b, jnp.uint32)
         rows_b = jnp.asarray(rows_b, jnp.uint32)
+        ba, bb = int(keys_a.shape[0]), int(keys_b.shape[0])
+        if n_valid_a is not None:
+            keys_a, rows_a = keys_a[: int(n_valid_a)], rows_a[: int(n_valid_a)]
+        if n_valid_b is not None:
+            keys_b, rows_b = keys_b[: int(n_valid_b)], rows_b[: int(n_valid_b)]
         na, nb = int(keys_a.shape[0]), int(keys_b.shape[0])
+
+        def _shape_out(ks, rs):
+            if not keep_padded:
+                return ks, rs
+            return pad_run(ks, rs, ba + bb)
+
         p = self.n_devices
         if na == 0 or nb == 0 or p == 1:
-            out = merge_padded(keys_a, rows_a, keys_b, rows_b, backend=self.name)
+            mk, mr = merge_padded(keys_a, rows_a, keys_b, rows_b,
+                                  backend=self.name)
             self.last_info = {"mesh_devices": p, "delta_routed": [nb]}
-            return out
+            return _shape_out(mk, mr)
         chunk = -(-na // p)
         # rank of each delta element in the base run decides the owner chunk:
         # rank r lands between A[r-1] and A[r], i.e. inside chunk r // chunk
@@ -183,7 +210,9 @@ class DistributedBackend(ExecutionBackend):
             parts_k.append(mk)
             parts_r.append(mr)
         self.last_info = {"mesh_devices": p, "delta_routed": routed}
-        return jnp.concatenate(parts_k, axis=0), jnp.concatenate(parts_r, axis=0)
+        return _shape_out(
+            jnp.concatenate(parts_k, axis=0), jnp.concatenate(parts_r, axis=0)
+        )
 
     def lookup(self, tree, queries):
         """Owner-shard routed point lookups.

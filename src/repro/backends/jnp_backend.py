@@ -39,23 +39,30 @@ class JnpBackend(ExecutionBackend):
 
         return extract_bits(words, plan)
 
-    def sort(self, keys, rows, *, n_valid=None, keep_padded=False):
+    def sort(self, keys, rows, *, n_valid=None, keep_padded=False, donate=False):
         return sort_padded(
             jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32),
             backend=self.name, n_valid=n_valid, keep_padded=keep_padded,
+            donate=donate,
         )
 
-    def fused_extract_sort(self, words, plan, rows, *, n_valid=None, keep_padded=False):
+    def fused_extract_sort(self, words, plan, rows, *, n_valid=None,
+                           keep_padded=False, donate=False):
         return fused_extract_sort_padded(
             jnp.asarray(words, jnp.uint32), plan, jnp.asarray(rows, jnp.uint32),
             backend=self.name, n_valid=n_valid, keep_padded=keep_padded,
+            donate=donate,
         )
 
-    def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):
-        # merge-path merge: two rank passes (vectorized binary search) +
-        # permutation scatter, one cached program per (bucket_a, bucket_b)
+    def merge_sorted(self, keys_a, rows_a, keys_b, rows_b, *,
+                     n_valid_a=None, n_valid_b=None, keep_padded=False,
+                     donate=False):
+        # merge-path merge: one rank pass (vectorized binary search of the
+        # smaller run) + complement scatter, one cached program per
+        # (bucket_a, bucket_b); ``donate`` consumes both input runs
         return merge_padded(
             jnp.asarray(keys_a, jnp.uint32), jnp.asarray(rows_a, jnp.uint32),
             jnp.asarray(keys_b, jnp.uint32), jnp.asarray(rows_b, jnp.uint32),
-            backend=self.name,
+            backend=self.name, n_valid_a=n_valid_a, n_valid_b=n_valid_b,
+            keep_padded=keep_padded, donate=donate,
         )

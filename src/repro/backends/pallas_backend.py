@@ -73,7 +73,7 @@ class PallasBackend(ExecutionBackend):
             interpret=self.interpret,
         )
 
-    def sort(self, keys, rows, *, n_valid=None, keep_padded=False):
+    def sort(self, keys, rows, *, n_valid=None, keep_padded=False, donate=False):
         block, interpret = self.block, self.interpret
 
         def impl(kp, rp):
@@ -86,12 +86,15 @@ class PallasBackend(ExecutionBackend):
         return sort_padded(
             jnp.asarray(keys, jnp.uint32), jnp.asarray(rows, jnp.uint32),
             backend=self.name, impl=impl, extra_key=(block, interpret),
-            n_valid=n_valid, keep_padded=keep_padded,
+            n_valid=n_valid, keep_padded=keep_padded, donate=donate,
         )
 
-    def merge_sorted(self, keys_a, rows_a, keys_b, rows_b):
-        """kernels/merge tiled merge-path ranks + permutation scatter,
-        shape-bucketed (one compiled program per (bucket_a, bucket_b))."""
+    def merge_sorted(self, keys_a, rows_a, keys_b, rows_b, *,
+                     n_valid_a=None, n_valid_b=None, keep_padded=False,
+                     donate=False):
+        """kernels/merge tiled merge-path rank of the smaller run +
+        complement scatter, shape-bucketed (one compiled program per
+        (bucket_a, bucket_b)); donation rides on the outer jit."""
         tile, interpret = self.merge_tile, self.interpret
 
         def impl(ka, ra, kb, rb):
@@ -101,10 +104,12 @@ class PallasBackend(ExecutionBackend):
             jnp.asarray(keys_a, jnp.uint32), jnp.asarray(rows_a, jnp.uint32),
             jnp.asarray(keys_b, jnp.uint32), jnp.asarray(rows_b, jnp.uint32),
             backend=self.name, impl=impl, extra_key=(tile, interpret),
+            n_valid_a=n_valid_a, n_valid_b=n_valid_b,
+            keep_padded=keep_padded, donate=donate,
         )
 
     def build(self, comp_sorted, row_sorted, meta, words, lengths, config,
-              rids=None, n_valid=None):
+              rids=None, n_valid=None, donate=False):
         """Cached build programs with the kernels/build tiled pk-window
         gather substituted for the jnp ``_slice_bits`` (bit-identical)."""
         from repro.core.btree import build_btree
@@ -114,7 +119,7 @@ class PallasBackend(ExecutionBackend):
             backend_name=self.name,
             slice_fn=build_ops.slice_fn(tile=self.build_tile, interpret=self.interpret),
             program_key_extra=(self.build_tile, self.interpret),
-            n_valid=n_valid,
+            n_valid=n_valid, donate=donate,
         )
 
     def lookup(self, tree, queries):

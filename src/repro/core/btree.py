@@ -141,7 +141,7 @@ def _np_pad(x: np.ndarray, rows: int, fill) -> np.ndarray:
     return np.concatenate([x, np.full((pad,) + x.shape[1:], fill, dtype=x.dtype)])
 
 
-def _leaf_program(cache, slice_fn, pk: int):
+def _leaf_program(cache, slice_fn, pk: int, donate: bool = False):
     """Stage-3 entry computation for the leaf level, one jitted program.
 
     All heavy per-entry work — the row gathers (sorted full keys, lengths,
@@ -151,6 +151,12 @@ def _leaf_program(cache, slice_fn, pk: int):
     dynamic scalar operands so every size inside the bucket replays the
     same program; padded lanes are clipped garbage, sliced off by the
     caller before assembly.
+
+    ``donate`` donates the sort-permutation operand (``row_pad``, argnum
+    4) — its information is fully absorbed into the gathers, so it is
+    scratch after this program.  ``comp_pad``/``words_pad`` and the
+    possibly-cached constants (lengths, rids) are never donated: the
+    level programs and the caller still read them.
     """
 
     def prog(comp_pad, words_pad, lengths_pad, rids_pad, row_pad, d_off_pad, n, n_off):
@@ -170,15 +176,20 @@ def _leaf_program(cache, slice_fn, pk: int):
         pkeys = slice_fn(sorted_full, dpos_full + 1, pk).astype(jnp.uint32)
         return sorted_full, klen, rid_sorted, dpos_full, pkeys
 
-    return cache.jit(prog)
+    return cache.jit(prog, **({"donate_argnums": (4,)} if donate else {}))
 
 
-def _level_program(cache, slice_fn, pk: int):
+def _level_program(cache, slice_fn, pk: int, donate: bool = False):
     """Stage-3 entry computation for one non-leaf level, one jitted program.
 
     The adjacent highest-key D-bits (via compressed keys + D-offset, §5.3),
     the entry partial-key windows, and the key-length gather for a whole
     level run as one compiled body over bucket-padded node rows.
+
+    ``donate`` donates the per-level hi-index operand (``hi_pad``, argnum
+    0) — it is rebuilt host-side for every level, so the program may
+    reuse its buffer.  The shared leaf outputs (``full_pad``/``klen_pad``)
+    and ``comp_pad`` are read by every level and never donated.
     """
 
     def prog(hi_pad, comp_pad, full_pad, klen_pad, d_off_pad, n, n_off):
@@ -196,7 +207,7 @@ def _level_program(cache, slice_fn, pk: int):
         klen_hi = jnp.take(klen_pad, bc)
         return dfull, epk, klen_hi
 
-    return cache.jit(prog)
+    return cache.jit(prog, **({"donate_argnums": (0,)} if donate else {}))
 
 
 def build_btree(
@@ -213,6 +224,7 @@ def build_btree(
     program_key_extra: tuple = (),
     cache=None,
     n_valid: int | None = None,
+    donate: bool = False,
 ) -> BTree:
     """Bulk-build the tree from sorted compressed keys + row positions (§5.3).
 
@@ -241,12 +253,22 @@ def build_btree(
     sort sentinels or zeros — because every program gather clips to the
     dynamic ``n``/``n_off`` operands and the padded tail is sliced off
     before assembly; the pad-contents property test pins this down.
+
+    ``donate=True`` donates the build programs' scratch operands — the
+    sort permutation (``row_pad``) into the leaf program and the
+    per-level hi-index buffer into each level program.  The caller must
+    not read the (possibly identity-padded) ``row_sorted`` buffer again
+    after the build; everything else the programs touch (``comp_sorted``,
+    ``table_words``, the cached iota/const operands) is read-only and
+    never donated.  The flag is part of the program cache keys, so
+    donated and non-donated variants coexist.
     """
     from . import plancache
 
     cache = cache or plancache.get_cache()
     if slice_fn is None:
         slice_fn = _slice_bits
+    donate = bool(donate) and plancache.donation_supported()
 
     n = int(comp_sorted.shape[0]) if n_valid is None else int(n_valid)
     W = int(table_words.shape[1])
@@ -282,8 +304,8 @@ def build_btree(
 
     # ---------------- leaf level (one cached program + host reshape) -------
     leaf_prog = cache.program(
-        ("build_leaf", backend_name, B, W, Wc, pk) + program_key_extra,
-        lambda: _leaf_program(cache, slice_fn, pk),
+        ("build_leaf", backend_name, B, W, Wc, pk, donate) + program_key_extra,
+        lambda: _leaf_program(cache, slice_fn, pk, donate),
     )
     full_pad, klen_pad, rid_dev, dpos_dev, pkeys_dev = leaf_prog(
         comp_pad, words_pad, lengths_pad, rids_pad, row_pad, d_off_pad,
@@ -318,8 +340,9 @@ def build_btree(
         Bn = plancache.bucket(rows)
         hi_np = _np_pad(child_hi.astype(np.int32), rows, -1)
         level_prog = cache.program(
-            ("build_level", backend_name, Bn, B, W, Wc, pk) + program_key_extra,
-            lambda: _level_program(cache, slice_fn, pk),
+            ("build_level", backend_name, Bn, B, W, Wc, pk, donate)
+            + program_key_extra,
+            lambda: _level_program(cache, slice_fn, pk, donate),
         )
         dfull_dev, epk_dev, klen_dev = level_prog(
             jnp.asarray(_np_pad(hi_np, Bn, -1)), comp_pad, full_pad, klen_pad,

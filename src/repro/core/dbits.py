@@ -177,11 +177,41 @@ def merge_from_ranks(
         return keys_b, rows_b
     if nb == 0:
         return keys_a, rows_a
-    pos_a = jnp.arange(na, dtype=jnp.int32) + rank_fn(keys_b, rows_b, keys_a, rows_a)
-    pos_b = jnp.arange(nb, dtype=jnp.int32) + rank_fn(keys_a, rows_a, keys_b, rows_b)
+    # One rank pass, not two: rank the smaller run in the larger one, then
+    # derive the larger run's positions from the complement.  The scatter
+    # positions of the ranked run are exact; the other run fills the
+    # remaining output slots in its own (ascending) order, so position p
+    # holds element ``p - #{ranked elements before p}`` of the unranked
+    # run.  That complement is one cumsum + one gather — O(n) — replacing
+    # the second O(n log n) whole-array binary-search pass.  The resulting
+    # permutation is identical to the two-pass construction, so the output
+    # stays byte-identical to ``sort_words_keyed`` over the concatenation.
+    if nb <= na:
+        small_k, small_r, big_k, big_r = keys_b, rows_b, keys_a, rows_a
+    else:
+        small_k, small_r, big_k, big_r = keys_a, rows_a, keys_b, rows_b
+    n_small, n_big = int(small_k.shape[0]), int(big_k.shape[0])
     n, w = na + nb, int(keys_a.shape[1])
-    keys = jnp.zeros((n, w), jnp.uint32).at[pos_a].set(keys_a).at[pos_b].set(keys_b)
-    rows = jnp.zeros((n,), jnp.uint32).at[pos_a].set(rows_a).at[pos_b].set(rows_b)
+    pos_s = (
+        jnp.arange(n_small, dtype=jnp.int32)
+        + rank_fn(big_k, big_r, small_k, small_r)
+    )
+    occ = jnp.zeros((n,), jnp.int32).at[pos_s].set(1)
+    # number of ranked (small-run) elements strictly before each position
+    before = jnp.cumsum(occ) - occ
+    big_idx = jnp.clip(
+        jnp.arange(n, dtype=jnp.int32) - before, 0, n_big - 1
+    )
+    keys = jnp.where(
+        (occ == 1)[:, None],
+        jnp.zeros((n, w), jnp.uint32).at[pos_s].set(small_k),
+        big_k[big_idx],
+    )
+    rows = jnp.where(
+        occ == 1,
+        jnp.zeros((n,), jnp.uint32).at[pos_s].set(small_r),
+        big_r[big_idx],
+    )
     return keys, rows
 
 

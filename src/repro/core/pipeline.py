@@ -156,10 +156,37 @@ class ReconstructionPipeline:
     chunk_threshold: key counts above this take the chunked large-N sort
                    path: the keyset splits into ``chunk_size``-aligned
                    chunks, each sorted through the (small-bucket) cached
-                   sort programs, folded with a binary cascade of cached
-                   merges.  Keeps million-key rebuilds on the same handful
-                   of compiled programs the serving sizes already trace.
+                   sort programs, folded with a binary-counter ladder of
+                   cached merges.  Keeps million-key rebuilds on the same
+                   handful of compiled programs the serving sizes already
+                   trace.
     chunk_size:    chunk length for the large-N path (power of two).
+    async_dispatch: skip the per-stage ``block_until_ready`` barriers and
+                   sync once at the end of ``run``/``run_incremental``.
+                   JAX async dispatch then overlaps host-side program
+                   dispatch (chunk i+1's sort) with device compute
+                   (chunk i's merge).  Per-stage timings become dispatch
+                   walls; pass ``stage_timings=True`` to a run when the
+                   Figure-9 breakdown is explicitly wanted (it restores
+                   the barriers for that call).  Results are bit-identical
+                   either way — only the sync points move.
+    donate:        mark operands the stages consume as donated
+                   (``donate_argnums``): chunk sorts donate their key
+                   slice, the cascade's merges both input runs,
+                   build/refresh their scratch.  XLA then reuses a
+                   donated buffer in place wherever its shape matches an
+                   output (the bucket-shaped sort is the big win — a
+                   full zero-copy in-place sort per chunk); operands
+                   that can't alias are freed when their Python
+                   reference drops, which the ladder does as soon as
+                   each run is merged.  No-op on platforms without
+                   donation support.
+    auto_tune_chunks: lazily calibrate ``chunk_size``/``chunk_threshold``
+                   from measured per-bucket sort and merge program costs
+                   (:func:`repro.core.plancache.tune_chunking`) the first
+                   time a run crosses the current threshold; the measured
+                   :class:`~repro.core.plancache.ChunkPlan` persists on
+                   the pipeline and is surfaced in ``stats``.
     """
 
     def __init__(
@@ -170,6 +197,9 @@ class ReconstructionPipeline:
         backend_opts: dict | None = None,
         chunk_threshold: int = 1 << 19,
         chunk_size: int = 1 << 17,
+        async_dispatch: bool = False,
+        donate: bool = False,
+        auto_tune_chunks: bool = False,
     ) -> None:
         if isinstance(backend, ExecutionBackend):
             self.backend = backend
@@ -179,6 +209,11 @@ class ReconstructionPipeline:
         self.fused = bool(fused)
         self.chunk_threshold = int(chunk_threshold)
         self.chunk_size = int(chunk_size)
+        self.async_dispatch = bool(async_dispatch)
+        self.donate = bool(donate)
+        self.auto_tune_chunks = bool(auto_tune_chunks)
+        self.chunk_plan = None
+        self._last_cascade: dict = {}
         if self.chunk_size & (self.chunk_size - 1):
             raise ValueError(f"chunk_size must be a power of two, got {chunk_size}")
 
@@ -188,62 +223,143 @@ class ReconstructionPipeline:
         return self.backend.extract(words, plan)
 
     def sort(self, comp: jnp.ndarray, rows: jnp.ndarray, *,
-             n_valid: int | None = None, keep_padded: bool = False):
+             n_valid: int | None = None, keep_padded: bool = False,
+             donate: bool = False):
         """Stage 2 (§5.2): parallel sort of (comp key, row) pairs."""
         return self.backend.sort(
-            comp, rows, n_valid=n_valid, keep_padded=keep_padded
+            comp, rows, n_valid=n_valid, keep_padded=keep_padded, donate=donate
         )
 
     def build(self, comp_sorted, row_sorted, meta, words, lengths, rids,
-              n_valid: int | None = None) -> BTree:
+              n_valid: int | None = None, donate: bool = False) -> BTree:
         """Stage 3 (§5.3): bottom-up bulk build (backend-dispatched — the
         cached per-level build programs, with backend entry gathers)."""
         return self.backend.build(
             comp_sorted, row_sorted, meta, words, lengths, self.config,
-            rids=rids, n_valid=n_valid,
+            rids=rids, n_valid=n_valid, donate=donate,
         )
 
     def refresh_meta(self, comp_sorted, meta: DSMeta, ref_key,
-                     n_valid: int | None = None) -> DSMeta:
+                     n_valid: int | None = None, donate: bool = False) -> DSMeta:
         """Stage 4 (§4.3): recompute DS-metadata at the opportune time
         (backend-dispatched: cached device dpos program + host scatter-OR)."""
         return self.backend.refresh_meta(comp_sorted, meta, ref_key,
-                                         n_valid=n_valid)
+                                         n_valid=n_valid, donate=donate)
 
-    def _sort_chunked(self, comp: jnp.ndarray, n: int, b: int):
-        """Large-N sort: bucket-aligned chunks + a cascade of cached merges.
+    def tune_chunking(self, **kwargs):
+        """Measure this backend's per-bucket sort/merge program costs and
+        adopt the resulting :class:`~repro.core.plancache.ChunkPlan`
+        (``chunk_size`` + ``chunk_threshold``).  Probes compile into a
+        throwaway scoped cache, so the serving cache's stats and programs
+        are untouched.  Keyword args forward to
+        :func:`repro.core.plancache.tune_chunking`."""
+        from . import plancache
+
+        plan = plancache.tune_chunking(self.backend, **kwargs)
+        self.chunk_size = plan.chunk_size
+        self.chunk_threshold = plan.chunk_threshold
+        self.chunk_plan = plan
+        return plan
+
+    def _stage(self, sync: bool, fn, *args):
+        """Run one stage; barrier on its outputs only when ``sync``.
+
+        Async mode leaves the outputs as in-flight device arrays — the next
+        stage's dispatch overlaps their compute — so the returned wall is
+        dispatch time, not execution time."""
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if sync:
+            out = jax.tree_util.tree_map(
+                lambda x: x.block_until_ready()
+                if hasattr(x, "block_until_ready") else x,
+                out,
+            )
+        return out, time.perf_counter() - t0
+
+    @staticmethod
+    def _sync(*arrays) -> float:
+        """Barrier on the run's result arrays; returns the blocked wall."""
+        t0 = time.perf_counter()
+        for a in arrays:
+            if hasattr(a, "block_until_ready"):
+                a.block_until_ready()
+        return time.perf_counter() - t0
+
+    def _sort_chunked(self, comp: jnp.ndarray, n: int, b: int,
+                      donate_sorts: bool = False):
+        """Large-N sort: bucket-aligned chunks + a binary-counter ladder of
+        cached merges.
 
         Each chunk sorts with *local* rows (every chunk replays the same
         small-bucket cached program and satisfies the [0, m) row contract);
         the chunk offset is added afterwards, which preserves the sorted
         (key, row) order because the offset is monotone within the chunk.
-        The binary merge cascade then runs entirely on cached
-        ``merge_sorted`` programs, so the fold is byte-identical to one
-        monolithic sort by associativity of the total (key, row) order.
-        Returns ``(b,)``-padded buffers (pads at the tail) for zero-copy
-        chaining into the build programs.
+
+        The fold is a binary counter, not a level-by-level pass: a run of
+        2^k merged chunks merges with its equal-sized neighbor the moment
+        that neighbor completes, so at most O(log n_chunks) runs are ever
+        live at once (one per set bit of the chunks-so-far count) instead
+        of one full level — the ``cascade_peak_live_runs`` stat records the
+        observed peak, and popping merged runs off the stack drops their
+        last references so the footprint tracks it.  With ``self.donate``
+        the chunk sorts also run zero-copy in place (input and output
+        buckets coincide).  Any association of cached ``merge_sorted``
+        programs is
+        byte-identical to one monolithic sort because a merge of sorted
+        runs under the total (key, row) order has exactly one output.
+
+        Runs stay bucket-padded end to end (``keep_padded`` + ``n_valid``
+        chaining — no eager slice-and-re-pad between levels); one final
+        ``pad_tail`` aligns the cascade total to the build bucket ``b``.
+        Returns ``(b,)``-padded buffers.
         """
         from . import plancache
 
         c = self.chunk_size
-        runs = []
+        donate = self.donate
+        # stack of live runs: (chunks_merged, n_valid, keys, rows); the
+        # chunk counts are strictly decreasing, adjacent equals merge
+        stack: list = []
+        peak = 0
+        merges = 0
+
+        def _merge_top():
+            nonlocal merges
+            cb, nvb, kb, rb = stack.pop()
+            ca, nva, ka, ra = stack.pop()
+            mk, mr = self.backend.merge_sorted(
+                ka, ra, kb, rb, n_valid_a=nva, n_valid_b=nvb,
+                keep_padded=True, donate=donate,
+            )
+            stack.append((ca + cb, nva + nvb, mk, mr))
+            merges += 1
+
         for s in range(0, n, c):
             m = min(c, n - s)
-            ck, cr = self.backend.sort(comp[s : s + m], plancache.iota_u32(m))
-            runs.append((ck, jnp.asarray(cr, jnp.uint32) + jnp.uint32(s)))
-        while len(runs) > 1:
-            nxt = []
-            for i in range(0, len(runs) - 1, 2):
-                ka, ra = runs[i]
-                kb, rb = runs[i + 1]
-                nxt.append(self.backend.merge_sorted(ka, ra, kb, rb))
-            if len(runs) % 2:
-                nxt.append(runs[-1])
-            runs = nxt
-        ks, rs = runs[0]
-        return plancache.pad_run(
-            jnp.asarray(ks, jnp.uint32), jnp.asarray(rs, jnp.uint32), b
-        )
+            chunk = comp[s : s + c]
+            ck, cr = self.backend.sort(
+                chunk, plancache.iota_u32(int(chunk.shape[0])),
+                n_valid=m, keep_padded=True, donate=donate_sorts,
+            )
+            stack.append((1, m, ck, cr + jnp.uint32(s)))
+            peak = max(peak, len(stack))
+            while len(stack) >= 2 and stack[-1][0] == stack[-2][0]:
+                _merge_top()
+        while len(stack) > 1:  # fold the leftover ragged tail, smallest first
+            _merge_top()
+        _, nv, ks, rs = stack[0]
+        self._last_cascade = {
+            "cascade_peak_live_runs": peak,
+            "cascade_merges": merges,
+        }
+        # align the cascade total (n_chunks * chunk bucket) to the build
+        # bucket; identity when they already agree.  Pad *content* is
+        # irrelevant — downstream programs renormalize from n_valid.
+        if int(ks.shape[0]) != b:
+            ks = plancache.pad_tail(ks, b, 0xFFFFFFFF)
+            rs = plancache.pad_tail(rs, b, 0)
+        return ks, rs
 
     # ---------------------------------------------------------------- run
     def run(
@@ -253,6 +369,7 @@ class ReconstructionPipeline:
         full_keys: bool = False,
         watermark: int | None = None,
         publish_to=None,
+        stage_timings: bool | None = None,
     ) -> ReconstructionResult:
         """Reconstruct one index.
 
@@ -264,9 +381,17 @@ class ReconstructionPipeline:
         and to elide no-op rebuilds).  ``publish_to`` (a
         ``repro.core.snapshot.SnapshotCell``) atomically publishes the
         finished result as the cell's next snapshot epoch before returning.
+        ``stage_timings`` overrides the pipeline's sync policy for this
+        call: ``True`` restores the per-stage barriers (the Figure-9
+        breakdown) even under ``async_dispatch``; ``False`` forces one
+        end-of-run sync.  Either way the run returns fully materialized
+        results and ``timings["sync"]`` reports the final barrier's wall.
         """
         from . import plancache
 
+        t_run0 = time.perf_counter()
+        sync = (stage_timings if stage_timings is not None
+                else not self.async_dispatch)
         n = keyset.n
         rids = jnp.asarray(keyset.rids, jnp.uint32)
         lengths = jnp.asarray(keyset.lengths, jnp.int32)
@@ -290,37 +415,59 @@ class ReconstructionPipeline:
             t_meta = time.perf_counter() - t0
         plan = meta.plan()
 
+        if (self.auto_tune_chunks and self.chunk_plan is None
+                and n > self.chunk_threshold):
+            self.tune_chunking()
+
+        # Donation guards: ``words_dev`` is never donated (the build stage
+        # reads it after the sort on the full-keys and fused paths, and the
+        # caller's keyset aliases nothing else); when n == b the [:n]
+        # result slices alias the padded buffers themselves (a full slice
+        # is the identity), so build/refresh must not consume them either.
+        donate = self.donate
+        donate_results = donate and n < b
+
         # -- extract / sort (backend-dispatched, optionally fused) ---------
         fused_used = False
         chunks = 0
         if n > self.chunk_threshold:
             # large-N path: extraction stays one bucket-shaped program; the
-            # sort splits into chunk-bucket programs + a merge cascade
+            # sort splits into chunk-bucket programs + a merge ladder
             chunks = -(-n // self.chunk_size)
             if full_keys:
                 comp, t_extract = words_dev, 0.0
             else:
-                comp, t_extract = _timed(self.extract, words_dev, plan)
-            (comp_sorted_p, row_sorted_p), t_sort = _timed(
-                lambda: self._sort_chunked(comp, n, b)
+                comp, t_extract = self._stage(sync, self.extract, words_dev, plan)
+            # chunk sorts consume their key slices — strict sub-slices are
+            # fresh buffers even when comp is words_dev, but a single
+            # clamped full slice *is* comp, so full_keys then opts out
+            donate_sorts = donate and (not full_keys or chunks > 1)
+            (comp_sorted_p, row_sorted_p), t_sort = self._stage(
+                sync, lambda: self._sort_chunked(comp, n, b, donate_sorts)
             )
         elif full_keys:
             t_extract = 0.0
-            (comp_sorted_p, row_sorted_p), t_sort = _timed(
-                lambda: self.sort(words_dev, rows_dev, n_valid=n, keep_padded=True)
+            (comp_sorted_p, row_sorted_p), t_sort = self._stage(
+                sync,
+                lambda: self.sort(words_dev, rows_dev, n_valid=n,
+                                  keep_padded=True),
             )
         elif self.fused and self.backend.supports_fused:
             fused_used = True
             t_extract = 0.0
-            (comp_sorted_p, row_sorted_p), t_sort = _timed(
+            (comp_sorted_p, row_sorted_p), t_sort = self._stage(
+                sync,
                 lambda: self.backend.fused_extract_sort(
                     words_dev, plan, rows_dev, n_valid=n, keep_padded=True
-                )
+                ),
             )
         else:
-            comp, t_extract = _timed(self.extract, words_dev, plan)
-            (comp_sorted_p, row_sorted_p), t_sort = _timed(
-                lambda: self.sort(comp, rows_dev, n_valid=n, keep_padded=True)
+            comp, t_extract = self._stage(sync, self.extract, words_dev, plan)
+            # comp is the extract output and dies with the sort
+            (comp_sorted_p, row_sorted_p), t_sort = self._stage(
+                sync,
+                lambda: self.sort(comp, rows_dev, n_valid=n, keep_padded=True,
+                                  donate=donate),
             )
         row_sorted_p = jnp.asarray(row_sorted_p, jnp.uint32)
         comp_sorted = comp_sorted_p[:n]
@@ -328,34 +475,49 @@ class ReconstructionPipeline:
         rid_sorted = rids[row_sorted]
 
         # -- build (padded buffers chain straight in; n_valid carries the
-        # -- real count, so no slice-and-re-pad between the stages) --------
-        tree, t_build = _timed(
+        # -- real count, so no slice-and-re-pad between the stages).  The
+        # -- build may consume row_sorted_p (its scratch) once the result
+        # -- slices above are dispatched ------------------------------------
+        tree, t_build = self._stage(
+            sync,
             lambda: self.build(
                 comp_sorted_p, row_sorted_p, meta, words_dev, lengths, rids,
-                n_valid=n,
-            )
+                n_valid=n, donate=donate_results,
+            ),
         )
 
-        # -- refresh DS-metadata (opportune time, §4.3) ----------------------
+        # -- refresh DS-metadata (opportune time, §4.3); last consumer of
+        # -- comp_sorted_p, so it may take the buffer --------------------------
         t_refresh = 0.0
         new_meta = meta
         if not full_keys:
             t0 = time.perf_counter()
             new_meta = self.refresh_meta(
-                comp_sorted_p, meta, keyset.words[0], n_valid=n
+                comp_sorted_p, meta, keyset.words[0], n_valid=n,
+                donate=donate_results,
             )
             t_refresh = time.perf_counter() - t0
 
+        t_sync = 0.0 if sync else self._sync(comp_sorted, row_sorted, rid_sorted)
         timings = {
             "meta": t_meta,
             "extract": t_extract,
             "sort": t_sort,
             "build": t_build,
             "refresh_meta": t_refresh,
-            "total": t_extract + t_sort + t_build,
+            "sync": t_sync,
+            "total": (t_extract + t_sort + t_build) if sync
+            else time.perf_counter() - t_run0,
         }
         stats = self._stats(keyset, meta, comp_sorted, row_sorted, tree, fused_used)
         stats["chunked"] = chunks
+        stats["async_dispatch"] = not sync
+        stats["donate"] = donate
+        stats["chunk_size"] = self.chunk_size
+        stats["chunk_threshold"] = self.chunk_threshold
+        stats["chunk_tuned"] = self.chunk_plan is not None
+        if chunks:
+            stats.update(self._last_cascade)
         res = ReconstructionResult(
             tree=tree,
             meta=new_meta,
@@ -382,6 +544,7 @@ class ReconstructionPipeline:
         meta: DSMeta | None = None,
         watermark: int | None = None,
         publish_to=None,
+        stage_timings: bool | None = None,
     ) -> tuple[ReconstructionResult, KeySet]:
         """Fold a change set into ``prev`` without re-sorting the base.
 
@@ -436,8 +599,12 @@ class ReconstructionPipeline:
             np.asarray(meta.dbitmap, np.uint32), prev.extract_bitmap
         ):
             fallback = "dbitmap_changed"
+        t_run0 = time.perf_counter()
+        sync = (stage_timings if stage_timings is not None
+                else not self.async_dispatch)
         if fallback is not None:
-            res = self.run(folded, meta=meta, watermark=watermark)
+            res = self.run(folded, meta=meta, watermark=watermark,
+                           stage_timings=stage_timings)
             res.stats["incremental"] = False
             res.stats["incremental_fallback"] = fallback
             if publish_to is not None:
@@ -459,7 +626,7 @@ class ReconstructionPipeline:
             timings = {
                 k: 0.0
                 for k in ("meta", "filter", "extract", "sort", "merge",
-                          "build", "refresh_meta", "total")
+                          "build", "refresh_meta", "sync", "total")
             }
             res = _dc_replace(
                 prev, timings=timings, stats=stats, watermark=watermark
@@ -483,16 +650,25 @@ class ReconstructionPipeline:
             base_rows = new_row[prev.row_sorted][keep_sorted].astype(jnp.uint32)
             return base_comp, base_rows
 
-        (base_comp, base_rows), t_filter = _timed(_filter)
+        (base_comp, base_rows), t_filter = self._stage(sync, _filter)
         n_kept = int(base_comp.shape[0])
 
-        # -- extract + sort only the delta ---------------------------------
+        # -- extract + sort only the delta.  The delta's compressed keys
+        # -- die with the sort, so they may be donated; the *base* run is
+        # -- prev.comp_sorted (or a view of it) and is never donated — the
+        # -- caller's previous result must survive this call ---------------
         t_extract = t_sort = 0.0
         if n_delta:
             delta_words = jnp.asarray(delta_keyset.words, jnp.uint32)
-            comp_delta, t_extract = _timed(self.extract, delta_words, plan)
-            (comp_delta_sorted, rows_delta), t_sort = _timed(
-                self.sort, comp_delta, jnp.arange(n_delta, dtype=jnp.uint32)
+            comp_delta, t_extract = self._stage(
+                sync, self.extract, delta_words, plan
+            )
+            (comp_delta_sorted, rows_delta), t_sort = self._stage(
+                sync,
+                lambda: self.sort(
+                    comp_delta, jnp.arange(n_delta, dtype=jnp.uint32),
+                    donate=self.donate,
+                ),
             )
             # delta rows live after every surviving base row in the folded
             # numbering; the offset preserves the sorted (key, row) order
@@ -502,24 +678,27 @@ class ReconstructionPipeline:
             rows_delta = jnp.zeros((0,), jnp.uint32)
 
         # -- merge the runs (the backend op) -------------------------------
-        (comp_sorted, row_sorted), t_merge = _timed(
-            self.backend.merge_sorted,
+        (comp_sorted, row_sorted), t_merge = self._stage(
+            sync, self.backend.merge_sorted,
             base_comp, base_rows, comp_delta_sorted, rows_delta,
         )
         row_sorted = jnp.asarray(row_sorted, jnp.uint32)
         rid_sorted = jnp.asarray(folded.rids, jnp.uint32)[row_sorted]
 
-        # -- build + refresh (identical to the full path) ------------------
+        # -- build + refresh (identical to the full path; no donation —
+        # -- comp_sorted/row_sorted ARE the result arrays here) ------------
         words = jnp.asarray(folded.words, jnp.uint32)
         lengths = jnp.asarray(folded.lengths, jnp.int32)
         rids = jnp.asarray(folded.rids, jnp.uint32)
-        tree, t_build = _timed(
-            self.build, comp_sorted, row_sorted, meta, words, lengths, rids
+        tree, t_build = self._stage(
+            sync, self.build, comp_sorted, row_sorted, meta, words, lengths,
+            rids,
         )
         t0 = time.perf_counter()
         new_meta = self.refresh_meta(comp_sorted, meta, folded.words[0])
         t_refresh = time.perf_counter() - t0
 
+        t_sync = 0.0 if sync else self._sync(comp_sorted, row_sorted, rid_sorted)
         timings = {
             "meta": 0.0,
             "filter": t_filter,
@@ -528,12 +707,16 @@ class ReconstructionPipeline:
             "merge": t_merge,
             "build": t_build,
             "refresh_meta": t_refresh,
-            "total": t_filter + t_extract + t_sort + t_merge + t_build,
+            "sync": t_sync,
+            "total": (t_filter + t_extract + t_sort + t_merge + t_build)
+            if sync else time.perf_counter() - t_run0,
         }
         stats = self._stats(folded, meta, comp_sorted, row_sorted, tree, False)
         stats["incremental"] = True
         stats["n_delta"] = n_delta
         stats["n_deleted"] = base_keyset.n - n_kept
+        stats["async_dispatch"] = not sync
+        stats["donate"] = self.donate
         res = ReconstructionResult(
             tree=tree,
             meta=new_meta,

@@ -60,6 +60,10 @@ the thrash signature of a bound set below the working set — doubling
 
 from __future__ import annotations
 
+import math
+import time
+import warnings
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -80,6 +84,8 @@ __all__ = [
     "reset_cache",
     "set_max_programs",
     "cache_stats",
+    "scoped_cache",
+    "donation_supported",
     "const_full",
     "iota_u32",
     "pad_tail",
@@ -90,6 +96,8 @@ __all__ = [
     "merge_padded",
     "fused_extract_sort_padded",
     "adjacent_dpos_padded",
+    "ChunkPlan",
+    "tune_chunking",
 ]
 
 #: default bucket floor — tiny inputs share one program instead of one per
@@ -227,7 +235,24 @@ class PlanCache:
             self.traces += 1
             return fn(*args, **kwargs)
 
-        return jax.jit(traced, **jit_kwargs)
+        jitted = jax.jit(traced, **jit_kwargs)
+        if not jit_kwargs.get("donate_argnums"):
+            return jitted
+
+        # Donation is an aliasing *offer*: operands whose shape matches an
+        # output are reused in place (and deleted); the rest — e.g. a
+        # ladder merge's half-size input runs, whose output is strictly
+        # larger — can't alias, stay live, and XLA warns about them at
+        # lowering.  That warning is expected for the cascade's programs,
+        # so silence it for donated programs only.
+        def quiet(*args, **kwargs):
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable"
+                )
+                return jitted(*args, **kwargs)
+
+        return quiet
 
     def stats(self) -> dict[str, Any]:
         """Counter snapshot: ``programs`` (cached), ``hits``/``misses``
@@ -288,6 +313,48 @@ def cache_stats() -> dict[str, Any]:
     """Counter snapshot of the process-global cache (see
     :meth:`PlanCache.stats`); the zero-retrace assertions diff this."""
     return _GLOBAL.stats()
+
+
+@contextmanager
+def scoped_cache(cache: PlanCache | None = None):
+    """Temporarily swap the process-global cache for ``cache`` (default: a
+    fresh one).  Calibration passes like :func:`tune_chunking` run inside
+    this scope so their probe programs neither pollute the serving cache
+    nor pre-compile the programs a cold-path benchmark is about to time.
+    The cached pad constants (``_CONSTS``) stay shared — they are
+    immutable device values, not compiled programs."""
+    global _GLOBAL
+    prev, _GLOBAL = _GLOBAL, (cache if cache is not None else PlanCache())
+    try:
+        yield _GLOBAL
+    finally:
+        _GLOBAL = prev
+
+
+_DONATION_SUPPORTED: bool | None = None
+
+
+def donation_supported() -> bool:
+    """Whether this backend actually consumes ``donate_argnums`` buffers.
+
+    Probed once per process: a tiny jitted add with a donated operand
+    either deletes its input (donation honoured — CPU and TPU do) or
+    leaves it alive with a "donation not implemented" warning (some
+    platforms).  The padded-op wrappers fold the *effective* flag into
+    their cache keys, so on a non-donating platform ``donate=True`` maps
+    to the ordinary program instead of caching a useless variant.
+    """
+    global _DONATION_SUPPORTED
+    if _DONATION_SUPPORTED is None:
+        try:
+            x = jnp.zeros((8,), jnp.uint32)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                jax.jit(lambda v: v + 1, donate_argnums=(0,))(x).block_until_ready()
+            _DONATION_SUPPORTED = bool(x.is_deleted())
+        except Exception:
+            _DONATION_SUPPORTED = False
+    return _DONATION_SUPPORTED
 
 
 # ---------------------------------------------------------------------------
@@ -420,6 +487,7 @@ def sort_padded(
     cache: PlanCache | None = None,
     n_valid: int | None = None,
     keep_padded: bool = False,
+    donate: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Bucketed keyed sort: one compiled program per (backend, bucket, W).
 
@@ -432,6 +500,15 @@ def sort_padded(
     ``dynamic_update_slice`` against a cached constant).  ``keep_padded``
     returns the full bucket-shaped outputs (pads sorted to the tail) for
     callers that chain into another bucket-shaped stage.
+
+    ``donate=True`` donates the *keys* operand to the compiled program
+    (``donate_argnums``): XLA reuses its buffer for the output and the
+    caller's array is consumed (``.is_deleted()``).  The rows operand is
+    never donated — it is frequently the shared cached iota constant.
+    Only donate buffers no other consumer will touch again.  The
+    effective flag is part of the cache key, so donated and non-donated
+    variants coexist; on platforms without donation support it degrades
+    to the ordinary program (see :func:`donation_supported`).
     """
     cache = cache or _GLOBAL
     w = int(keys.shape[1])
@@ -448,14 +525,17 @@ def sort_padded(
 
         impl = sort_words_keyed
 
+    don = bool(donate) and donation_supported()
+    jit_kwargs = {"donate_argnums": (0,)} if don else {}
+
     def builder():
         def prog(kp, rp, nv):
             kp, rp = _mask_run(kp, rp, nv, ROW_PAD_A)
             return impl(kp, rp)
 
-        return cache.jit(prog)
+        return cache.jit(prog, **jit_kwargs)
 
-    prog = cache.program(("sort", backend, b, w) + extra_key, builder)
+    prog = cache.program(("sort", backend, b, w, don) + extra_key, builder)
     ks, rs = prog(keys, rows, np.uint32(n))
     if keep_padded:
         return ks, rs
@@ -474,6 +554,8 @@ def merge_padded(
     cache: PlanCache | None = None,
     n_valid_a: int | None = None,
     n_valid_b: int | None = None,
+    keep_padded: bool = False,
+    donate: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Bucketed two-run merge: one program per (backend, bucket_a, bucket_b, W).
 
@@ -483,6 +565,17 @@ def merge_padded(
     range, distinct between the runs), so the first ``na + nb`` merged
     rows are byte-identical to the unpadded merge regardless of what the
     incoming pad lanes carried.
+
+    ``keep_padded`` returns the full ``(ba + bb,)``-shaped outputs (pads
+    sorted strictly to the tail) for cascade callers that chain the run
+    into another padded merge with ``n_valid``.  ``donate=True`` offers
+    all four run operands to XLA for in-place reuse — the merge is their
+    last reader.  Whether a buffer is actually consumed is up to the
+    aliaser (an operand strictly smaller than every output, like an
+    equal-halves merge input, can't alias and stays live until its
+    Python reference drops).  Never pass arrays you (or a cached
+    constant) still need; the effective flag is part of the cache key
+    (see :func:`sort_padded`).
     """
     cache = cache or _GLOBAL
     w = int(keys_a.shape[1])
@@ -505,16 +598,21 @@ def merge_padded(
 
         impl = merge_words_keyed
 
+    don = bool(donate) and donation_supported()
+    jit_kwargs = {"donate_argnums": (0, 1, 2, 3)} if don else {}
+
     def builder():
         def prog(ka, ra, kb, rb, nva, nvb):
             ka, ra = _mask_run(ka, ra, nva, ROW_PAD_A)
             kb, rb = _mask_run(kb, rb, nvb, ROW_PAD_B)
             return impl(ka, ra, kb, rb)
 
-        return cache.jit(prog)
+        return cache.jit(prog, **jit_kwargs)
 
-    prog = cache.program(("merge", backend, ba, bb, w) + extra_key, builder)
+    prog = cache.program(("merge", backend, ba, bb, w, don) + extra_key, builder)
     km, rm = prog(keys_a, rows_a, keys_b, rows_b, np.uint32(na), np.uint32(nb))
+    if keep_padded:
+        return km, rm
     return km[: na + nb], rm[: na + nb]
 
 
@@ -527,6 +625,7 @@ def fused_extract_sort_padded(
     cache: PlanCache | None = None,
     n_valid: int | None = None,
     keep_padded: bool = False,
+    donate: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Bucketed fused extract+sort (one program per bucket *and* plan).
 
@@ -535,6 +634,11 @@ def fused_extract_sort_padded(
     compressed word are zero for every key — and the reserved row range
     breaks the tie, so pads still sort strictly last.  The pads are
     normalized in-program from the dynamic valid count.
+
+    ``donate=True`` donates the *words* operand (the rows operand is
+    often the shared cached iota and is never donated).  Only safe when
+    nothing downstream reads the full-key buffer again — the pipeline's
+    full path keeps it alive for the build stage and must not donate.
     """
     cache = cache or _GLOBAL
     w = int(words.shape[1])
@@ -547,6 +651,9 @@ def fused_extract_sort_padded(
         n = int(n_valid)
         b = int(words.shape[0])
 
+    don = bool(donate) and donation_supported()
+    jit_kwargs = {"donate_argnums": (0,)} if don else {}
+
     def builder():
         from .compress import extract_bits
         from .dbits import sort_words_keyed
@@ -555,9 +662,9 @@ def fused_extract_sort_padded(
             wp, rp = _mask_run(wp, rp, nv, ROW_PAD_A)
             return sort_words_keyed(extract_bits(wp, plan), rp)
 
-        return cache.jit(prog)
+        return cache.jit(prog, **jit_kwargs)
 
-    prog = cache.program(("fused", backend, b, w, plan), builder)
+    prog = cache.program(("fused", backend, b, w, plan, don), builder)
     ks, rs = prog(words, rows, np.uint32(n))
     if keep_padded:
         return ks, rs
@@ -570,6 +677,7 @@ def adjacent_dpos_padded(
     backend: str = "jnp",
     cache: PlanCache | None = None,
     n_valid: int | None = None,
+    donate: bool = False,
 ) -> np.ndarray:
     """Adjacent distinction-bit positions of a sorted run, bucketed.
 
@@ -580,6 +688,11 @@ def adjacent_dpos_padded(
     scatter-OR into the 32-bit bitmap words) lives in
     ``repro.core.metadata.meta_on_rebuild``.  Returns (n-1,) int32 with
     ``NO_DBIT`` at equal-key adjacencies.
+
+    ``donate=True`` donates the sorted-run operand — refresh is the last
+    consumer of the padded sorted keys in the full pipeline, so its
+    scratch is reclaimed in place.  Only pass buffers nothing else reads
+    afterwards.
     """
     cache = cache or _GLOBAL
     wc = int(comp_sorted.shape[1])
@@ -595,6 +708,9 @@ def adjacent_dpos_padded(
             return np.zeros((0,), np.int32)
         b = int(comp_sorted.shape[0])
 
+    don = bool(donate) and donation_supported()
+    jit_kwargs = {"donate_argnums": (0,)} if don else {}
+
     def builder():
         from .dbits import adjacent_dbit_positions
 
@@ -603,7 +719,202 @@ def adjacent_dpos_padded(
             cp = jnp.where((lane < nv)[:, None], cp, jnp.uint32(SENTINEL))
             return adjacent_dbit_positions(cp)
 
-        return cache.jit(prog)
+        return cache.jit(prog, **jit_kwargs)
 
-    prog = cache.program(("refresh_dpos", backend, b, wc), builder)
+    prog = cache.program(("refresh_dpos", backend, b, wc, don), builder)
     return np.asarray(prog(comp_sorted, np.uint32(n))[: n - 1], np.int32)
+
+
+# ---------------------------------------------------------------------------
+# measured chunk auto-tuning — closes the ROADMAP "chunk-size auto-tuning"
+# item: chunk_threshold / chunk_size picked from measured per-bucket sort
+# and merge program costs instead of static constructor knobs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    """A measured chunking policy for one backend.
+
+    ``chunk_size`` minimizes the modeled *warm* cascade wall at ``ref_n``
+    keys; ``chunk_threshold`` is the smallest power-of-two key count at
+    which the chunked path's cold cost (compiles + cascade) undercuts the
+    extrapolated monolithic sort's compile, i.e. the point where paying
+    the cascade's extra warm work buys back more compile time than it
+    costs.  The raw per-candidate samples ride along for transparency
+    (seconds; ``*_cold`` includes the compile, ``*_warm`` is a replay).
+    """
+
+    backend: str
+    chunk_size: int
+    chunk_threshold: int
+    ref_n: int
+    n_words: int
+    sort_cold: dict[int, float]
+    sort_warm: dict[int, float]
+    merge_cold: dict[int, float]
+    merge_warm: dict[int, float]
+
+
+def _cascade_warm_model(n: int, c: int, sort_w: float, merge_w: float) -> float:
+    """Modeled warm cascade wall: per-chunk sorts + per-level merges.
+
+    The merge sample is one equal-halves merge at output bucket ``2c``;
+    higher levels scale linearly in merged rows times the rank search's
+    log(bucket) growth.
+    """
+    n_chunks = -(-n // c)
+    cost = n_chunks * sort_w
+    per_row = merge_w / (2 * c)
+    base_steps = max(math.log2(c), 1.0)
+    runs, size = n_chunks, c
+    while runs > 1:
+        merged_rows = (runs // 2) * 2 * size
+        cost += per_row * merged_rows * (max(math.log2(size), 1.0) / base_steps)
+        runs = -(-runs // 2)
+        size *= 2
+    return cost
+
+
+def _median_wall(fn, iters: int) -> float:
+    walls = []
+    for _ in range(max(int(iters), 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x,
+            out,
+        )
+        walls.append(time.perf_counter() - t0)
+    walls.sort()
+    return walls[len(walls) // 2]
+
+
+def tune_chunking(
+    backend,
+    *,
+    candidates: tuple[int, ...] = (1 << 16, 1 << 17, 1 << 18),
+    n_words: int = 2,
+    ref_n: int = 1 << 20,
+    iters: int = 1,
+    seed: int = 0,
+) -> ChunkPlan:
+    """Calibrate ``chunk_size`` / ``chunk_threshold`` for one backend.
+
+    For every candidate chunk bucket ``c`` this times the backend's sort
+    program at bucket ``c`` (cold = compile + run, then warm replays) and
+    one equal-halves merge at output bucket ``2c``, all inside a
+    :func:`scoped_cache` so the probe programs never enter — or
+    pre-compile — the serving cache.  ``backend`` is duck-typed: anything
+    with the ``sort`` / ``merge_sorted`` backend-op signatures works, so
+    this module needs no import of ``repro.backends``.
+
+    * ``chunk_size`` — the candidate minimizing the modeled warm cascade
+      wall at ``ref_n`` keys (chunk sorts + log-depth merge levels; see
+      ``_cascade_warm_model``).
+    * ``chunk_threshold`` — chunking exists to bound *compile* cost and
+      peak memory, not to beat the monolithic program's warm wall (a
+      cascade always does ~log extra passes).  The threshold is the
+      smallest power of two ``N >= 2 * chunk_size`` where the
+      extrapolated monolithic cold cost (compile fitted as a power law
+      over the two largest candidates + n·log n warm scaling) exceeds
+      the chunked path's cold cost; if the model never crosses below
+      ``ref_n`` the threshold falls back to ``ref_n``.
+    """
+    rng = np.random.default_rng(seed)
+    cands = sorted(int(c) for c in candidates)
+    if len(cands) < 2:
+        raise ValueError("need at least two chunk-size candidates")
+    for c in cands:
+        if c & (c - 1):
+            raise ValueError(f"chunk-size candidates must be powers of two: {c}")
+
+    sort_cold: dict[int, float] = {}
+    sort_warm: dict[int, float] = {}
+    merge_cold: dict[int, float] = {}
+    merge_warm: dict[int, float] = {}
+
+    with scoped_cache():
+        for c in cands:
+            keys = jnp.asarray(
+                rng.integers(0, 2**32, size=(c, n_words), dtype=np.uint32)
+            )
+            rows = iota_u32(c)
+            sort_cold[c] = _median_wall(
+                lambda: backend.sort(keys, rows, n_valid=c, keep_padded=True), 1
+            )
+            sort_warm[c] = _median_wall(
+                lambda: backend.sort(keys, rows, n_valid=c, keep_padded=True),
+                iters,
+            )
+            # equal-halves merge at output bucket 2c: two independently
+            # sorted c-runs with disjoint row ranges (the cascade invariant)
+            h = c // 2
+            ka, ra = backend.sort(keys[:h], iota_u32(h), n_valid=h,
+                                  keep_padded=True)
+            kb, rb = backend.sort(keys[h:], iota_u32(h), n_valid=h,
+                                  keep_padded=True)
+            rb = rb + jnp.uint32(h)
+            merge_cold[c] = _median_wall(
+                lambda: backend.merge_sorted(
+                    ka, ra, kb, rb, n_valid_a=h, n_valid_b=h, keep_padded=True
+                ),
+                1,
+            )
+            merge_warm[c] = _median_wall(
+                lambda: backend.merge_sorted(
+                    ka, ra, kb, rb, n_valid_a=h, n_valid_b=h, keep_padded=True
+                ),
+                iters,
+            )
+
+    chunk_size = min(
+        cands,
+        key=lambda c: _cascade_warm_model(
+            ref_n, c, sort_warm[c], merge_warm[c]
+        ),
+    )
+
+    # -- threshold: where the monolithic compile stops being worth paying --
+    c1, c2 = cands[-2], cands[-1]
+    comp1 = max(sort_cold[c1] - sort_warm[c1], 1e-6)
+    comp2 = max(sort_cold[c2] - sort_warm[c2], 1e-6)
+    # compile-cost growth exponent, clamped to a sane superlinear band
+    alpha = math.log(comp2 / comp1) / math.log(c2 / c1)
+    alpha = min(max(alpha, 1.0), 3.0)
+    c_ref = chunk_size
+    sort_compile = max(sort_cold[c_ref] - sort_warm[c_ref], 1e-6)
+    merge_compile = max(merge_cold[c_ref] - merge_warm[c_ref], 1e-6)
+    warm_rate = sort_warm[c2] / (c2 * max(math.log2(c2), 1.0))
+
+    def mono_cold(n: int) -> float:
+        return comp2 * (n / c2) ** alpha + warm_rate * n * math.log2(n)
+
+    def chunked_cold(n: int) -> float:
+        levels = max(math.ceil(math.log2(-(-n // c_ref))), 1)
+        compiles = sort_compile + sum(
+            merge_compile * (2**lvl) ** (alpha - 1.0) for lvl in range(levels)
+        )
+        return compiles + _cascade_warm_model(
+            n, c_ref, sort_warm[c_ref], merge_warm[c_ref]
+        )
+
+    threshold = ref_n
+    n = 2 * chunk_size
+    while n < ref_n:
+        if chunked_cold(n) < mono_cold(n):
+            threshold = n
+            break
+        n *= 2
+
+    return ChunkPlan(
+        backend=getattr(backend, "name", "?"),
+        chunk_size=chunk_size,
+        chunk_threshold=threshold,
+        ref_n=int(ref_n),
+        n_words=int(n_words),
+        sort_cold=sort_cold,
+        sort_warm=sort_warm,
+        merge_cold=merge_cold,
+        merge_warm=merge_warm,
+    )

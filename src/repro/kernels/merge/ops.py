@@ -55,9 +55,12 @@ def merge_sorted(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Kernel-ranked merge of two ascending (key, row) runs.
 
-    Both rank passes run through the Pallas kernel; the merge-from-ranks
-    assembly (permutation scatter) is shared with the jnp reference, so the
+    The single rank pass (the smaller run ranked in the larger — see
+    ``merge_from_ranks``) runs through the Pallas kernel; the
+    complement-scatter assembly is shared with the jnp reference, so the
     output is byte-identical to ``repro.core.dbits.merge_words_keyed``.
+    Halving the rank passes halves the kernel work per merge, which is
+    what makes the chunked cascade's merge levels cheap on this backend.
     """
     from repro.core.dbits import merge_from_ranks
 

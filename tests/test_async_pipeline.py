@@ -1,0 +1,111 @@
+"""Sync-free stage chaining: ``async_dispatch=True`` moves the sync points
+(one end-of-run barrier instead of one per stage) and must change nothing
+else — results are bit-identical on every backend, on the chunked path,
+and through ``run_incremental``; ``stage_timings=True`` restores the
+per-stage barriers for one call when the Figure-9 breakdown is wanted.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.keyformat import KeySet
+from repro.core.metadata import meta_from_keys
+from repro.core.pipeline import ReconstructionPipeline
+
+
+def _keyset(rng, n, w=3, mask=0x0FFF00FF):
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(mask)
+    rids = np.arange(n, dtype=np.uint32)
+    rng.shuffle(rids)
+    return KeySet(words=words, lengths=np.full(n, w * 4, np.int32), rids=rids)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(31)
+
+
+def _assert_results_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.comp_sorted), np.asarray(b.comp_sorted))
+    np.testing.assert_array_equal(np.asarray(a.row_sorted), np.asarray(b.row_sorted))
+    np.testing.assert_array_equal(np.asarray(a.rid_sorted), np.asarray(b.rid_sorted))
+    np.testing.assert_array_equal(
+        np.asarray(a.tree.sorted_full), np.asarray(b.tree.sorted_full)
+    )
+    assert a.tree.height == b.tree.height
+    assert a.watermark == b.watermark
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "distributed"])
+def test_async_bit_identical_to_sync(rng, backend):
+    """Async dispatch only moves the barriers — every backend must return
+    the exact result the per-stage-synced pipeline returns."""
+    ks = _keyset(rng, 1500)
+    meta = meta_from_keys(ks.words)
+    res_s = ReconstructionPipeline(backend=backend).run(ks, meta=meta, watermark=7)
+    res_a = ReconstructionPipeline(backend=backend, async_dispatch=True).run(
+        ks, meta=meta, watermark=7
+    )
+    _assert_results_equal(res_s, res_a)
+    assert res_a.stats["async_dispatch"] is True
+    assert res_s.stats["async_dispatch"] is False
+
+
+def test_async_chunked_bit_identical(rng):
+    """The ladder cascade under async dispatch (deep in-flight program
+    chains) still matches the synced monolithic run bit for bit."""
+    ks = _keyset(rng, 2**12 + 5)
+    meta = meta_from_keys(ks.words)
+    res_s = ReconstructionPipeline("jnp", chunk_threshold=1 << 30).run(ks, meta=meta)
+    res_a = ReconstructionPipeline(
+        "jnp", async_dispatch=True, chunk_threshold=2048, chunk_size=1024
+    ).run(ks, meta=meta)
+    assert res_a.stats["chunked"] == -(-ks.n // 1024)
+    _assert_results_equal(res_s, res_a)
+
+
+def test_async_incremental_bit_identical(rng):
+    """run_incremental under async dispatch matches its synced twin."""
+    ks = _keyset(rng, 2000)
+    meta = meta_from_keys(ks.words)
+    sync_pipe = ReconstructionPipeline("jnp")
+    async_pipe = ReconstructionPipeline("jnp", async_dispatch=True)
+    prev = sync_pipe.run(ks, meta=meta)
+    delta = _keyset(rng, 150)
+    keep = np.ones(ks.n, bool)
+    keep[::11] = False
+    res_s, fold_s = sync_pipe.run_incremental(prev, ks, delta, keep_rows=keep)
+    res_a, fold_a = async_pipe.run_incremental(prev, ks, delta, keep_rows=keep)
+    _assert_results_equal(res_s, res_a)
+    np.testing.assert_array_equal(fold_s.words, fold_a.words)
+    assert res_a.stats["async_dispatch"] is True
+
+
+def test_timings_contract(rng):
+    """Every run reports a ``sync`` wall: zero under per-stage barriers,
+    the end-of-run barrier's wall under async; ``stage_timings`` overrides
+    the pipeline policy per call."""
+    ks = _keyset(rng, 800)
+    meta = meta_from_keys(ks.words)
+    pipe = ReconstructionPipeline("jnp", async_dispatch=True)
+
+    res = pipe.run(ks, meta=meta)
+    assert res.timings["sync"] >= 0.0
+    assert res.timings["total"] > 0.0
+
+    # stage_timings=True restores the barriers for this call only
+    res_t = pipe.run(ks, meta=meta, stage_timings=True)
+    assert res_t.stats["async_dispatch"] is False
+    assert res_t.timings["sync"] == 0.0
+    assert all(
+        k in res_t.timings
+        for k in ("meta", "extract", "sort", "build", "refresh_meta", "sync", "total")
+    )
+
+    # ...and stage_timings=False forces async on a sync pipeline
+    res_f = ReconstructionPipeline("jnp").run(ks, meta=meta, stage_timings=False)
+    assert res_f.stats["async_dispatch"] is True
+
+    prev = pipe.run(ks, meta=meta)
+    res_i, _ = pipe.run_incremental(prev, ks, None, watermark=3)
+    assert "sync" in res_i.timings  # the no-op short-circuit keeps the key

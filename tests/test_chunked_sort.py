@@ -152,3 +152,91 @@ def test_distributed_batched_extract_sort_sharded_subprocess():
     )
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert "SHARDED RUN_MANY OK" in r.stdout
+
+
+def test_chunk_sorts_stay_bucket_shaped_with_tail_n_valid(rng):
+    """Every chunk — the ragged tail included — feeds the sort a full
+    chunk-bucket-shaped slice plus a dynamic ``n_valid``, so the tail
+    replays the same cached program instead of eagerly slicing to its
+    ragged length and re-padding (the extra copy the valid-count operand
+    exists to avoid)."""
+    c = 512
+    ks = _keyset(rng, 3 * c + 37)
+    meta = meta_from_keys(ks.words)
+    pipe = ReconstructionPipeline("jnp", chunk_threshold=1024, chunk_size=c)
+    calls = []
+    orig = pipe.backend.sort
+
+    def spy(keys, rows, **kw):
+        calls.append((int(keys.shape[0]), kw.get("n_valid"), kw.get("keep_padded")))
+        return orig(keys, rows, **kw)
+
+    pipe.backend.sort = spy
+    try:
+        res = pipe.run(ks, meta=meta)
+    finally:
+        pipe.backend.sort = orig
+    assert res.stats["chunked"] == 4
+    assert calls == [(c, c, True)] * 3 + [(c, 37, True)]
+
+
+def test_tune_chunking_measures_and_persists(rng):
+    """tune_chunking probes inside a throwaway scoped cache (the serving
+    cache's programs and counters stay untouched — the bench's cold walls
+    must stay honest), returns a sane plan, and the pipeline adopts and
+    surfaces it."""
+    pipe = ReconstructionPipeline("jnp")
+    before = plancache.get_cache().stats()
+    plan = pipe.tune_chunking(candidates=(256, 512), ref_n=1 << 13, iters=2)
+    assert plancache.get_cache().stats() == before
+
+    assert plan.backend == "jnp"
+    assert plan.chunk_size in (256, 512)
+    assert plan.chunk_threshold >= 2 * plan.chunk_size or (
+        plan.chunk_threshold == plan.ref_n
+    )
+    assert set(plan.sort_warm) == {256, 512}
+    assert all(v > 0 for v in plan.sort_cold.values())
+
+    assert pipe.chunk_size == plan.chunk_size
+    assert pipe.chunk_threshold == plan.chunk_threshold
+    assert pipe.chunk_plan is plan
+
+    ks = _keyset(rng, 700)
+    res = pipe.run(ks)
+    assert res.stats["chunk_tuned"] is True
+    assert res.stats["chunk_size"] == plan.chunk_size
+    assert res.stats["chunk_threshold"] == plan.chunk_threshold
+
+
+def test_auto_tune_triggers_lazily(rng):
+    """auto_tune_chunks calibrates on the first run that crosses the
+    threshold, once; the adopted plan governs the run that triggered it."""
+    pipe = ReconstructionPipeline(
+        "jnp", auto_tune_chunks=True, chunk_threshold=1024, chunk_size=512
+    )
+    small = _keyset(rng, 600)
+    pipe.run(small)
+    assert pipe.chunk_plan is None  # below threshold: no probe
+
+    calls = []
+    orig = pipe.tune_chunking
+
+    def spy(**kw):
+        calls.append(kw)
+        return orig(candidates=(256, 512), ref_n=1 << 13)
+
+    pipe.tune_chunking = spy
+    try:
+        big = _keyset(rng, 2048)
+        res1 = pipe.run(big)
+        res2 = pipe.run(big)
+    finally:
+        pipe.tune_chunking = orig
+    assert len(calls) == 1  # calibrated once, then reused
+    assert pipe.chunk_plan is not None
+    assert res1.stats["chunk_tuned"] and res2.stats["chunk_tuned"]
+    ref = ReconstructionPipeline("jnp").run(big)
+    np.testing.assert_array_equal(
+        np.asarray(res1.comp_sorted), np.asarray(ref.comp_sorted)
+    )

@@ -1,0 +1,212 @@
+"""Buffer-donation contract: donated operands are consumed (zero-copy
+chaining), outputs stay byte-identical to the undonated programs for any
+pad content, donated/undonated program variants coexist in the plan cache
+without retracing, and the donating cascade's live footprint is bounded
+by the ladder depth.
+
+Everything here is gated on :func:`repro.core.plancache.donation_supported`
+— on platforms where XLA rejects donation the flag is a silent no-op and
+these tests skip.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plancache
+from repro.core.keyformat import KeySet
+from repro.core.metadata import meta_from_keys
+from repro.core.pipeline import ReconstructionPipeline
+
+pytestmark = pytest.mark.skipif(
+    not plancache.donation_supported(),
+    reason="platform does not support buffer donation",
+)
+
+
+def _keyset(rng, n, w=3, mask=0x0FFF00FF):
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32) & np.uint32(mask)
+    rids = np.arange(n, dtype=np.uint32)
+    rng.shuffle(rids)
+    return KeySet(words=words, lengths=np.full(n, w * 4, np.int32), rids=rids)
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(23)
+
+
+@pytest.fixture()
+def backend():
+    from repro.backends import get_backend
+
+    return get_backend("jnp")
+
+
+def test_donated_sort_consumes_bucket_shaped_input(rng, backend):
+    """A bucket-shaped key buffer donated to the sort is deleted after
+    dispatch — the program took ownership."""
+    b = 1024
+    keys = jnp.asarray(rng.integers(0, 2**32, size=(b, 2), dtype=np.uint32))
+    out = backend.sort(keys, plancache.iota_u32(b), n_valid=b,
+                       keep_padded=True, donate=True)
+    out[0].block_until_ready()
+    assert keys.is_deleted()
+
+
+def test_donated_merge_byte_identical_and_constants_survive(rng, backend):
+    """Donating both merge runs changes nothing observable: XLA can't
+    alias the half-size inputs into the double-size output (they stay
+    live until their Python refs drop — the ladder's job), the output is
+    byte-identical, and the cached iota constant is untouched."""
+    c = 512
+    keys = jnp.asarray(rng.integers(0, 2**32, size=(c, 2), dtype=np.uint32))
+
+    def runs():
+        ka, ra = backend.sort(keys[: c // 2], plancache.iota_u32(c // 2),
+                              n_valid=c // 2, keep_padded=True)
+        kb, rb = backend.sort(keys[c // 2 :], plancache.iota_u32(c // 2),
+                              n_valid=c // 2, keep_padded=True)
+        return ka, ra, kb, rb + jnp.uint32(c // 2)
+
+    ka, ra, kb, rb = runs()
+    mk, mr = backend.merge_sorted(
+        ka, ra, kb, rb, n_valid_a=c // 2, n_valid_b=c // 2,
+        keep_padded=True, donate=True,
+    )
+    mk.block_until_ready()
+    ka2, ra2, kb2, rb2 = runs()
+    rk, rr = backend.merge_sorted(
+        ka2, ra2, kb2, rb2, n_valid_a=c // 2, n_valid_b=c // 2,
+        keep_padded=True, donate=False,
+    )
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(mr), np.asarray(rr))
+    # cached constants must never be donated: the iota is still usable
+    assert not plancache.iota_u32(c // 2).is_deleted()
+
+
+@pytest.mark.parametrize("fill", [0x00000000, 0xDEADBEEF, 0xFFFFFFFF])
+def test_donated_sort_identical_for_any_pad_fill(rng, backend, fill):
+    """Donation must not change results, whatever garbage sits in the pad
+    lanes: the programs renormalize pads from ``n_valid``."""
+    n, b, w = 1000, 1024, 3
+    body = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32)
+    padded = np.full((b, w), fill, np.uint32)
+    padded[:n] = body
+    ref_k, ref_r = backend.sort(jnp.asarray(body), plancache.iota_u32(n))
+    don_k, don_r = backend.sort(
+        jnp.asarray(padded), plancache.iota_u32(b), n_valid=n, donate=True
+    )
+    np.testing.assert_array_equal(np.asarray(don_k), np.asarray(ref_k))
+    np.testing.assert_array_equal(np.asarray(don_r), np.asarray(ref_r))
+
+
+def test_donated_and_undonated_variants_coexist_warm(rng, backend):
+    """The donate flag is part of the program key: both variants compile
+    once, then replay with zero retraces."""
+    b = 1024
+    cache = plancache.get_cache()
+
+    def fresh():
+        return jnp.asarray(rng.integers(0, 2**32, size=(b, 2), dtype=np.uint32))
+
+    for donate in (False, True, False, True):
+        backend.sort(fresh(), plancache.iota_u32(b), n_valid=b, donate=donate)
+    warm0 = cache.stats()["traces"]
+    for donate in (False, True):
+        backend.sort(fresh(), plancache.iota_u32(b), n_valid=b, donate=donate)
+    assert cache.stats()["traces"] == warm0
+
+
+def test_pipeline_donate_byte_identical(rng):
+    """End-to-end: donate=True reproduces the undonated pipeline bit for
+    bit on the monolithic, chunked, and full-keys paths."""
+    ks = _keyset(rng, 3000)
+    meta = meta_from_keys(ks.words)
+    ref = ReconstructionPipeline("jnp").run(ks, meta=meta)
+    for kw in (
+        dict(donate=True),
+        dict(donate=True, chunk_threshold=1024, chunk_size=512),
+    ):
+        res = ReconstructionPipeline("jnp", **kw).run(ks, meta=meta)
+        np.testing.assert_array_equal(
+            np.asarray(res.comp_sorted), np.asarray(ref.comp_sorted)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.rid_sorted), np.asarray(ref.rid_sorted)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.tree.sorted_full), np.asarray(ref.tree.sorted_full)
+        )
+    ref_fk = ReconstructionPipeline("jnp").run(ks, full_keys=True)
+    res_fk = ReconstructionPipeline("jnp", donate=True).run(ks, full_keys=True)
+    np.testing.assert_array_equal(
+        np.asarray(res_fk.comp_sorted), np.asarray(ref_fk.comp_sorted)
+    )
+
+
+def test_cascade_donates_chunk_sorts_and_bounds_live_runs(rng):
+    """The donating ladder sorts every chunk in place (bucket-shaped key
+    slices alias their sorted outputs and are deleted), does exactly
+    ``n_chunks - 1`` merges, and keeps at most O(log n_chunks) runs live
+    at once — the ``cascade_peak_live_runs`` stat records the peak."""
+    ks = _keyset(rng, 9 * 512 + 37)  # ragged chunk count exercises the tail fold
+    meta = meta_from_keys(ks.words)
+    pipe = ReconstructionPipeline(
+        "jnp", donate=True, chunk_threshold=1024, chunk_size=512
+    )
+    sort_inputs, merge_calls = [], []
+    orig_sort, orig_merge = pipe.backend.sort, pipe.backend.merge_sorted
+
+    def spy_sort(keys, rows, **kw):
+        if kw.get("donate"):
+            sort_inputs.append(keys)
+        return orig_sort(keys, rows, **kw)
+
+    def spy_merge(ka, ra, kb, rb, **kw):
+        merge_calls.append(kw)
+        return orig_merge(ka, ra, kb, rb, **kw)
+
+    pipe.backend.sort = spy_sort
+    pipe.backend.merge_sorted = spy_merge
+    try:
+        res = pipe.run(ks, meta=meta)
+    finally:
+        pipe.backend.sort = orig_sort
+        pipe.backend.merge_sorted = orig_merge
+
+    n_chunks = res.stats["chunked"]
+    assert n_chunks == -(-ks.n // 512)
+    # every chunk's key slice was donated and aliased into its sorted
+    # output (same bucket shape) — the zero-copy in-place sort
+    assert len(sort_inputs) == n_chunks
+    for keys in sort_inputs:
+        assert keys.is_deleted()
+    # a ladder does exactly n-1 merges, all flagged donated
+    assert len(merge_calls) == n_chunks - 1
+    assert all(kw.get("donate") for kw in merge_calls)
+    assert res.stats["cascade_merges"] == n_chunks - 1
+    assert res.stats["cascade_peak_live_runs"] <= int(math.log2(n_chunks)) + 2
+
+
+def test_run_incremental_never_donates_previous_result(rng):
+    """The incremental merge's base run is (a view of) the previous
+    result; donation must leave it readable after the call."""
+    ks = _keyset(rng, 2000)
+    meta = meta_from_keys(ks.words)
+    pipe = ReconstructionPipeline("jnp", donate=True)
+    prev = pipe.run(ks, meta=meta)
+    delta = _keyset(rng, 200)
+    res, folded = pipe.run_incremental(prev, ks, delta)
+    assert not prev.comp_sorted.is_deleted()
+    assert not prev.row_sorted.is_deleted()
+    sync = ReconstructionPipeline("jnp").run_incremental(prev, ks, delta)[0]
+    np.testing.assert_array_equal(
+        np.asarray(res.comp_sorted), np.asarray(sync.comp_sorted)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.rid_sorted), np.asarray(sync.rid_sorted)
+    )
