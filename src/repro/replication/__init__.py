@@ -9,9 +9,17 @@ The async stream (``repro.replication.stream``) ships log batches from a
 ``StreamPrimary`` to N ``StreamReplica`` consumers over a pluggable
 ``transport`` (in-memory queue or spool directory), with LSN-watermark
 idempotency, bounded-lag backpressure, and checkpoint-chain catch-up.
-See docs/replication.md for the protocol.
+
+The fault layer hardens the stream against an adversarial wire: every
+frame carries a CRC32C integrity header (``repro.replication.wire``),
+``FaultyTransport`` injects seeded delivery faults for testing
+(``repro.replication.chaos``), and ``ReplicaSupervisor`` walks the
+retry/backoff/resync/quarantine degradation ladder around ``poll``
+(``repro.replication.supervisor``).  See docs/replication.md for the
+protocol and the fault model.
 """
 
+from .chaos import ChaosPlan, FaultyTransport  # noqa: F401
 from .log import OP_DELETE, OP_INSERT, ChangeLog  # noqa: F401
 from .replica import Replica  # noqa: F401
 from .stream import (  # noqa: F401
@@ -25,12 +33,20 @@ from .stream import (  # noqa: F401
     StreamReplica,
     decode_frame,
     encode_frame,
+    peek_header,
 )
+from .supervisor import ReplicaSupervisor, SupervisorPolicy  # noqa: F401
 from .transport import (  # noqa: F401
     DirectoryTransport,
     FrameTruncated,
     QueueTransport,
     Transport,
+)
+from .wire import (  # noqa: F401
+    FrameCorrupt,
+    FrameHeader,
+    FrameSchemaError,
+    WireError,
 )
 
 __all__ = [
@@ -49,7 +65,16 @@ __all__ = [
     "ShedFrame",
     "encode_frame",
     "decode_frame",
+    "peek_header",
     "StreamError",
     "LsnGapError",
     "BackpressureError",
+    "WireError",
+    "FrameCorrupt",
+    "FrameSchemaError",
+    "FrameHeader",
+    "ChaosPlan",
+    "FaultyTransport",
+    "ReplicaSupervisor",
+    "SupervisorPolicy",
 ]

@@ -311,22 +311,32 @@ class ChangeLog:
 
     @staticmethod
     def from_npz_dict(d: dict[str, np.ndarray]) -> "ChangeLog":
-        """Inverse of ``to_npz_dict`` (tolerates pre-shed-state archives)."""
-        frac = float(d.get("log_shed_frac", np.nan))
-        log = ChangeLog(
-            int(d["log_n_words"]),
-            start_lsn=int(d["log_start_lsn"]),
-            shed_delete_frac=None if np.isnan(frac) else frac,
-            deletes_since_shed=int(d.get("log_deletes_since_shed", 0)),
-        )
-        ops = np.asarray(d["log_ops"], np.uint8)
-        if ops.size:
-            log._ops = [ops]
-            log._lsns = [np.asarray(d["log_lsns"], np.uint64)]
-            log._words = [np.asarray(d["log_words"], np.uint32)]
-            log._rids = [np.asarray(d["log_rids"], np.uint32)]
-            log._lengths = [np.asarray(d["log_lengths"], np.int32)]
-            log._next_lsn = int(d["log_lsns"][-1]) + 1
+        """Inverse of ``to_npz_dict`` (tolerates pre-shed-state archives).
+
+        A dict missing required ``log_*`` columns raises the typed
+        :class:`repro.replication.wire.FrameSchemaError` (not a raw
+        ``KeyError``) so stream consumers can classify the failure.
+        """
+        from .wire import FrameSchemaError
+
+        try:
+            frac = float(d.get("log_shed_frac", np.nan))
+            log = ChangeLog(
+                int(d["log_n_words"]),
+                start_lsn=int(d["log_start_lsn"]),
+                shed_delete_frac=None if np.isnan(frac) else frac,
+                deletes_since_shed=int(d.get("log_deletes_since_shed", 0)),
+            )
+            ops = np.asarray(d["log_ops"], np.uint8)
+            if ops.size:
+                log._ops = [ops]
+                log._lsns = [np.asarray(d["log_lsns"], np.uint64)]
+                log._words = [np.asarray(d["log_words"], np.uint32)]
+                log._rids = [np.asarray(d["log_rids"], np.uint32)]
+                log._lengths = [np.asarray(d["log_lengths"], np.int32)]
+                log._next_lsn = int(d["log_lsns"][-1]) + 1
+        except (KeyError, ValueError, TypeError) as e:
+            raise FrameSchemaError(f"malformed change-log archive: {e!r}") from e
         return log
 
     def save(self, path: str | os.PathLike) -> Path:
@@ -355,6 +365,19 @@ class ChangeLog:
 
     @staticmethod
     def from_wire(payload: bytes) -> "ChangeLog":
-        """Inverse of ``to_wire``."""
-        with np.load(io.BytesIO(payload)) as z:
-            return ChangeLog.from_npz_dict(dict(z))
+        """Inverse of ``to_wire``.
+
+        A payload that is not an npz archive (torn copy, foreign bytes)
+        raises the typed :class:`repro.replication.wire.FrameSchemaError`
+        instead of a raw zipfile exception.
+        """
+        from .wire import FrameSchemaError
+
+        try:
+            with np.load(io.BytesIO(payload)) as z:
+                d = dict(z)
+        except Exception as e:  # zipfile.BadZipFile, OSError, ValueError
+            raise FrameSchemaError(
+                f"wire payload is not an npz archive: {e}"
+            ) from e
+        return ChangeLog.from_npz_dict(d)

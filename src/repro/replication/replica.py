@@ -126,6 +126,21 @@ class Replica:
         policy bookkeeping; snapshotted into checkpoint frames)."""
         return self._deletes_since_shed
 
+    @property
+    def stats(self) -> dict:
+        """Health snapshot of the standing index: watermark, size, shed
+        bookkeeping, snapshot epoch — the inner-replica half of the
+        counters a stream consumer (or its supervisor) surfaces."""
+        return {
+            "applied_lsn": self.applied_lsn,
+            "n_applied_batches": self.n_applied_batches,
+            "n_keys": self.keyset.n,
+            "watermark": self.result.watermark,
+            "deletes_since_shed": self._deletes_since_shed,
+            "shed_delete_frac": self.shed_delete_frac,
+            "snapshot_epoch": self.snapshots.epoch,
+        }
+
     # ------------------------------------------------------------- lookup
     def search_batch(
         self, query_words: np.ndarray

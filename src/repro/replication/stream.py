@@ -59,6 +59,14 @@ from repro.core.metadata import DSMeta
 from .log import ChangeLog
 from .replica import Replica
 from .transport import FrameTruncated, Transport
+from .wire import (
+    FrameCorrupt,
+    FrameHeader,
+    FrameSchemaError,
+    is_framed,
+    pack_frame,
+    unpack_frame,
+)
 
 __all__ = [
     "BatchFrame",
@@ -66,11 +74,14 @@ __all__ = [
     "ShedFrame",
     "encode_frame",
     "decode_frame",
+    "peek_header",
     "StreamPrimary",
     "StreamReplica",
     "StreamError",
     "LsnGapError",
     "BackpressureError",
+    "FrameCorrupt",
+    "FrameSchemaError",
 ]
 
 
@@ -154,12 +165,24 @@ class CheckpointFrame:
     log_state: ChangeLog
 
 
-def encode_frame(frame: "BatchFrame | CheckpointFrame | ShedFrame") -> bytes:
-    """Serialize a frame for a transport (an npz archive as bytes).
+#: numeric frame-kind tags for the wire header (0 is reserved)
+_KIND_CODES = {"batch": 1, "shed": 2, "checkpoint": 3}
+_KIND_NAMES = {v: k for k, v in _KIND_CODES.items()}
 
-    The payload embeds the frame kind, the frame-specific header fields,
-    and (for batch/checkpoint frames) the ``log_``-prefixed change-log
-    columns — one self-describing npz per frame, readable by any npz tool.
+
+def encode_frame(
+    frame: "BatchFrame | CheckpointFrame | ShedFrame", seq: int = 0
+) -> bytes:
+    """Serialize a frame for a transport: integrity header + npz payload.
+
+    The payload is a self-describing npz archive (the frame kind, the
+    frame-specific fields, and — for batch/checkpoint frames — the
+    ``log_``-prefixed change-log columns), wrapped in the fixed
+    :mod:`~repro.replication.wire` header: magic, format version, frame
+    kind tag, the publisher's monotonic sequence number ``seq``, payload
+    length, and a CRC32C covering both.  A bit flip anywhere on the wire
+    surfaces as a typed :class:`~repro.replication.wire.FrameCorrupt`
+    instead of a garbage decode.
     """
     buf = io.BytesIO()
     if isinstance(frame, BatchFrame):
@@ -186,28 +209,72 @@ def encode_frame(frame: "BatchFrame | CheckpointFrame | ShedFrame") -> bytes:
         )
     else:
         raise TypeError(f"not a stream frame: {type(frame).__name__}")
-    return buf.getvalue()
+    kind = type(frame).__name__.replace("Frame", "").lower()
+    return pack_frame(_KIND_CODES[kind], buf.getvalue(), seq=int(seq))
+
+
+def peek_header(payload: bytes) -> FrameHeader | None:
+    """The verified wire header of a framed payload; ``None`` for legacy
+    v0 frames (raw npz, no header).  Raises the same typed errors as
+    :func:`decode_frame` on a damaged header."""
+    return unpack_frame(payload)[0] if is_framed(payload) else None
+
+
+def _load_npz(body: bytes) -> dict:
+    """Decode an npz payload defensively (typed error, never garbage)."""
+    try:
+        with np.load(io.BytesIO(body)) as z:
+            return dict(z)
+    except Exception as e:  # zipfile.BadZipFile, OSError, ValueError, ...
+        raise FrameSchemaError(
+            f"frame payload is not an npz archive: {e}"
+        ) from e
 
 
 def decode_frame(payload: bytes) -> "BatchFrame | CheckpointFrame | ShedFrame":
-    """Inverse of :func:`encode_frame`."""
-    with np.load(io.BytesIO(payload)) as z:
-        d = dict(z)
+    """Inverse of :func:`encode_frame`, with verification.
+
+    Framed (v1) payloads have their length and CRC32C checked and the
+    header's kind tag cross-checked against the npz body; payloads
+    without the frame magic decode through the **legacy v0 fallback**
+    (raw npz — pre-header spools keep working).  All failure modes raise
+    typed errors: :class:`~repro.replication.wire.FrameCorrupt` for
+    damaged bytes, :class:`~repro.replication.wire.FrameSchemaError` for
+    intact-but-malformed payloads (unknown kind, missing fields,
+    not-an-npz) — never a raw ``KeyError`` or zipfile exception.
+    """
+    if is_framed(payload):
+        hdr, body = unpack_frame(payload)
+        expect_kind = _KIND_NAMES.get(hdr.kind)
+        if expect_kind is None:
+            raise FrameSchemaError(f"unknown frame kind tag {hdr.kind}")
+    else:
+        hdr, body, expect_kind = None, payload, None  # legacy v0 frame
+    d = _load_npz(body)
+    if "frame_kind" not in d:
+        raise FrameSchemaError("frame payload has no 'frame_kind' field")
     kind = str(d["frame_kind"])
-    if kind == "batch":
-        return BatchFrame(
-            log=ChangeLog.from_npz_dict(d), bucket=int(d["frame_bucket"])
+    if expect_kind is not None and kind != expect_kind:
+        raise FrameSchemaError(
+            f"header kind {expect_kind!r} != payload kind {kind!r}"
         )
-    if kind == "shed":
-        return ShedFrame(lsn=int(d["frame_lsn"]))
-    if kind == "checkpoint":
-        return CheckpointFrame(
-            ckpt_dir=str(d["frame_ckpt_dir"]),
-            step=int(d["frame_step"]),
-            base_lsn=int(d["frame_base_lsn"]),
-            log_state=ChangeLog.from_npz_dict(d),
-        )
-    raise StreamError(f"unknown frame kind {kind!r}")
+    try:
+        if kind == "batch":
+            return BatchFrame(
+                log=ChangeLog.from_npz_dict(d), bucket=int(d["frame_bucket"])
+            )
+        if kind == "shed":
+            return ShedFrame(lsn=int(d["frame_lsn"]))
+        if kind == "checkpoint":
+            return CheckpointFrame(
+                ckpt_dir=str(d["frame_ckpt_dir"]),
+                step=int(d["frame_step"]),
+                base_lsn=int(d["frame_base_lsn"]),
+                log_state=ChangeLog.from_npz_dict(d),
+            )
+    except (KeyError, ValueError, TypeError) as e:
+        raise FrameSchemaError(f"malformed {kind!r} frame: {e!r}") from e
+    raise FrameSchemaError(f"unknown frame kind {kind!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -310,6 +377,7 @@ class StreamPrimary:
         self.n_words = int(keyset.n_words if keyset is not None else n_words)
         self._pending: list[ChangeLog] = []
         self._next_lsn = 0
+        self._wire_seq = 0
         self._ckpt_step = 0
         self._prev_ckpt_pos: int | None = None
         self._batches_since_ckpt = 0
@@ -335,6 +403,12 @@ class StreamPrimary:
             self._ship(genesis)
 
     # -------------------------------------------------------------- write
+    def _publish_frame(self, frame) -> int:
+        """Encode with the next monotonic wire sequence number and publish."""
+        pos = self.transport.publish(encode_frame(frame, seq=self._wire_seq))
+        self._wire_seq += 1
+        return pos
+
     @property
     def next_lsn(self) -> int:
         """LSN the next published log must start at (contiguity check)."""
@@ -390,14 +464,12 @@ class StreamPrimary:
             # batch, which the Replica constructor consumed) — compare
             # watermarks, not "is this LSN 0"
             shed = bool(self.replica.apply(log).get("shed_bits"))
-        self.transport.publish(
-            encode_frame(BatchFrame(log=log, bucket=plancache.bucket(len(log))))
-        )
+        self._publish_frame(BatchFrame(log=log, bucket=plancache.bucket(len(log))))
         if shed:
             # shed adoption is a logged event: the control frame pins the
             # watermark the bitmap shed at, so every consumer adopts it at
             # exactly that point regardless of its poll cadence
-            self.transport.publish(encode_frame(ShedFrame(lsn=log.next_lsn - 1)))
+            self._publish_frame(ShedFrame(lsn=log.next_lsn - 1))
             self.n_shed_frames += 1
         self.n_batches_published += 1
         self._batches_since_ckpt += 1
@@ -483,7 +555,7 @@ class StreamPrimary:
                 deletes_since_shed=rep.deletes_since_shed,
             ),
         )
-        pos = self.transport.publish(encode_frame(frame))
+        pos = self._publish_frame(frame)
         self._batches_since_ckpt = 0
         if truncate and self._prev_ckpt_pos is not None:
             self.transport.truncate_before(self._prev_ckpt_pos)
@@ -495,6 +567,7 @@ class StreamPrimary:
         """Publisher-side counters (shipment, retention, checkpoints)."""
         return {
             "next_lsn": self._next_lsn,
+            "wire_seq": self._wire_seq,
             "n_batches_published": self.n_batches_published,
             "n_shed_frames": self.n_shed_frames,
             "batches_since_ckpt": self._batches_since_ckpt,
@@ -527,6 +600,14 @@ class StreamReplica:
     is driven entirely by the stream's logged :class:`ShedFrame` control
     frames (a shed frame splits the drained span at its watermark and
     the inner replica adopts the refreshed bitmap there).
+
+    ``reorder_window`` (default 0 = strict) makes the poller tolerant of
+    a reordering wire: a batch arriving *ahead* of the expected LSN is
+    held back (up to that many frames) instead of raising
+    :class:`LsnGapError` immediately, and is spliced in once the missing
+    frames arrive — so a chaos transport that swaps frames within a small
+    window heals in-protocol, without a checkpoint bootstrap.  Only when
+    the holdback fills without connecting does the gap surface.
     """
 
     def __init__(
@@ -536,14 +617,18 @@ class StreamReplica:
         backend_opts: dict | None = None,
         shed_delete_frac: float | None = None,
         start_pos: int = 0,
+        reorder_window: int = 0,
     ) -> None:
         self.transport = transport
         self.backend = backend
         self.backend_opts = backend_opts
         self.shed_delete_frac = shed_delete_frac
         self.pos = int(start_pos)
+        self.reorder_window = int(reorder_window)
         self.replica: Replica | None = None
         self._genesis: ChangeLog | None = None
+        # holdback buffer for out-of-order batches: start_lsn -> ChangeLog
+        self._held: dict[int, ChangeLog] = {}
         self.n_polls = 0
         self.n_batches_applied = 0
         self.n_duplicates = 0
@@ -551,6 +636,9 @@ class StreamReplica:
         self.n_catchups = 0
         self.n_truncation_jumps = 0
         self.n_shed_adoptions = 0
+        self.n_frames_rejected = 0
+        self.n_reorder_heals = 0
+        self.n_resyncs = 0
 
     # ------------------------------------------------------------- state
     @property
@@ -599,11 +687,12 @@ class StreamReplica:
         """
         seen = 0
         pending: list[ChangeLog] = []
-        gap: LsnGapError | None = None
+        fail: Exception | None = None
         out = {
             "frames": 0, "applied_batches": 0, "duplicates": 0,
             "catchup": False, "truncated_jump": False, "apply": None,
-            "applies": [], "shed_adopted": 0,
+            "applies": [], "shed_adopted": 0, "frames_rejected": 0,
+            "reorder_heals": 0,
         }
 
         def _flush_pending():
@@ -630,7 +719,17 @@ class StreamReplica:
                 continue
             if raw is None:
                 break
-            frame = decode_frame(raw)
+            try:
+                frame = decode_frame(raw)
+            except (FrameCorrupt, FrameSchemaError) as err:
+                # a damaged/undecodable frame: apply the drained good
+                # prefix, leave the cursor ON the frame (a re-read may
+                # heal transient wire corruption), surface the typed error
+                self.n_frames_rejected += 1
+                out["frames_rejected"] += 1
+                err.pos = self.pos
+                fail = err
+                break
             seen += 1
             out["frames"] += 1
             if isinstance(frame, ShedFrame):
@@ -658,6 +757,7 @@ class StreamReplica:
                     pending.clear()  # superseded by the checkpoint state
                     self._bootstrap(frame)
                     out["catchup"] = True
+                self._drain_held(pending, out)
                 self.pos += 1
                 continue
             log = frame.log
@@ -667,19 +767,30 @@ class StreamReplica:
                 # us — anything later means our base was truncated away and
                 # a checkpoint frame should have led the retained suffix
                 if log.start_lsn != 0:
-                    gap = LsnGapError(
+                    if self._hold(log):
+                        self.pos += 1
+                        continue
+                    fail = LsnGapError(
                         f"no base state and the stream starts at LSN "
                         f"{log.start_lsn}, not 0 — checkpoint frame missing"
                     )
                     break
                 pending.append(log)
+                self._drain_held(pending, out)
             elif len(log) == 0 and log.start_lsn == expected:
                 pass  # heartbeat: empty batch at the watermark, nothing to do
             elif log.next_lsn <= expected:
                 self.n_duplicates += 1
                 out["duplicates"] += 1
             elif log.start_lsn > expected:
-                gap = LsnGapError(
+                # ahead of the watermark: an out-of-order wire (or a real
+                # gap).  With a reorder window, hold the batch back and
+                # keep draining — the missing frames may be right behind
+                # it; only a full holdback surfaces as a gap.
+                if self._hold(log):
+                    self.pos += 1
+                    continue
+                fail = LsnGapError(
                     f"batch [{log.start_lsn}, {log.next_lsn}) skips past "
                     f"expected LSN {expected} with no checkpoint to bridge"
                 )
@@ -688,17 +799,56 @@ class StreamReplica:
                 if log.start_lsn < expected:
                     log = log.slice_lsn(expected, log.next_lsn)
                 pending.append(log)
+                self._drain_held(pending, out)
             self.pos += 1
         _flush_pending()
         self.n_polls += 1
         out["applied_lsn"] = self.applied_lsn
         out["lag_frames"] = self.lag_frames()
-        if gap is not None:
+        if fail is not None:
             # raised only after the drained good prefix was applied and
             # with the cursor parked on the offending frame — the replica's
             # state is current through every contiguous batch it saw
-            raise gap
+            raise fail
         return out
+
+    def _hold(self, log: ChangeLog) -> bool:
+        """Park an ahead-of-watermark batch in the reorder holdback.
+
+        Returns ``False`` when the window is disabled or full (the caller
+        surfaces the gap).  A batch already held at the same start LSN is
+        absorbed as a duplicate.
+        """
+        if self.reorder_window <= 0:
+            return False
+        if log.start_lsn in self._held:
+            self.n_duplicates += 1
+            return True
+        if len(self._held) >= self.reorder_window:
+            return False
+        self._held[log.start_lsn] = log
+        return True
+
+    def _drain_held(self, pending: list[ChangeLog], out: dict) -> None:
+        """Splice held batches that now connect to the watermark."""
+        while self._held:
+            expected = self._expected_lsn(pending)
+            if expected is None:
+                return
+            lsn0 = min(self._held)
+            log = self._held[lsn0]
+            if log.start_lsn > expected:
+                return
+            del self._held[lsn0]
+            if log.next_lsn <= expected:
+                self.n_duplicates += 1
+                out["duplicates"] += 1
+                continue
+            if log.start_lsn < expected:
+                log = log.slice_lsn(expected, log.next_lsn)
+            pending.append(log)
+            self.n_reorder_heals += 1
+            out["reorder_heals"] += 1
 
     def _expected_lsn(self, pending: list[ChangeLog]) -> int | None:
         """Next LSN the stream must hand us (None before the origin)."""
@@ -786,9 +936,51 @@ class StreamReplica:
         self._genesis = None
         self.n_catchups += 1
 
+    def resync(self) -> bool:
+        """Advance the cursor to the next visible checkpoint frame.
+
+        The degradation-ladder escape hatch: when polling is stuck on a
+        position that keeps failing (persistent corruption, or a gap the
+        reorder window could not bridge because the frame was dropped
+        outright), the LSNs parked between the cursor and the next
+        checkpoint frame are unrecoverable from the wire — but the
+        checkpoint state covers them.  Scan forward from the cursor,
+        skipping undecodable frames, and park ON the first checkpoint
+        frame found; the next ``poll`` then either bootstraps from it
+        (watermark behind its ``base_lsn``) or skips it as stale and
+        resumes tailing, both byte-identical paths.  Any held-back
+        reordered batches are discarded (the checkpoint supersedes or
+        re-covers them).  Returns ``False`` when no checkpoint frame is
+        visible yet — the caller should back off and retry after the
+        primary's next checkpoint lands.
+        """
+        pos = max(self.pos, self.transport.first_pos())
+        while pos < self.transport.end():
+            try:
+                raw = self.transport.read(pos)
+            except FrameTruncated:
+                pos = max(pos + 1, self.transport.first_pos())
+                continue
+            if raw is None:
+                pos += 1  # delayed visibility: scan past, it may firm up
+                continue
+            try:
+                frame = decode_frame(raw)
+            except (FrameCorrupt, FrameSchemaError):
+                pos += 1
+                continue
+            if isinstance(frame, CheckpointFrame):
+                self.pos = pos
+                self._held.clear()
+                self.n_resyncs += 1
+                return True
+            pos += 1
+        return False
+
     @property
     def stats(self) -> dict:
-        """Consumer-side counters (applies, duplicates, catch-ups, lag)."""
+        """Consumer-side counters (applies, duplicates, catch-ups, lag,
+        fault-path health: rejected frames, reorder heals, resyncs)."""
         return {
             "applied_lsn": self.applied_lsn,
             "pos": self.pos,
@@ -800,4 +992,8 @@ class StreamReplica:
             "n_catchups": self.n_catchups,
             "n_truncation_jumps": self.n_truncation_jumps,
             "n_shed_adoptions": self.n_shed_adoptions,
+            "n_frames_rejected": self.n_frames_rejected,
+            "n_reorder_heals": self.n_reorder_heals,
+            "n_resyncs": self.n_resyncs,
+            "held_batches": len(self._held),
         }

@@ -31,7 +31,7 @@ import abc
 import os
 from pathlib import Path
 
-__all__ = ["Transport", "QueueTransport", "DirectoryTransport"]
+__all__ = ["Transport", "QueueTransport", "DirectoryTransport", "FrameTruncated"]
 
 
 class Transport(abc.ABC):
@@ -150,7 +150,13 @@ class DirectoryTransport(Transport):
         )
 
     def publish(self, frame: bytes) -> int:
-        """Append one frame (write temp file, fsync, atomic rename)."""
+        """Append one frame (write temp file, fsync, atomic rename).
+
+        After the rename the *directory* is fsynced too (best effort):
+        the file's data being durable is not enough — the rename itself
+        lives in the directory, and without the directory fsync a crash
+        can forget a frame a reader already observed as committed.
+        """
         pos = self.end() if self._next is None else self._next
         tmp = self.root / f".tmp_frame_{pos:010d}.bin"
         with open(tmp, "wb") as f:
@@ -158,8 +164,24 @@ class DirectoryTransport(Transport):
             f.flush()
             os.fsync(f.fileno())
         tmp.rename(self._path(pos))
+        self._fsync_dir()
         self._next = pos + 1
         return pos
+
+    def _fsync_dir(self) -> None:
+        # best effort: directories can't be fsynced on every platform
+        # (and O_RDONLY-on-dir is refused on some); durability of the
+        # rename is a hardening, not a protocol requirement
+        try:
+            fd = os.open(self.root, os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(fd)
+        except OSError:
+            pass
+        finally:
+            os.close(fd)
 
     def read(self, pos: int) -> bytes | None:
         """The frame at ``pos``, ``None`` if not yet published.
@@ -210,6 +232,10 @@ class DirectoryTransport(Transport):
             if i < pos:
                 self._path(i).unlink()
                 dropped += 1
-        # END records where numbering resumes if retention emptied the spool
-        (self.root / "END").write_text(str(end))
+        if dropped:
+            # END records where numbering resumes if retention emptied the
+            # spool; a no-op truncation leaves the marker alone (nothing
+            # moved, and rewriting it would churn the spool for no reason)
+            (self.root / "END").write_text(str(end))
+            self._fsync_dir()
         return dropped

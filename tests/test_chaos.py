@@ -1,0 +1,376 @@
+"""Chaos layer tests: fault injection, the supervisor ladder, soak runs.
+
+Three levels: (1) unit tests pin each injected fault of
+``FaultyTransport`` (deterministic per-fault plans) and each rung of the
+``ReplicaSupervisor`` degradation ladder (stub replica + fake clock, so
+multi-second backoff schedules run in microseconds); (2) integration
+tests drive real primaries/replicas through single fault families
+(reorder heal, read-corruption retry); (3) the fast soak runs the full
+``tools/chaos_soak.py`` harness — every fault family at once plus replica
+churn — and requires zero invariant violations on jnp and pallas.
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import plancache
+from repro.core.keyformat import KeySet
+from repro.replication import (
+    BatchFrame,
+    ChangeLog,
+    ChaosPlan,
+    FaultyTransport,
+    FrameCorrupt,
+    FrameTruncated,
+    LsnGapError,
+    QueueTransport,
+    ReplicaSupervisor,
+    StreamPrimary,
+    StreamReplica,
+    SupervisorPolicy,
+    encode_frame,
+)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+import chaos_soak  # noqa: E402
+
+
+def _keyset(rng, n, w=3):
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32)
+    words &= np.uint32(0x00FF0F0F)
+    return KeySet(words=words, lengths=np.full(n, w * 4, np.int32),
+                  rids=np.arange(n, dtype=np.uint32))
+
+
+def _assert_state_identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.keyset.words),
+                                  np.asarray(b.keyset.words))
+    np.testing.assert_array_equal(np.asarray(a.keyset.rids),
+                                  np.asarray(b.keyset.rids))
+    np.testing.assert_array_equal(a.meta.dbitmap, b.meta.dbitmap)
+    np.testing.assert_array_equal(
+        np.asarray(a.result.comp_sorted), np.asarray(b.result.comp_sorted))
+    np.testing.assert_array_equal(
+        np.asarray(a.result.rid_sorted), np.asarray(b.result.rid_sorted))
+    assert a.applied_lsn == b.applied_lsn
+
+
+# ---------------------------------------------------------------------------
+# ChaosPlan
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_plan_sampling_is_deterministic():
+    a, b = ChaosPlan.sample(7), ChaosPlan.sample(7)
+    assert a == b  # same seed, same plan, field for field
+    c = ChaosPlan.sample(8)
+    assert a != c
+    assert 0 <= a.p_drop_publish <= 0.08 and 0 <= a.p_corrupt <= 0.12
+    # intensity scales every probability
+    half = ChaosPlan.sample(7, intensity=0.5)
+    assert half.p_corrupt == pytest.approx(a.p_corrupt * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# FaultyTransport: one fault family at a time, deterministically
+# ---------------------------------------------------------------------------
+
+
+def test_faulty_drop_never_reaches_inner():
+    inner = QueueTransport()
+    t = FaultyTransport(inner, ChaosPlan(seed=1, p_drop_publish=1.0))
+    t.publish(b"gone")
+    assert inner.end() == 0
+    assert t.counts == {"drop": 1}
+    assert t.ledger[0]["fault"] == "drop"
+
+
+def test_faulty_duplicate_appends_twice():
+    inner = QueueTransport()
+    t = FaultyTransport(inner, ChaosPlan(seed=1, p_duplicate=1.0,
+                                         reorder_window=1))
+    t.publish(b"x")
+    assert inner.end() == 2
+    assert inner.read(0) == inner.read(1) == b"x"
+    assert t.counts["duplicate"] == 1
+
+
+def test_faulty_reorder_holds_and_permutes():
+    inner = QueueTransport()
+    t = FaultyTransport(inner, ChaosPlan(seed=3, p_reorder=1.0,
+                                         reorder_window=3))
+    for i in range(5):
+        t.publish(f"f{i}".encode())
+    t.flush()
+    assert inner.end() == 5  # nothing lost, possibly permuted
+    got = [inner.read(i) for i in range(5)]
+    assert sorted(got) == sorted(f"f{i}".encode() for i in range(5))
+    assert t.counts["hold"] >= 1
+
+
+def test_faulty_corruption_is_transient():
+    inner = QueueTransport()
+    t = FaultyTransport(inner, ChaosPlan(seed=2, p_corrupt=1.0,
+                                         corrupt_bits=2))
+    t.publish(b"pristine-bytes")
+    assert t.read(0) != b"pristine-bytes"  # damaged on this read...
+    t.enabled = False
+    assert t.read(0) == b"pristine-bytes"  # ...but never in storage
+    assert t.counts["corrupt"] >= 1
+
+
+def test_faulty_delay_and_spurious_truncation():
+    inner = QueueTransport()
+    t = FaultyTransport(inner, ChaosPlan(seed=4, p_delay=1.0))
+    t.publish(b"late")
+    assert t.read(0) is None  # visible only once the fault clears
+    t.enabled = False
+    assert t.read(0) == b"late"
+
+    t2 = FaultyTransport(QueueTransport(),
+                         ChaosPlan(seed=4, p_spurious_truncated=1.0))
+    t2.publish(b"fine")
+    with pytest.raises(FrameTruncated):
+        t2.read(0)
+    t2.enabled = False
+    assert t2.read(0) == b"fine"
+
+
+def test_faulty_scheduled_truncation_cuts_inner():
+    inner = QueueTransport()
+    t = FaultyTransport(inner, ChaosPlan(seed=1, truncate_at=((3, 1),)))
+    for i in range(4):
+        t.publish(f"f{i}".encode())
+    # at the 3rd publish, everything but the last retained frame was cut
+    assert inner.first_pos() == 1
+    assert t.counts["scheduled_truncate"] == 1
+    with pytest.raises(FrameTruncated):
+        t.read(0)
+
+
+def test_faulty_quiesce_flushes_and_disables():
+    inner = QueueTransport()
+    t = FaultyTransport(inner, ChaosPlan(seed=3, p_reorder=1.0, p_corrupt=1.0,
+                                         reorder_window=4))
+    t.publish(b"a")
+    t.publish(b"b")
+    assert inner.end() < 2  # at least one frame held in the window
+    t.quiesce()
+    assert inner.end() == 2  # window drained
+    assert t.read(0) == inner.read(0)  # no more read-side damage
+    assert t.publish(b"c") == 2  # publish-side faults off too
+    assert inner.read(2) == b"c"
+
+
+# ---------------------------------------------------------------------------
+# supervisor ladder (stub replica, fake clock/sleep: instant tests)
+# ---------------------------------------------------------------------------
+
+
+class _StubReplica:
+    """Scripted poll outcomes: exceptions raise, dicts return."""
+
+    def __init__(self, script, resync_ok=True):
+        self.script = list(script)
+        self.pos = 0
+        self.resync_ok = resync_ok
+        self.n_resyncs = 0
+
+    def poll(self, max_frames=None):
+        item = self.script.pop(0) if self.script else {"lag_frames": 0}
+        if isinstance(item, Exception):
+            raise item
+        return dict(item)
+
+    def resync(self):
+        self.n_resyncs += 1
+        return self.resync_ok
+
+
+class _FakeTime:
+    """A tick-per-call clock and a delay-recording sleep."""
+
+    def __init__(self):
+        self.now = 0.0
+        self.slept = []
+
+    def clock(self):
+        self.now += 1.0
+        return self.now
+
+    def sleep(self, s):
+        self.slept.append(round(s, 6))
+
+
+def _sup(script, policy=None, resync_ok=True):
+    ft = _FakeTime()
+    stub = _StubReplica(script, resync_ok=resync_ok)
+    return ReplicaSupervisor(stub, policy or SupervisorPolicy(),
+                             clock=ft.clock, sleep=ft.sleep), stub, ft
+
+
+def test_supervisor_rereads_transient_corruption_immediately():
+    sup, stub, ft = _sup([FrameCorrupt("flip"), {"lag_frames": 0}])
+    out = sup.pump()
+    assert out["recovered"] and out["state"] == "healthy"
+    assert sup.n_retries == {"corrupt": 1}
+    assert ft.slept == []  # the first retry is the free immediate re-read
+    assert stub.n_resyncs == 0
+    assert sup.time_degraded > 0  # the degraded interval was metered
+
+
+def test_supervisor_backoff_schedule_and_jitter():
+    pol = SupervisorPolicy(base_delay_s=0.05, factor=2.0,
+                           retries={"corrupt": 3})
+    sup, _, ft = _sup([FrameCorrupt("1"), FrameCorrupt("2"),
+                       FrameCorrupt("3"), {"lag_frames": 0}], policy=pol)
+    assert sup.pump()["recovered"]
+    assert ft.slept == [0.05, 0.1]  # retry 1 free, then exponential
+    # the jitter hook scales every delay
+    pol_j = SupervisorPolicy(base_delay_s=0.05, factor=2.0,
+                             retries={"corrupt": 3}, jitter=lambda: 2.0)
+    sup, _, ft = _sup([FrameCorrupt("1"), FrameCorrupt("2"),
+                       FrameCorrupt("3"), {"lag_frames": 0}], policy=pol_j)
+    sup.pump()
+    assert ft.slept == [0.1, 0.2]
+
+
+def test_supervisor_resync_after_budget_exhaustion():
+    # 4 corrupt failures: budget of 3 retries spent, the ladder climbs to
+    # resync, and the post-resync poll succeeds
+    sup, stub, _ = _sup([FrameCorrupt(str(i)) for i in range(4)]
+                        + [{"lag_frames": 0}])
+    out = sup.pump()
+    assert out["recovered"] and out["resyncs"] == 1
+    assert stub.n_resyncs == 1
+    assert sup.state == "healthy"
+
+
+def test_supervisor_waits_for_checkpoint_without_quarantining():
+    class _AlwaysGap(_StubReplica):
+        def poll(self, max_frames=None):
+            raise LsnGapError("dropped frame")
+
+    ft = _FakeTime()
+    sup = ReplicaSupervisor(_AlwaysGap([], resync_ok=False),
+                            clock=ft.clock, sleep=ft.sleep)
+    for _ in range(10):
+        out = sup.pump()
+        assert out["awaiting_checkpoint"] and out["state"] == "degraded"
+    # no checkpoint visible is NOT a quarantine streak: the laggard keeps
+    # waiting for the primary's next checkpoint instead of giving up
+    assert sup.state == "degraded" and sup.n_quarantines == 0
+
+
+def test_supervisor_quarantines_persistent_failure_then_resets():
+    class _AlwaysCorrupt(_StubReplica):
+        def poll(self, max_frames=None):
+            raise FrameCorrupt("stuck")
+
+    ft = _FakeTime()
+    stub = _AlwaysCorrupt([], resync_ok=True)
+    sup = ReplicaSupervisor(stub, SupervisorPolicy(quarantine_after=3),
+                            clock=ft.clock, sleep=ft.sleep)
+    states = [sup.pump()["state"] for _ in range(3)]
+    assert states == ["degraded", "degraded", "quarantined"]
+    assert sup.n_quarantines == 1
+    polls_before = stub.n_resyncs
+    out = sup.pump()  # short-circuits: the wire is not touched
+    assert out == {"state": "quarantined", "pumped": False,
+                   "recovered": False}
+    assert stub.n_resyncs == polls_before
+    assert sup.stats()["state"] == "quarantined"
+    sup.reset()  # operator re-arm: counters kept, gate cleared
+    assert sup.state == "healthy" and sup.n_quarantines == 1
+    assert sup.pump()["state"] == "degraded"  # pumping again
+
+
+# ---------------------------------------------------------------------------
+# integration: single fault families against real streams
+# ---------------------------------------------------------------------------
+
+
+def test_reorder_window_heals_swapped_frames(rng):
+    base = _keyset(rng, 400)
+    t = QueueTransport()
+    prim = StreamPrimary(t, base)
+    tolerant = StreamReplica(t, reorder_window=4)
+    strict = StreamReplica(t)  # default window 0: the PR-4 behavior
+    tolerant.poll()
+    strict.poll()
+    l1 = ChangeLog(3, start_lsn=prim.next_lsn)
+    l1.append_inserts(np.asarray(base.words)[:8], np.arange(8, dtype=np.uint32) + 7000)
+    l2 = ChangeLog(3, start_lsn=l1.next_lsn)
+    l2.append_deletes(np.asarray(base.rids)[:5])
+    # the wire delivers them swapped
+    t.publish(encode_frame(BatchFrame(log=l2, bucket=plancache.bucket(len(l2))), seq=98))
+    t.publish(encode_frame(BatchFrame(log=l1, bucket=plancache.bucket(len(l1))), seq=99))
+    prim.replica.apply(l1)
+    prim.replica.apply(l2)
+    st = tolerant.poll()
+    assert st["reorder_heals"] == 1 and st["applied_batches"] == 2
+    assert tolerant.stats["held_batches"] == 0
+    _assert_state_identical(tolerant.replica, prim.replica)
+    with pytest.raises(LsnGapError):
+        strict.poll()  # a zero window still rejects the swap, as before
+
+
+def test_supervisor_heals_read_corruption_end_to_end(rng, tmp_path):
+    inner = QueueTransport()
+    wire = FaultyTransport(inner, ChaosPlan(seed=5, p_corrupt=0.5,
+                                            corrupt_bits=3))
+    prim = StreamPrimary(wire, _keyset(rng, 400),
+                         ckpt_dir=str(tmp_path / "ckpt"), max_lag_batches=4)
+    rep = StreamReplica(wire, reorder_window=4)
+    sup = ReplicaSupervisor(rep, sleep=lambda s: None)
+    for i in range(5):
+        log = ChangeLog(3, start_lsn=prim.next_lsn)
+        log.append_inserts(np.asarray(prim.replica.keyset.words)[:6],
+                           np.arange(6, dtype=np.uint32) + 9000 + 100 * i)
+        prim.publish(log)
+        sup.pump()
+    wire.quiesce()
+    prim.flush()
+    prim.checkpoint()
+    for _ in range(20):
+        out = sup.pump()
+        if "error_class" not in out and out.get("lag_frames", 1) == 0:
+            break
+    assert sup.state == "healthy"
+    assert wire.counts.get("corrupt", 0) >= 1  # the wire really was hostile
+    assert sup.n_retries.get("corrupt", 0) >= 1  # and the ladder was used
+    _assert_state_identical(rep.replica, prim.replica)
+
+
+# ---------------------------------------------------------------------------
+# the soak harness itself (fast mode)
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_soak_fast_queue_and_dir(tmp_path):
+    for seed, kind in [(0, "queue"), (1, "queue"), (2, "dir")]:
+        rep = chaos_soak.run_soak(seed, kind, "jnp",
+                                  str(tmp_path / f"{kind}{seed}"),
+                                  steps=8, n_replicas=2)
+        assert rep["violations"] == [], rep
+        assert rep["steady_traces"] == 0
+        assert rep["survivors"] == 2
+
+
+def test_chaos_soak_fast_pallas(tmp_path):
+    rep = chaos_soak.run_soak(0, "queue", "pallas", str(tmp_path),
+                              steps=6, n_replicas=2)
+    assert rep["violations"] == [], rep
+
+
+def test_chaos_soak_seed_parsing_and_cli(tmp_path, capsys):
+    assert chaos_soak._parse_seeds("0-3") == [0, 1, 2, 3]
+    assert chaos_soak._parse_seeds("1,4,7") == [1, 4, 7]
+    assert chaos_soak._parse_seeds("0-1,5") == [0, 1, 5]
+    rc = chaos_soak.main(["--seeds", "0", "--transports", "queue",
+                          "--fast", "--steps", "6"])
+    captured = capsys.readouterr()
+    assert rc == 0 and "1 runs, 0 failing" in captured.out

@@ -29,6 +29,9 @@ SURFACE = [
     SRC / "replication" / "replica.py",
     SRC / "replication" / "stream.py",
     SRC / "replication" / "transport.py",
+    SRC / "replication" / "wire.py",
+    SRC / "replication" / "chaos.py",
+    SRC / "replication" / "supervisor.py",
     SRC / "ckpt" / "checkpoint.py",
 ]
 

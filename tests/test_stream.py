@@ -180,6 +180,120 @@ def test_changelog_slice_and_concat(rng):
 
 
 # ---------------------------------------------------------------------------
+# wire integrity: CRC header, typed decode failures, legacy fallback
+# ---------------------------------------------------------------------------
+
+
+def _sample_frame(rng) -> bytes:
+    log = ChangeLog(2, start_lsn=3)
+    log.append_inserts(rng.integers(0, 2**32, size=(4, 2), dtype=np.uint32),
+                       np.arange(4, dtype=np.uint32))
+    return encode_frame(BatchFrame(log=log, bucket=plancache.bucket(4)), seq=7)
+
+
+def test_wire_crc32c_known_vector():
+    """The checksum is real CRC32C (Castagnoli): the standard check value."""
+    from repro.replication.wire import crc32c
+
+    assert crc32c(b"123456789") == 0xE3069283
+    assert crc32c(b"") == 0
+
+
+def test_wire_header_carries_kind_and_seq(rng):
+    from repro.replication import peek_header
+    from repro.replication.wire import HEADER_SIZE
+
+    raw = _sample_frame(rng)
+    hdr = peek_header(raw)
+    assert hdr.version == 1 and hdr.kind == 1 and hdr.seq == 7
+    assert hdr.payload_len == len(raw) - HEADER_SIZE
+    # legacy (headerless) payloads peek as None instead of exploding
+    assert peek_header(raw[HEADER_SIZE:]) is None
+
+
+def test_decode_rejects_bit_flips_as_frame_corrupt(rng):
+    from repro.replication import FrameCorrupt
+
+    raw = _sample_frame(rng)
+    for flip_at in (5, len(raw) // 2, len(raw) - 1):
+        damaged = bytearray(raw)
+        damaged[flip_at] ^= 0x10
+        with pytest.raises(FrameCorrupt):
+            decode_frame(bytes(damaged))
+
+
+def test_decode_rejects_truncation_and_padding(rng):
+    from repro.replication import FrameCorrupt
+    from repro.replication.wire import HEADER_SIZE
+
+    raw = _sample_frame(rng)
+    with pytest.raises(FrameCorrupt):
+        decode_frame(raw[: HEADER_SIZE - 4])  # shorter than the header
+    with pytest.raises(FrameCorrupt):
+        decode_frame(raw[:-3])  # payload shorter than the header claims
+    with pytest.raises(FrameCorrupt):
+        decode_frame(raw + b"\x00\x00")  # padded past the claimed length
+
+
+def test_decode_rejects_malformed_payloads_as_schema_errors(rng):
+    import io
+
+    from repro.replication import FrameSchemaError
+    from repro.replication.wire import pack_frame, unpack_frame
+
+    # unknown wire version (checked before the CRC would also fail it)
+    bad = bytearray(_sample_frame(rng))
+    bad[4] = 99  # the version byte sits right after the 4-byte magic
+    with pytest.raises(FrameSchemaError):
+        unpack_frame(bytes(bad))
+    # unknown frame-kind tag (intact CRC, nonsense kind)
+    with pytest.raises(FrameSchemaError):
+        decode_frame(pack_frame(99, b"not-checked-yet"))
+    # intact frame whose payload is not an npz archive
+    with pytest.raises(FrameSchemaError):
+        decode_frame(pack_frame(1, b"definitely not a zip"))
+    # a valid npz missing the frame_kind discriminator
+    buf = io.BytesIO()
+    np.savez(buf, unrelated=np.arange(3))
+    with pytest.raises(FrameSchemaError):
+        decode_frame(pack_frame(1, buf.getvalue()))
+    # header kind disagreeing with the payload's own kind string
+    _, payload = unpack_frame(_sample_frame(rng))
+    with pytest.raises(FrameSchemaError):
+        decode_frame(pack_frame(2, payload))  # batch payload, shed tag
+    # a batch frame with its log columns stripped
+    buf = io.BytesIO()
+    np.savez(buf, frame_kind=np.asarray("batch"))
+    with pytest.raises(FrameSchemaError):
+        decode_frame(pack_frame(1, buf.getvalue()))
+    # legacy payload that is not an npz at all
+    with pytest.raises(FrameSchemaError):
+        decode_frame(b"ZZZZ this is no frame of any version")
+
+
+def test_decode_legacy_v0_frames_still_works(rng):
+    """Pre-header spools (PR-4 raw-npz frames) decode via the fallback."""
+    from repro.replication.wire import HEADER_SIZE
+
+    raw = _sample_frame(rng)
+    legacy = raw[HEADER_SIZE:]  # exactly what v0 published: the bare npz
+    f = decode_frame(legacy)
+    assert isinstance(f, BatchFrame) and f.lsn0 == 3 and len(f.log) == 4
+
+
+def test_primary_stamps_monotonic_wire_seq(rng):
+    from repro.replication import peek_header
+
+    t = QueueTransport()
+    prim = StreamPrimary(t, _keyset(rng, 200))
+    for _ in range(3):
+        prim.publish(_random_batch(rng, prim, n_ins=5, n_del=0))
+    seqs = [peek_header(t.read(i)).seq for i in range(t.end())]
+    assert seqs == list(range(t.end()))  # dense, monotonic, no reuse
+    assert prim.stats["wire_seq"] == t.end()
+
+
+# ---------------------------------------------------------------------------
 # the acceptance contract: stream-only replica == full run (jnp + pallas),
 # including one forced checkpoint catch-up
 # ---------------------------------------------------------------------------

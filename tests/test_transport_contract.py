@@ -1,0 +1,162 @@
+"""The transport contract, enforced uniformly across every realization.
+
+Every :class:`~repro.replication.transport.Transport` must honor the same
+observable semantics — dense never-reused positions, ``None`` past the
+end, :class:`FrameTruncated` below ``first_pos``, retention that keeps
+numbering — because the stream protocol's correctness proofs quantify
+over *any* conforming transport.  This suite runs the contract against
+``QueueTransport``, ``DirectoryTransport``, and a zero-fault
+``FaultyTransport`` (the chaos wrapper must be a transparent conformer
+when its plan injects nothing — otherwise soak results under faults say
+nothing about the protocol).
+"""
+
+import pytest
+
+from repro.replication import (
+    DirectoryTransport,
+    FaultyTransport,
+    FrameTruncated,
+    QueueTransport,
+)
+
+KINDS = ["queue", "dir", "faulty-zero"]
+
+
+def make_transport(kind: str, tmp_path):
+    """A fresh transport of the requested kind rooted under ``tmp_path``."""
+    if kind == "queue":
+        return QueueTransport()
+    if kind == "dir":
+        return DirectoryTransport(tmp_path / "spool")
+    if kind == "faulty-zero":
+        # a zero-fault plan: the wrapper must be a transparent pass-through
+        return FaultyTransport(QueueTransport())
+    raise ValueError(kind)
+
+
+@pytest.fixture(params=KINDS)
+def transport(request, tmp_path):
+    return make_transport(request.param, tmp_path)
+
+
+def test_empty_transport(transport):
+    assert transport.first_pos() == transport.end() == 0
+    assert transport.read(0) is None
+    assert len(transport) == 0
+
+
+def test_publish_assigns_dense_positions(transport):
+    for i in range(6):
+        assert transport.publish(f"f{i}".encode()) == i
+    assert transport.end() == 6
+    for i in range(6):
+        assert transport.read(i) == f"f{i}".encode()
+    assert transport.read(6) is None  # past the end: wait, not an error
+
+
+def test_frames_are_copied_not_aliased(transport):
+    buf = bytearray(b"mutable")
+    transport.publish(bytes(buf))
+    buf[0] = ord("X")
+    assert transport.read(0) == b"mutable"
+
+
+def test_truncation_semantics(transport):
+    for i in range(5):
+        transport.publish(f"f{i}".encode())
+    assert transport.truncate_before(3) == 3
+    assert transport.first_pos() == 3 and transport.end() == 5
+    assert len(transport) == 2
+    with pytest.raises(FrameTruncated):
+        transport.read(0)
+    with pytest.raises(FrameTruncated):
+        transport.read(2)
+    assert transport.read(3) == b"f3"
+    # truncating at or below first_pos is a no-op, not an error
+    assert transport.truncate_before(3) == 0
+    assert transport.truncate_before(0) == 0
+    assert transport.first_pos() == 3
+
+
+def test_positions_never_reused(transport):
+    for i in range(4):
+        transport.publish(f"f{i}".encode())
+    transport.truncate_before(4)  # empty the retained window entirely
+    assert transport.first_pos() == transport.end() == 4
+    assert transport.publish(b"next") == 4  # numbering continues
+    transport.truncate_before(5)
+    assert transport.publish(b"again") == 5
+
+
+def test_interleaved_publish_truncate_read(transport):
+    pos = []
+    for i in range(3):
+        pos.append(transport.publish(f"a{i}".encode()))
+    transport.truncate_before(2)
+    pos.append(transport.publish(b"b"))
+    assert pos == [0, 1, 2, 3]
+    assert transport.read(2) == b"a2" and transport.read(3) == b"b"
+    with pytest.raises(FrameTruncated):
+        transport.read(1)
+
+
+@pytest.mark.parametrize("kind", ["dir"])
+def test_restart_recovers_position_state(tmp_path, kind):
+    """A re-opened durable transport resumes numbering and retention."""
+    t = make_transport(kind, tmp_path)
+    for i in range(4):
+        t.publish(f"f{i}".encode())
+    t.truncate_before(2)
+    # a brand-new instance over the same spool sees the same stream
+    t2 = make_transport(kind, tmp_path)
+    assert t2.first_pos() == 2 and t2.end() == 4
+    assert t2.read(3) == b"f3"
+    with pytest.raises(FrameTruncated):
+        t2.read(1)
+    assert t2.publish(b"f4") == 4
+
+
+@pytest.mark.parametrize("kind", ["dir"])
+def test_restart_after_full_truncation(tmp_path, kind):
+    """END marker semantics: an emptied spool still resumes numbering."""
+    t = make_transport(kind, tmp_path)
+    for i in range(3):
+        t.publish(f"f{i}".encode())
+    t.truncate_before(3)
+    t2 = make_transport(kind, tmp_path)
+    assert t2.first_pos() == t2.end() == 3
+    assert t2.publish(b"f3") == 3
+
+
+def test_torn_frame_invisible(tmp_path):
+    """A crashed mid-write publisher leaves no readable partial frame."""
+    t = DirectoryTransport(tmp_path / "spool")
+    t.publish(b"ok")
+    (tmp_path / "spool" / ".tmp_frame_0000000001.bin").write_bytes(b"torn")
+    assert t.end() == 1
+    assert t.read(1) is None
+
+
+def test_noop_truncation_skips_end_marker(tmp_path):
+    """A truncation that drops nothing must not churn the spool: the END
+    marker is written only when frames were actually removed."""
+    t = DirectoryTransport(tmp_path / "spool")
+    t.publish(b"a")
+    t.publish(b"b")
+    assert t.truncate_before(0) == 0
+    assert not (tmp_path / "spool" / "END").exists()
+    assert t.truncate_before(1) == 1
+    assert (tmp_path / "spool" / "END").exists()
+
+
+def test_zero_fault_wrapper_records_nothing(tmp_path):
+    """Transparency is checkable: the pass-through plan injects zero
+    faults, so the ledger stays empty across a full publish/read cycle."""
+    t = make_transport("faulty-zero", tmp_path)
+    for i in range(8):
+        t.publish(f"f{i}".encode())
+    for i in range(8):
+        assert t.read(i) == f"f{i}".encode()
+    t.truncate_before(4)
+    assert t.ledger == [] and t.counts == {}
