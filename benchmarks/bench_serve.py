@@ -1,0 +1,116 @@
+"""p99-under-load: concurrent readers racing live incremental rebuilds.
+
+The serving claim measured the way Lemire & Kaser measure theirs —
+sustained load, not single-shot timings.  Each row is one closed-loop
+``repro.serve.loadgen.run_load``: ``n_readers`` threads hammer batched
+lookups through a shared ``SnapshotCell`` while the writer folds
+``mutation_batch``-key churn through ``run_incremental(publish_to=cell)``
+flat out, on the jnp and pallas backends across a readers × mutation-rate
+grid.  Every response is byte-verified against its pinned epoch's oracle;
+a row with a torn read, a stale epoch, or a warm retrace is a **failed
+benchmark**, not a data point.
+
+The committed ``BENCH_serve.json`` is the CI baseline.  The gate is
+machine-neutral: it compares ``tail_ratio = p99_us / unloaded_p50_us``
+(loaded tail over the same run's single-thread median — both move with
+the machine) rather than absolute latency.
+
+Rerun:  python -m benchmarks.run --only serve --json BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+from .common import emit
+
+#: (n_readers, mutation_batch) grid per backend; the last row of each
+#: backend is the acceptance point (>= 8 readers, live rebuilds)
+GRID = ((2, 64), (4, 64), (8, 64), (8, 256))
+
+
+def run(
+    *,
+    n_keys: int = 16384,
+    duration_s: float = 3.0,
+    backends=("jnp", "pallas"),
+    grid=GRID,
+    with_admission: bool = True,
+) -> list[dict]:
+    """Sweep the readers × mutation-rate grid; returns JSON-ready rows.
+
+    Each row carries p50/p90/p99 (µs), the unloaded single-thread p50
+    baseline measured in the same process, the machine-neutral
+    ``tail_ratio``, throughput, epochs published during the window, and
+    the verification counters (asserted zero here, gated again in CI).
+    ``with_admission`` appends one row driven at an impossible feed rate
+    under ``max_lag_epochs=1`` to demonstrate (and regression-gate) read
+    shedding.
+    """
+    from repro.serve.loadgen import run_load
+
+    rows: list[dict] = []
+    for backend in backends:
+        for n_readers, mutation_batch in grid:
+            rep = run_load(
+                backend=backend,
+                n_keys=n_keys,
+                n_words=2,
+                batch=256,
+                n_readers=n_readers,
+                duration_s=duration_s,
+                mutation_batch=mutation_batch,
+                seed=0,
+            )
+            assert rep.errors == [], rep.errors
+            assert rep.torn_reads == 0, f"torn reads on {backend}"
+            assert rep.stale_epochs == 0, f"stale epochs on {backend}"
+            assert rep.warm_traces == 0, f"retraced while warm on {backend}"
+            row = {
+                "backend": backend,
+                "mutation_batch": mutation_batch,
+                "tail_ratio": rep.p99_us / max(rep.unloaded_p50_us, 1e-9),
+                "admission": None,
+                **rep.to_row(),
+            }
+            rows.append(row)
+            emit(
+                f"serve_{backend}_r{n_readers}_m{mutation_batch}_p99",
+                rep.p99_us / 1e6,
+                f"p50={rep.p50_us:.0f}us tail_ratio={row['tail_ratio']:.1f} "
+                f"epochs={rep.epochs_published}",
+            )
+        if with_admission:
+            rep = run_load(
+                backend=backend,
+                n_keys=n_keys,
+                n_words=2,
+                batch=256,
+                n_readers=4,
+                duration_s=duration_s,
+                mutation_batch=64,
+                target_mutation_period_s=0.001,
+                max_lag_epochs=1,
+                admission="shed",
+                seed=0,
+            )
+            assert rep.errors == [], rep.errors
+            assert rep.torn_reads == 0 and rep.stale_epochs == 0
+            assert rep.n_shed > 0, "admission row must actually shed"
+            row = {
+                "backend": backend,
+                "mutation_batch": 64,
+                "tail_ratio": rep.p99_us / max(rep.unloaded_p50_us, 1e-9),
+                "admission": {"max_lag_epochs": 1, "policy": "shed"},
+                **rep.to_row(),
+            }
+            rows.append(row)
+            emit(
+                f"serve_{backend}_admission_shed",
+                rep.p99_us / 1e6,
+                f"sheds={rep.n_shed} served={rep.n_requests}",
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

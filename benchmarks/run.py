@@ -18,8 +18,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: pipeline,incremental,build,lookup,"
-                         "stream,scale,table1,table2,table3,table4,table5,"
-                         "table6,apps")
+                         "stream,serve,scale,table1,table2,table3,table4,"
+                         "table5,table6,apps")
     ap.add_argument("--fast", action="store_true", help="smaller datasets")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write structured suite results (timings per stage "
@@ -38,6 +38,7 @@ def main() -> None:
         bench_pipeline,
         bench_replication_stream,
         bench_scale,
+        bench_serve,
         bench_sort_comparison,
         bench_zipf_sensitivity,
     )
@@ -59,6 +60,11 @@ def main() -> None:
             n_base=4096 if args.fast else 16384,
             batch_sizes=(64, 256) if args.fast else (64, 256, 1024),
             n_batches=4 if args.fast else 8,
+        ),
+        "serve": lambda: bench_serve.run(
+            n_keys=8192 if args.fast else 16384,
+            duration_s=1.5 if args.fast else 3.0,
+            grid=((2, 64), (8, 64)) if args.fast else bench_serve.GRID,
         ),
         "scale": lambda: bench_scale.run(
             sizes=(65536, 262144) if args.fast else bench_scale.DEFAULT_SIZES,

@@ -61,6 +61,7 @@ the thrash signature of a bound set below the working set — doubling
 from __future__ import annotations
 
 import math
+import threading
 import time
 import warnings
 from contextlib import contextmanager
@@ -164,6 +165,16 @@ class PlanCache:
     doubles, capped at ``auto_size_cap``.  ``resizes`` counts the growth
     events (not part of :meth:`stats` — the zero-retrace assertions diff
     that dict exactly).
+
+    The cache is thread-safe: lookups, inserts, LRU maintenance and
+    every counter run under one re-entrant mutex, so N serving threads
+    replaying warm programs concurrently with a rebuilding writer see
+    exact ``hits``/``misses``/``traces`` counts (the concurrent
+    zero-retrace assertions depend on that) and a racing cold miss
+    builds each program exactly once — both racers get the *same*
+    jitted callable, and JAX's own dispatch locking makes its first
+    trace single-shot.  The compile itself (the first call of the
+    returned program) happens outside the mutex.
     """
 
     programs: dict = field(default_factory=dict)
@@ -180,6 +191,7 @@ class PlanCache:
     _win_lookups: int = 0
     _win_hits: int = 0
     _win_evictions: int = 0
+    _lock: threading.RLock = field(default_factory=threading.RLock, repr=False)
 
     def __post_init__(self) -> None:
         if self.max_programs is not None and int(self.max_programs) < 1:
@@ -188,30 +200,35 @@ class PlanCache:
             )
 
     def program(self, key: tuple, builder: Callable[[], Callable]) -> Callable:
-        """The compiled program for ``key``, building it on first use."""
-        self._win_lookups += 1
-        prog = self.programs.get(key)
-        if prog is not None:
-            self.hits += 1
-            self._win_hits += 1
+        """The compiled program for ``key``, building it on first use.
+
+        Atomic under the cache mutex: concurrent lookups of the same
+        cold key build it once and share the callable (``builder`` is
+        cheap — it wraps, it does not compile)."""
+        with self._lock:
+            self._win_lookups += 1
+            prog = self.programs.get(key)
+            if prog is not None:
+                self.hits += 1
+                self._win_hits += 1
+                if self.max_programs is not None:
+                    # refresh recency: dicts iterate in insertion order, so
+                    # re-inserting makes the oldest entry the LRU victim
+                    del self.programs[key]
+                    self.programs[key] = prog
+                self._maybe_grow()
+                return prog
+            self.misses += 1
+            prog = builder()
+            self.programs[key] = prog
             if self.max_programs is not None:
-                # refresh recency: dicts iterate in insertion order, so
-                # re-inserting makes the oldest entry the LRU victim
-                del self.programs[key]
-                self.programs[key] = prog
+                while len(self.programs) > int(self.max_programs):
+                    victim = next(iter(self.programs))
+                    del self.programs[victim]
+                    self.evictions += 1
+                    self._win_evictions += 1
             self._maybe_grow()
             return prog
-        self.misses += 1
-        prog = builder()
-        self.programs[key] = prog
-        if self.max_programs is not None:
-            while len(self.programs) > int(self.max_programs):
-                victim = next(iter(self.programs))
-                del self.programs[victim]
-                self.evictions += 1
-                self._win_evictions += 1
-        self._maybe_grow()
-        return prog
 
     def _maybe_grow(self) -> None:
         """Close an auto-size window and grow the bound on thrash."""
@@ -232,7 +249,8 @@ class PlanCache:
         while JAX traces, so ``traces`` counts compilations, not calls."""
 
         def traced(*args, **kwargs):
-            self.traces += 1
+            with self._lock:  # exact trace counts under concurrent tracing
+                self.traces += 1
             return fn(*args, **kwargs)
 
         jitted = jax.jit(traced, **jit_kwargs)
@@ -259,22 +277,24 @@ class PlanCache:
         (cache lookups), ``traces`` (actual JAX tracings — the number that
         must stay flat across a warm same-bucket call), ``evictions``
         (LRU victims) and the configured ``max_programs`` bound."""
-        return {
-            "programs": len(self.programs),
-            "hits": self.hits,
-            "misses": self.misses,
-            "traces": self.traces,
-            "evictions": self.evictions,
-            "max_programs": self.max_programs,
-        }
+        with self._lock:
+            return {
+                "programs": len(self.programs),
+                "hits": self.hits,
+                "misses": self.misses,
+                "traces": self.traces,
+                "evictions": self.evictions,
+                "max_programs": self.max_programs,
+            }
 
     def reset(self) -> None:
         """Drop every cached program and zero the counters (tests); the
         ``max_programs`` bound and auto-size configuration survive."""
-        self.programs.clear()
-        self.hits = self.misses = self.traces = self.evictions = 0
-        self.resizes = 0
-        self._win_lookups = self._win_hits = self._win_evictions = 0
+        with self._lock:
+            self.programs.clear()
+            self.hits = self.misses = self.traces = self.evictions = 0
+            self.resizes = 0
+            self._win_lookups = self._win_hits = self._win_evictions = 0
 
 
 _GLOBAL = PlanCache()
@@ -322,7 +342,9 @@ def scoped_cache(cache: PlanCache | None = None):
     this scope so their probe programs neither pollute the serving cache
     nor pre-compile the programs a cold-path benchmark is about to time.
     The cached pad constants (``_CONSTS``) stay shared — they are
-    immutable device values, not compiled programs."""
+    immutable device values, not compiled programs.  The swap is a
+    process-global rebind: run calibration before starting serving
+    threads, not concurrently with them."""
     global _GLOBAL
     prev, _GLOBAL = _GLOBAL, (cache if cache is not None else PlanCache())
     try:

@@ -1,1 +1,1 @@
-from . import engine, pager  # noqa: F401
+from . import engine, loadgen, pager  # noqa: F401

@@ -28,12 +28,22 @@ class ServeEngine:
     max_seq: int
     batch_size: int
     page_tokens: int = 128
+    #: concurrent-serving knobs, forwarded to the pager: serve page gets
+    #: from the current published epoch while the journal is dirty
+    #: (required when lookups run on reader threads), and optionally bound
+    #: rebuild lag with admission control (see PagedKVManager)
+    read_through_dirty: bool = False
+    max_lag_epochs: int | None = None
+    admission: str = "shed"
 
     def __post_init__(self):
         cfg = self.model.cfg
         self.pager = PagedKVManager(
             n_pages=self.batch_size * (-(-self.max_seq // self.page_tokens)) * 2,
             page_tokens=self.page_tokens,
+            read_through_dirty=self.read_through_dirty,
+            max_lag_epochs=self.max_lag_epochs,
+            admission=self.admission,
         )
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step)

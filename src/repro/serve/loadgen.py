@@ -1,0 +1,581 @@
+"""Closed-loop concurrent serving load generator (reads racing rebuilds).
+
+The snapshot protocol promises that lookups stay servable — torn-free
+and epoch-exact — while the index is being rebuilt underneath them.
+This module is the harness that *measures* that promise instead of
+assuming it: N reader threads issue batched lookups through a shared
+:class:`repro.core.snapshot.SnapshotCell` in a closed loop (each thread
+fires its next request the moment the previous one completes — the
+classic closed-loop load model, so offered load tracks service capacity
+instead of overrunning it), while one writer thread drives
+``ReconstructionPipeline.run_incremental(publish_to=cell)`` at a
+configurable mutation rate.  Every response is verified, not just
+timed:
+
+* **torn-read check** — the ``(found, rid)`` batch is byte-compared
+  against the *pinned epoch's* oracle (the host-side truth registered
+  for that epoch before it was published).  Churned keys re-enter each
+  epoch with rids that encode the epoch number, so a single stale or
+  mixed lane flips the comparison.
+* **stale-epoch check** — the epoch a request pinned must be at least
+  the cell epoch observed just before its ``acquire``: a reader can
+  race a publish forward, never backward.
+
+Per-request wall latencies land in fixed-size :class:`LatencyReservoir`
+samplers (one per thread — no shared-state contention on the hot path)
+and the report aggregates p50/p90/p99, throughput, admission-control
+counters (sheds / parks under the ``max_lag_epochs`` bound, see
+``repro.core.snapshot``), exact cell counters, and the plan-cache trace
+delta — warm concurrent serving must stay at **zero retraces**.
+
+The same closed loop also runs against the serving page table:
+:func:`run_pager_load` hammers ``PagedKVManager.lookup_batch`` (the op
+behind ``ServeEngine.lookup_page``) from N threads while a writer
+allocs/frees pages and folds the journal through ``rebuild_index``.
+
+``benchmarks/bench_serve.py`` sweeps the (readers × mutation-rate)
+grid on the jnp and pallas backends and gates p99-under-load in CI;
+``tests/test_concurrent_snapshot.py`` runs the short and soak forms.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import plancache
+from repro.core.keyformat import KeySet
+from repro.core.pipeline import ReconstructionPipeline
+from repro.core.snapshot import AdmissionShed, SnapshotCell
+
+__all__ = [
+    "LatencyReservoir",
+    "ReaderReport",
+    "LoadReport",
+    "run_load",
+    "run_pager_load",
+]
+
+
+class LatencyReservoir:
+    """Fixed-size uniform sample of a latency stream (Vitter's algorithm R).
+
+    A closed-loop run at serving rates produces far more requests than a
+    benchmark should hold in memory; the reservoir keeps a seeded,
+    uniformly drawn ``capacity``-sized subset with O(1) per record, so
+    percentiles over the sample converge on the stream's.  Single-owner:
+    each reader thread records into its own reservoir and the report
+    merges the samples afterwards.
+    """
+
+    def __init__(self, capacity: int = 4096, seed: int = 0) -> None:
+        self.capacity = int(capacity)
+        self._buf = np.zeros(self.capacity, np.float64)
+        self.n_seen = 0
+        self._rng = np.random.default_rng(seed)
+
+    def record(self, value: float) -> None:
+        """Offer one observation (reservoir-samples past capacity)."""
+        i = self.n_seen
+        self.n_seen += 1
+        if i < self.capacity:
+            self._buf[i] = value
+            return
+        j = int(self._rng.integers(0, i + 1))
+        if j < self.capacity:
+            self._buf[j] = value
+
+    def samples(self) -> np.ndarray:
+        """The retained sample (a copy, at most ``capacity`` long)."""
+        return self._buf[: min(self.n_seen, self.capacity)].copy()
+
+
+def _percentiles(samples: np.ndarray, ps=(50, 90, 99)) -> dict[str, float]:
+    """p50/p90/p99 (µs) of a pooled sample array (zeros when empty)."""
+    if samples.size == 0:
+        return {f"p{p}_us": 0.0 for p in ps}
+    return {f"p{p}_us": float(np.percentile(samples, p)) for p in ps}
+
+
+@dataclass
+class ReaderReport:
+    """One reader thread's closed-loop tally (verified, not just timed)."""
+
+    n_requests: int = 0
+    n_shed: int = 0
+    torn_reads: int = 0
+    stale_epochs: int = 0
+    min_epoch: int | None = None
+    max_epoch: int | None = None
+    errors: list = field(default_factory=list)
+    reservoir: LatencyReservoir = field(default_factory=LatencyReservoir)
+
+    def saw_epoch(self, epoch: int) -> None:
+        """Track the epoch span this reader actually served from."""
+        if self.min_epoch is None or epoch < self.min_epoch:
+            self.min_epoch = epoch
+        if self.max_epoch is None or epoch > self.max_epoch:
+            self.max_epoch = epoch
+
+
+@dataclass
+class LoadReport:
+    """Aggregated result of one closed-loop run (see :func:`run_load`)."""
+
+    n_readers: int
+    duration_s: float
+    batch: int
+    n_requests: int
+    n_shed: int
+    torn_reads: int
+    stale_epochs: int
+    epochs_published: int
+    warm_traces: int
+    lookups_per_s: float
+    p50_us: float
+    p90_us: float
+    p99_us: float
+    unloaded_p50_us: float
+    cell_stats: dict
+    readers: list[ReaderReport]
+    errors: list
+
+    def to_row(self) -> dict:
+        """Flat JSON-ready dict (benchmark row / CI gate input)."""
+        return {
+            "n_readers": self.n_readers,
+            "duration_s": self.duration_s,
+            "batch": self.batch,
+            "n_requests": self.n_requests,
+            "n_shed": self.n_shed,
+            "torn_reads": self.torn_reads,
+            "stale_epochs": self.stale_epochs,
+            "epochs_published": self.epochs_published,
+            "warm_traces": self.warm_traces,
+            "lookups_per_s": self.lookups_per_s,
+            "p50_us": self.p50_us,
+            "p90_us": self.p90_us,
+            "p99_us": self.p99_us,
+            "unloaded_p50_us": self.unloaded_p50_us,
+            "max_concurrent_pins": self.cell_stats["max_concurrent_pins"],
+            "sheds": self.cell_stats["shed"],
+            "parked": self.cell_stats["parked"],
+            "retired_epochs": self.cell_stats["retired_epochs"],
+        }
+
+
+def _probe_keyset(rng, n_keys: int, n_words: int) -> KeySet:
+    """A masked-random keyset (realistic few-distinction-bit tables)."""
+    words = rng.integers(0, 2**32, size=(n_keys, n_words), dtype=np.uint32)
+    words &= np.uint32(0x00FF0F0F)
+    # dedupe: churn bookkeeping needs one rid per distinct key
+    words = np.unique(words, axis=0)
+    n = words.shape[0]
+    return KeySet(
+        words=words,
+        lengths=np.full(n, n_words * 4, np.int32),
+        rids=np.arange(n, dtype=np.uint32),
+    )
+
+
+def _expected_answers(
+    truth: dict, probe_keys: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """(found, rid) oracle for the probe batch under the host truth dict."""
+    q = probe_keys.shape[0]
+    found = np.zeros(q, bool)
+    rid = np.full(q, 0xFFFFFFFF, np.uint32)
+    for i in range(q):
+        r = truth.get(tuple(int(w) for w in probe_keys[i]))
+        if r is not None:
+            found[i] = True
+            rid[i] = r
+    return found, rid
+
+
+def run_load(
+    *,
+    backend: str = "jnp",
+    n_keys: int = 16384,
+    n_words: int = 2,
+    batch: int = 256,
+    n_readers: int = 8,
+    duration_s: float = 2.0,
+    mutation_batch: int = 64,
+    mutation_period_s: float = 0.0,
+    target_mutation_period_s: float | None = None,
+    max_lag_epochs: int | None = None,
+    admission: str = "shed",
+    park_timeout: float | None = 0.05,
+    seed: int = 0,
+    reservoir_capacity: int = 4096,
+    warmup_cycles: int = 1,
+) -> LoadReport:
+    """Closed-loop readers vs. a live incremental-rebuild writer.
+
+    Builds an ``n_keys`` index on ``backend``, publishes it into a
+    shared :class:`SnapshotCell`, then runs ``n_readers`` threads each
+    looping *acquire → batched lookup → verify → release* for
+    ``duration_s`` while the writer thread redraws ``mutation_batch``
+    keys per cycle (rids re-minted to encode the epoch) and folds them
+    through ``run_incremental(publish_to=cell)`` every
+    ``mutation_period_s`` seconds (0 = flat out).  Key population and
+    tree geometry stay constant, so after ``warmup_cycles`` the whole
+    run must replay cached programs — the report carries the exact
+    plan-cache trace delta.
+
+    ``max_lag_epochs``/``admission``/``park_timeout`` configure the
+    cell's admission control; ``target_mutation_period_s`` (default:
+    ``mutation_period_s``) is the feed rate the writer *owes* — its lag
+    report is how many owed cycles its rebuilds have fallen behind, so
+    a writer that cannot keep up trips the bound and sheds readers.
+
+    Every response is byte-checked against its pinned epoch's oracle
+    (torn reads) and its pinned epoch is checked against the epoch
+    observed before acquire (stale epochs); both counts must be zero on
+    a healthy protocol and the report carries them per reader.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.backends import get_backend
+
+    rng = np.random.default_rng(seed)
+    ks = _probe_keyset(rng, n_keys, n_words)
+    n = ks.n
+    pipe = ReconstructionPipeline(backend=backend)
+    backend_obj = get_backend(backend)
+    cell = SnapshotCell(
+        max_lag_epochs=max_lag_epochs,
+        admission=admission,
+        park_timeout=park_timeout,
+    )
+
+    # host truth: key tuple -> rid, mirrored by every publish's oracle
+    words_h = np.asarray(ks.words)
+    truth = {
+        tuple(int(w) for w in words_h[i]): int(ks.rids[i]) for i in range(n)
+    }
+
+    # probe batch: stable keys, churn-eligible keys, and guaranteed misses.
+    # Indices < churn_lo are never churned, so those probe lanes stay
+    # constant-rid hits; lanes in the churn window change rid per epoch;
+    # the xor'd lanes miss in every epoch.
+    churn_lo = max(1, min(batch, n - mutation_batch))
+    probe_idx = np.concatenate(
+        [
+            np.arange(0, batch // 2, dtype=np.int64) % churn_lo,
+            churn_lo + np.arange(batch - batch // 2, dtype=np.int64)
+            % max(1, n - churn_lo),
+        ]
+    )
+    probe_keys = words_h[probe_idx].copy()
+    # ~20% misses: bit 4 is outside the key mask, so the xor'd keys can
+    # never collide with a real (current or churned) key
+    probe_keys[::5] ^= np.uint32(0x10)
+
+    oracles: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+    def register_oracle(epoch: int) -> None:
+        oracles[epoch] = _expected_answers(truth, probe_keys)
+
+    register_oracle(cell.epoch + 1)
+    cur = pipe.run(ks, publish_to=cell)
+    base = ks
+
+    q_dev = jnp.asarray(probe_keys)
+
+    def one_lookup(tree):
+        f, r = backend_obj.lookup(tree, q_dev)
+        jax.block_until_ready((f, r))
+        return np.asarray(f, bool), np.asarray(r, np.uint32)
+
+    # ------------------------------------------------------------ writer
+    stop = threading.Event()
+    writer_errors: list = []
+    epoch_rid_base = 1 << 17  # churn rids: epoch * base + slot (encodes epoch)
+    wrng = np.random.default_rng(seed + 1)
+    target_period = (
+        mutation_period_s
+        if target_mutation_period_s is None
+        else target_mutation_period_s
+    )
+    # host mirror of the folded keyset's row order: tags[i] = original key
+    # id of base row i (the fold keeps surviving rows, then appends the
+    # delta — so victim rows move to the tail each cycle)
+    tags = np.arange(n, dtype=np.int64)
+
+    def writer_cycle():
+        nonlocal cur, base, tags
+        # redraw `mutation_batch` keys from the churn window: delete + re-
+        # insert the same key under a fresh epoch-coded rid.  n and the key
+        # population stay constant => stable geometry, warm programs.
+        next_epoch = cell.epoch + 1
+        victims = churn_lo + wrng.choice(
+            n - churn_lo, size=min(mutation_batch, n - churn_lo), replace=False
+        )
+        keep = ~np.isin(tags, victims)
+        delta_words = words_h[victims]
+        new_rids = (
+            np.uint32(next_epoch * epoch_rid_base)
+            + np.arange(len(victims), dtype=np.uint32)
+        )
+        delta = KeySet(
+            words=delta_words,
+            lengths=np.full(len(victims), n_words * 4, np.int32),
+            rids=new_rids,
+        )
+        for i_k, key in enumerate(delta_words):
+            truth[tuple(int(w) for w in key)] = int(new_rids[i_k])
+        register_oracle(next_epoch)
+        tags = np.concatenate([tags[keep], victims])
+        cur, base = pipe.run_incremental(
+            cur, base, delta, keep_rows=keep, meta=cur.meta, publish_to=cell
+        )
+
+    def writer_loop():
+        t_start = time.perf_counter()
+        cycles = 0
+        try:
+            while not stop.is_set():
+                writer_cycle()
+                cycles += 1
+                # owed-minus-done backlog: the lag report admission reads
+                if target_period and target_period > 0:
+                    owed = (time.perf_counter() - t_start) / target_period
+                    cell.report_lag(int(max(0.0, owed - cycles)))
+                else:
+                    cell.report_lag(0)
+                if mutation_period_s > 0:
+                    stop.wait(mutation_period_s)
+        except Exception as e:  # pragma: no cover - surfaced in the report
+            writer_errors.append(repr(e))
+            stop.set()
+
+    # ------------------------------------------------------------ readers
+    def reader_loop(report: ReaderReport):
+        try:
+            while not stop.is_set():
+                t0 = time.perf_counter()
+                epoch_before = cell.epoch
+                try:
+                    pin = cell.acquire()
+                except AdmissionShed:
+                    report.n_shed += 1
+                    stop.wait(0.001)  # shed backoff: don't spin the lock
+                    continue
+                try:
+                    f, r = one_lookup(pin.tree)
+                finally:
+                    pin.release()
+                report.reservoir.record((time.perf_counter() - t0) * 1e6)
+                report.n_requests += 1
+                report.saw_epoch(pin.snapshot.epoch)
+                if pin.snapshot.epoch < epoch_before:
+                    report.stale_epochs += 1
+                exp_f, exp_r = oracles[pin.snapshot.epoch]
+                if not (np.array_equal(f, exp_f) and np.array_equal(r, exp_r)):
+                    report.torn_reads += 1
+        except Exception as e:  # pragma: no cover - surfaced in the report
+            report.errors.append(repr(e))
+
+    # ------------------------------------------------- warmup + baseline
+    one_lookup(cell.current.tree)
+    for _ in range(max(warmup_cycles, 1)):
+        writer_cycle()
+    one_lookup(cell.current.tree)
+    # unloaded closed-loop baseline: one thread, no writer — the
+    # denominator of the machine-neutral tail-latency ratio
+    unloaded = []
+    for _ in range(16):
+        t0 = time.perf_counter()
+        one_lookup(cell.current.tree)
+        unloaded.append((time.perf_counter() - t0) * 1e6)
+    unloaded_p50 = float(np.percentile(np.asarray(unloaded), 50))
+
+    s0 = plancache.cache_stats()
+    reports = [
+        ReaderReport(reservoir=LatencyReservoir(reservoir_capacity, seed + 10 + i))
+        for i in range(n_readers)
+    ]
+    threads = [
+        threading.Thread(target=reader_loop, args=(rep,), daemon=True)
+        for rep in reports
+    ]
+    wt = threading.Thread(target=writer_loop, daemon=True)
+    t_run0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    wt.start()
+    time.sleep(duration_s)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30.0)
+    wt.join(timeout=30.0)
+    wall = time.perf_counter() - t_run0
+    warm_traces = plancache.cache_stats()["traces"] - s0["traces"]
+
+    pooled = (
+        np.concatenate([rep.reservoir.samples() for rep in reports])
+        if reports
+        else np.zeros(0)
+    )
+    pcts = _percentiles(pooled)
+    n_requests = sum(rep.n_requests for rep in reports)
+    errors = writer_errors + [e for rep in reports for e in rep.errors]
+    return LoadReport(
+        n_readers=n_readers,
+        duration_s=wall,
+        batch=len(probe_keys),
+        n_requests=n_requests,
+        n_shed=sum(rep.n_shed for rep in reports),
+        torn_reads=sum(rep.torn_reads for rep in reports),
+        stale_epochs=sum(rep.stale_epochs for rep in reports),
+        epochs_published=cell.stats()["n_published"],
+        warm_traces=warm_traces,
+        lookups_per_s=n_requests * len(probe_keys) / max(wall, 1e-9),
+        unloaded_p50_us=unloaded_p50,
+        cell_stats=cell.stats(),
+        readers=reports,
+        errors=errors,
+        **pcts,
+    )
+
+
+def run_pager_load(
+    *,
+    n_pages: int = 4096,
+    page_tokens: int = 16,
+    n_seqs: int = 32,
+    pages_per_seq: int = 8,
+    n_readers: int = 4,
+    duration_s: float = 1.0,
+    rebuild_period_s: float = 0.0,
+    max_lag_epochs: int | None = None,
+    admission: str = "shed",
+    seed: int = 0,
+) -> dict:
+    """Closed-loop page gets racing live pager mutation + rebuilds.
+
+    The serving-side twin of :func:`run_load`: readers hammer
+    ``PagedKVManager.lookup_batch`` (the index probe behind
+    ``ServeEngine.lookup_page``) over a fixed probe set of
+    ``(seq_id, page_no)`` pairs while the writer thread frees and
+    re-allocates one sequence per cycle and folds the journal through
+    ``rebuild_index`` — each rebuild publishes the next epoch into the
+    pager's cell.  Responses are checked against the per-epoch oracle
+    of the page table (registered before each publish), so a torn or
+    stale probe is a counted failure, not a flake.  Returns a flat
+    stats dict (requests, torn/stale counts, sheds, epochs, p50/p99).
+    """
+    from repro.serve.pager import PagedKVManager
+
+    pm = PagedKVManager(
+        n_pages=n_pages,
+        page_tokens=page_tokens,
+        read_through_dirty=True,
+        max_lag_epochs=max_lag_epochs,
+        admission=admission,
+    )
+    for s in range(n_seqs):
+        pm.pages_for(s, pages_per_seq * page_tokens)
+    pm.rebuild_index()
+
+    probe = np.asarray(
+        [(s, p) for s in range(n_seqs) for p in range(pages_per_seq)][:256],
+        np.uint32,
+    )
+    oracles: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+    def register_oracle(epoch: int) -> None:
+        found = np.zeros(len(probe), bool)
+        rid = np.full(len(probe), 0xFFFFFFFF, np.uint32)
+        for i, (s, p) in enumerate(probe):
+            phys = pm._table.get((int(s), int(p)))
+            if phys is not None:
+                found[i] = True
+                rid[i] = phys
+        oracles[epoch] = (found, rid)
+
+    register_oracle(pm._snapshots.epoch)
+    pm.lookup_batch(probe)  # warm the probe program
+
+    stop = threading.Event()
+    errors: list = []
+    counts = {"requests": 0, "torn": 0, "stale": 0, "shed": 0}
+    lock = threading.Lock()
+    reservoirs = [LatencyReservoir(2048, seed + i) for i in range(n_readers)]
+
+    def reader(idx: int):
+        res = reservoirs[idx]
+        try:
+            while not stop.is_set():
+                t0 = time.perf_counter()
+                epoch_before = pm._snapshots.epoch
+                try:
+                    found, rid, epoch = pm.lookup_batch_versioned(probe)
+                except AdmissionShed:
+                    with lock:
+                        counts["shed"] += 1
+                    stop.wait(0.001)  # shed backoff: don't spin the lock
+                    continue
+                res.record((time.perf_counter() - t0) * 1e6)
+                exp_f, exp_r = oracles[epoch]
+                torn = not (
+                    np.array_equal(found, exp_f) and np.array_equal(rid, exp_r)
+                )
+                with lock:
+                    counts["requests"] += 1
+                    if torn:
+                        counts["torn"] += 1
+                    if epoch < epoch_before:
+                        counts["stale"] += 1
+        except Exception as e:  # pragma: no cover
+            errors.append(repr(e))
+
+    wrng = np.random.default_rng(seed + 99)
+
+    def writer():
+        try:
+            while not stop.is_set():
+                victim = int(wrng.integers(0, n_seqs))
+                pm.free_seq(victim)
+                pm.pages_for(victim, pages_per_seq * page_tokens)
+                register_oracle(pm._snapshots.epoch + 1)
+                pm.rebuild_index()
+                if rebuild_period_s > 0:
+                    stop.wait(rebuild_period_s)
+        except Exception as e:  # pragma: no cover
+            errors.append(repr(e))
+            stop.set()
+
+    threads = [
+        threading.Thread(target=reader, args=(i,), daemon=True)
+        for i in range(n_readers)
+    ]
+    wt = threading.Thread(target=writer, daemon=True)
+    for t in threads:
+        t.start()
+    wt.start()
+    time.sleep(duration_s)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30.0)
+    wt.join(timeout=30.0)
+
+    pooled = np.concatenate([r.samples() for r in reservoirs])
+    pcts = _percentiles(pooled)
+    return {
+        "n_readers": n_readers,
+        "n_requests": counts["requests"],
+        "torn_reads": counts["torn"],
+        "stale_epochs": counts["stale"],
+        "n_shed": counts["shed"],
+        "epochs_published": pm._snapshots.stats()["n_published"],
+        "snapshot": pm._snapshots.stats(),
+        "errors": errors,
+        **pcts,
+    }

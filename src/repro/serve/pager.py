@@ -22,11 +22,27 @@ Gets are versioned: every rebuild publishes an epoch-stamped snapshot
 into a ``repro.core.snapshot.SnapshotCell`` and ``lookup``/``lookup_batch``
 pin the current epoch around the backend's plan-cached ``lookup`` op —
 page gets racing a restart rebuild answer from the pre-rebuild index.
+
+Concurrency contract: **single-writer, multi-reader**.  Mutations
+(``alloc``/``free_seq``/``pages_for``) and ``rebuild_index`` belong to
+one writer thread; ``lookup``/``lookup_batch`` may run from any number
+of reader threads concurrently with both, because they only touch the
+snapshot cell (thread-safe) and the backend's plan cache (thread-safe).
+Readers default to *rebuild-on-read* when the index is dirty — the
+single-threaded convenience — which is serialized under an internal
+rebuild mutex; a concurrent serving deployment sets
+``read_through_dirty=True`` so readers keep answering from the current
+epoch while the writer folds the journal, and (optionally) bounds
+staleness with the ``max_lag_epochs`` admission-control knob (journal
+backlog is converted to epochs at ``lag_entries_per_epoch`` entries per
+rebuild; over the bound, reads shed or park — see
+``repro.core.snapshot``).
 """
 
 from __future__ import annotations
 
 import bisect
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -49,6 +65,15 @@ def _pack_key(seq_id: int, page_no: int) -> np.ndarray:
 
 @dataclass
 class PagedKVManager:
+    """Paged KV allocator whose page index rebuilds via compressed key sort.
+
+    Tracks ``(seq_id, page_no) -> physical page`` with a journaled free
+    list; ``rebuild_index`` is the paper's recovery path over this table
+    and every rebuild publishes a versioned snapshot that ``lookup`` /
+    ``lookup_batch`` pin (see the module docstring for the lifecycle and
+    the single-writer/multi-reader concurrency contract).
+    """
+
     n_pages: int
     page_tokens: int
     backend: str = "jnp"  # execution backend for index reconstruction
@@ -56,6 +81,19 @@ class PagedKVManager:
     #: exceed this fraction of the live index (None = always pin, PR-2
     #: behavior; see Replica for the policy rationale)
     shed_delete_frac: float | None = None
+    #: serving mode: readers answer from the current published epoch even
+    #: while the journal is dirty, instead of triggering a rebuild from
+    #: the read path (required when lookups run on reader threads
+    #: concurrent with a writer — see the module concurrency contract)
+    read_through_dirty: bool = False
+    #: admission control: bound on rebuild lag (in epochs) before reads
+    #: shed or park; None disables (see repro.core.snapshot.SnapshotCell)
+    max_lag_epochs: int | None = None
+    admission: str = "shed"
+    park_timeout: float | None = None
+    #: journal entries that count as one epoch of lag when converting the
+    #: pending-log backlog into the cell's lag metric
+    lag_entries_per_epoch: int = 64
     _deletes_since_shed: int = 0
     _free: list = field(default_factory=list)
     _table: dict = field(default_factory=dict)  # (seq, page_no) -> phys page
@@ -71,12 +109,27 @@ class PagedKVManager:
     # versioned read path: rebuilds publish epochs here, gets pin them
     _snapshots: SnapshotCell = field(default_factory=SnapshotCell, repr=False)
     _lookup_backend: object | None = field(default=None, repr=False)
+    # serializes rebuild_index (rebuild-on-read racing an explicit rebuild)
+    _rebuild_lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False
+    )
 
     def __post_init__(self):
         self._free = list(range(self.n_pages - 1, -1, -1))
+        self._snapshots = SnapshotCell(
+            max_lag_epochs=self.max_lag_epochs,
+            admission=self.admission,
+            park_timeout=self.park_timeout,
+        )
 
     # ------------------------------------------------------------- mutation
     def alloc(self, seq_id: int, page_no: int) -> int:
+        """Map ``(seq_id, page_no)`` to a fresh physical page (journaled).
+
+        A re-alloc of a mapped slot retires the old physical page first;
+        genuinely new keys advance DS-metadata with the §4.3 insert rule.
+        Returns the physical page id.
+        """
         if not self._free:
             raise MemoryError("KV pager out of pages")
         phys = self._free.pop()
@@ -99,9 +152,14 @@ class PagedKVManager:
         self._table[key_t] = phys
         self._log.append_inserts(_pack_key(*key_t)[None, :], [phys])
         self._index_dirty = True
+        self._report_lag()
         return phys
 
     def free_seq(self, seq_id: int) -> int:
+        """Free every page of ``seq_id`` (lazy deletes: metadata untouched).
+
+        Returns the number of pages released back to the free list.
+        """
         gone = [k for k in self._table if k[0] == seq_id]
         freed = []
         for k in gone:
@@ -117,7 +175,13 @@ class PagedKVManager:
             self._log.append_deletes(freed)
             self._deletes_since_shed += len(freed)
         self._index_dirty = True
+        self._report_lag()
         return len(gone)
+
+    def _report_lag(self) -> None:
+        """Writer-side: convert journal backlog into the cell's lag metric."""
+        if self.max_lag_epochs is not None:
+            self._snapshots.report_lag(len(self._log) // self.lag_entries_per_epoch)
 
     def pages_for(self, seq_id: int, n_tokens: int) -> list[int]:
         """Ensure pages covering n_tokens exist; returns physical page list."""
@@ -162,8 +226,15 @@ class PagedKVManager:
         After the first build, the rebuild replays the mutation log: it
         folds onto the previous build's keyset and goes through the
         pipeline's incremental delta-merge path (byte-identical full-path
-        fallback when the D-bitmap grew).
+        fallback when the D-bitmap grew).  Serialized under an internal
+        mutex so rebuild-on-read racing an explicit rebuild folds the
+        journal exactly once.
         """
+        with self._rebuild_lock:
+            return self._rebuild_index_locked(backend)
+
+    def _rebuild_index_locked(self, backend: str | None) -> ReconstructionResult:
+        """Body of :meth:`rebuild_index`; caller holds ``_rebuild_lock``."""
         if not self._table:
             raise ValueError("empty page table")
         pipe = ReconstructionPipeline(backend=backend or self.backend)
@@ -203,6 +274,7 @@ class PagedKVManager:
             self._stream.publish(self._log)
         self._log = ChangeLog(2, start_lsn=self._log.next_lsn)
         self._index_dirty = False
+        self._report_lag()
         return res
 
     def _backend_obj(self):
@@ -213,22 +285,39 @@ class PagedKVManager:
             self._lookup_backend = get_backend(self.backend)
         return self._lookup_backend
 
-    def lookup_batch(self, pairs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Batched page gets: (q, 2) (seq_id, page_no) rows -> (found, rid).
+    def lookup_batch_versioned(
+        self, pairs: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Batched page gets with the answering epoch: ``(found, rid, epoch)``.
 
         Routes through the snapshot protocol: the current epoch is pinned
         for the whole probe, so gets racing a ``rebuild_index`` (a restart
         folding the journal) answer from the pre-rebuild index — never a
         torn one.  The probe is the backend's plan-cached ``lookup`` op.
+        With ``read_through_dirty`` a dirty journal does *not* trigger a
+        rebuild from the read path (only the very first build does);
+        callers use the returned epoch to know which published state
+        answered.  May raise ``repro.core.snapshot.AdmissionShed`` when
+        admission control is on and rebuild lag exceeds the bound.
         """
         import jax.numpy as jnp
 
-        if self._index is None or self._index_dirty:
+        if self._index is None or (self._index_dirty and not self.read_through_dirty):
             self.rebuild_index()
         q = jnp.asarray(np.asarray(pairs, np.uint32).reshape(-1, 2))
         with self._snapshots.pin() as snap:
             found, rid = self._backend_obj().lookup(snap.tree, q)
-        return np.asarray(found, bool), np.asarray(rid, np.uint32)
+            epoch = snap.epoch
+        return np.asarray(found, bool), np.asarray(rid, np.uint32), epoch
+
+    def lookup_batch(self, pairs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Batched page gets: (q, 2) (seq_id, page_no) rows -> (found, rid).
+
+        A thin wrapper over :meth:`lookup_batch_versioned` that drops the
+        epoch stamp.
+        """
+        found, rid, _ = self.lookup_batch_versioned(pairs)
+        return found, rid
 
     def lookup(self, seq_id: int, page_no: int) -> int | None:
         """Index-backed point lookup (tree search, not the dict).
@@ -243,6 +332,8 @@ class PagedKVManager:
 
     @property
     def stats(self) -> dict:
+        """Pager health: page occupancy, index state, journal backlog,
+        last-rebuild breakdown, and the snapshot cell's exact counters."""
         return {
             "pages_used": self.n_pages - len(self._free),
             "pages_free": len(self._free),

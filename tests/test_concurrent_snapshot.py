@@ -1,0 +1,440 @@
+"""Concurrent snapshot protocol: adversarial thread schedules, exact stats.
+
+PR 5 proved the publish/acquire protocol's invariants single-threaded
+(``test_snapshot.py``); this module proves them under real thread
+interleavings: publish racing acquire/release, a reader pinned across
+several rebuilds, the last release retiring an epoch exactly once, and
+the admission-control knob (shed / park / park-timeout).  Every lookup
+issued from a reader thread is byte-checked against its *pinned* epoch's
+oracle — epoch ``k`` re-mints every rid with a ``k``-coded offset, so a
+single lane answered from the wrong epoch flips the comparison.
+
+The schedule sweep runs both as a seeded parametrization (always) and as
+a hypothesis property over schedule seeds (when the dev extra is
+installed), with the interpreter switch interval cranked down so the
+scheduler preempts inside the protocol's critical windows.
+
+The ``soak``-marked tests at the bottom run the full closed-loop load
+generator (``repro.serve.loadgen``) — minutes, not seconds — and are
+excluded from tier-1 by ``pytest.ini``; CI runs them in a dedicated job
+(``-m soak``).
+"""
+
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.keyformat import KeySet
+from repro.core.pipeline import ReconstructionPipeline
+from repro.core.snapshot import AdmissionShed, SnapshotCell
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the dev extra is optional; the seeded sweep still runs
+    HAVE_HYPOTHESIS = False
+
+
+def _keyset(rng, n, w=2, rid_base=0):
+    words = rng.integers(0, 2**32, size=(n, w), dtype=np.uint32)
+    words &= np.uint32(0x00FF0F0F)
+    words = np.unique(words, axis=0)  # one rid per distinct key
+    m = words.shape[0]
+    return KeySet(
+        words=words, lengths=np.full(m, w * 4, np.int32),
+        rids=np.arange(rid_base, rid_base + m, dtype=np.uint32),
+    )
+
+
+# one small index per distinct epoch, same key population: epoch k's rids
+# are the row index + k*1000, so a lookup's rid vector identifies the
+# epoch it was answered from (the torn-read oracle).  Built once, reused
+# by every schedule test (including the hypothesis sweep, which cannot
+# take fixtures).
+_EPOCH_POOL: dict = {}
+
+
+def _epoch_pool(n_epochs: int = 4):
+    if _EPOCH_POOL.get("n", 0) >= n_epochs:
+        return _EPOCH_POOL
+    from repro.backends import get_backend
+
+    rng = np.random.default_rng(7)
+    base = _keyset(rng, 300)
+    pipe = ReconstructionPipeline(backend="jnp")
+    results = []
+    for k in range(n_epochs):
+        ks = KeySet(
+            words=base.words, lengths=base.lengths,
+            rids=np.asarray(base.rids) + np.uint32(k * 1000),
+        )
+        results.append(pipe.run(ks))
+    import jax.numpy as jnp
+
+    probe_idx = np.arange(0, base.n, max(1, base.n // 32))[:32]
+    _EPOCH_POOL.update(
+        n=n_epochs,
+        results=results,
+        backend=get_backend("jnp"),
+        probe=jnp.asarray(np.asarray(base.words)[probe_idx]),
+        probe_rids=probe_idx.astype(np.uint32),
+    )
+    # warm the lookup program so threaded phases replay it
+    f, r = _EPOCH_POOL["backend"].lookup(results[0].tree, _EPOCH_POOL["probe"])
+    assert bool(np.asarray(f).all())
+    return _EPOCH_POOL
+
+
+def _check_epoch(pool, pin) -> bool:
+    """Byte-check a pinned lookup against the pinned epoch's oracle."""
+    f, r = pool["backend"].lookup(pin.tree, pool["probe"])
+    want = pool["probe_rids"] + np.uint32(pin.epoch * 1000)
+    return bool(np.asarray(f).all()) and np.array_equal(
+        np.asarray(r, np.uint32), want
+    )
+
+
+# ---------------------------------------------------------------------------
+# satellite: double release is detected, not silent corruption
+# ---------------------------------------------------------------------------
+
+
+def test_double_release_raises_even_with_concurrent_pin():
+    """The regression: releasing a lease twice used to silently decrement
+    some other reader's refcount; now the second release raises and the
+    *other* reader's pin (same epoch!) stays intact."""
+    pool = _epoch_pool()
+    cell = SnapshotCell()
+    cell.publish(pool["results"][0])
+    pin_a = cell.acquire()
+    pin_b = cell.acquire()  # a second reader on the SAME epoch
+    pin_a.release()
+    with pytest.raises(RuntimeError, match="double release"):
+        pin_a.release()
+    with pytest.raises(RuntimeError, match="double release"):
+        cell.release(pin_a)
+    # pin_b was not corrupted by the double release: still pinned, and a
+    # publish retires the epoch instead of dropping it
+    st = cell.stats()
+    assert st["pinned"] == 1 and st["acquires"] == 2 and st["releases"] == 1
+    cell.publish(pool["results"][1])
+    assert cell.stats()["retired"] == 1
+    assert _check_epoch(pool, pin_b)  # epoch-0 answers, byte-exact
+    pin_b.release()
+    st = cell.stats()
+    assert st["retired"] == 0 and st["retired_epochs"] == 1
+
+
+def test_release_rejects_foreign_and_unpinned_snapshots():
+    pool = _epoch_pool()
+    cell = SnapshotCell()
+    other = SnapshotCell()
+    cell.publish(pool["results"][0])
+    other.publish(pool["results"][1])
+    # a lease minted by another cell
+    foreign_pin = other.acquire()
+    with pytest.raises(RuntimeError, match="different SnapshotCell"):
+        cell.release(foreign_pin)
+    foreign_pin.release()
+    # a raw snapshot this cell never published
+    with pytest.raises(RuntimeError, match="double release or foreign"):
+        cell.release(other.current)
+    # a raw release of the current snapshot with no outstanding pins
+    with pytest.raises(RuntimeError, match="release of unpinned epoch"):
+        cell.release(cell.current)
+    # legacy raw-snapshot release still works when actually pinned —
+    # but only down to zero, never below
+    p = cell.acquire()
+    cell.release(p.snapshot)
+    with pytest.raises(RuntimeError):
+        cell.release(p.snapshot)
+
+
+# ---------------------------------------------------------------------------
+# barrier-scheduled interleavings
+# ---------------------------------------------------------------------------
+
+
+def _run_schedule(seed: int, n_readers: int = 4, reader_iters: int = 40):
+    """One adversarial schedule: readers loop acquire→verify→release
+    while the writer publishes the epoch pool; returns (cell, torn)."""
+    pool = _epoch_pool()
+    cell = SnapshotCell()
+    cell.publish(pool["results"][0])
+    rng = np.random.default_rng(seed)
+    sleeps = rng.uniform(0.0, 2e-3, size=pool["n"] - 1)
+    barrier = threading.Barrier(n_readers + 1)
+    torn = [0] * n_readers
+    stale = [0] * n_readers
+    errors: list = []
+
+    def reader(idx: int):
+        try:
+            barrier.wait()
+            for _ in range(reader_iters):
+                before = cell.epoch
+                with cell.pin() as pin:
+                    if not _check_epoch(pool, pin):
+                        torn[idx] += 1
+                    if pin.epoch < before:
+                        stale[idx] += 1
+        except Exception as e:  # pragma: no cover
+            errors.append(repr(e))
+
+    def writer():
+        try:
+            barrier.wait()
+            for k in range(1, pool["n"]):
+                time.sleep(float(sleeps[k - 1]))
+                cell.publish(pool["results"][k])
+        except Exception as e:  # pragma: no cover
+            errors.append(repr(e))
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)  # preempt inside the critical windows
+    try:
+        ts = [
+            threading.Thread(target=reader, args=(i,)) for i in range(n_readers)
+        ] + [threading.Thread(target=writer)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=60.0)
+    finally:
+        sys.setswitchinterval(old)
+    assert not errors, errors
+    st = cell.stats()
+    # exact closed-form counters after the schedule
+    assert st["acquires"] == st["releases"] == n_readers * reader_iters
+    assert st["pinned"] == 0 and st["retired"] == 0
+    assert st["n_published"] == pool["n"]
+    assert st["retired_epochs"] == pool["n"] - 1  # each freed exactly once
+    assert 1 <= st["max_concurrent_pins"] <= n_readers
+    assert sum(torn) == 0, f"torn reads under schedule seed {seed}: {torn}"
+    assert sum(stale) == 0, f"stale epochs under schedule seed {seed}: {stale}"
+    return cell
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 17])
+def test_publish_racing_acquire_release_seeded(seed):
+    _run_schedule(seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**16))
+    def test_publish_racing_acquire_release_hypothesis(seed):
+        """Hypothesis sweep over thread-schedule seeds (dev extra only)."""
+        _run_schedule(seed, n_readers=3, reader_iters=25)
+
+
+def test_reader_pinned_across_three_rebuilds():
+    """A reader that pinned epoch 0 keeps getting byte-identical epoch-0
+    answers while three rebuilds publish 1, 2, 3 underneath it."""
+    pool = _epoch_pool()
+    cell = SnapshotCell()
+    cell.publish(pool["results"][0])
+    pin = cell.acquire()
+    for k in range(1, 4):
+        cell.publish(pool["results"][k])
+        assert cell.epoch == k
+        assert _check_epoch(pool, pin)  # still epoch-0 rids, byte-exact
+    assert cell.stats()["retired"] == 1  # only epoch 0 is pin-held
+    assert cell.stats()["retired_epochs"] == 2  # 1 and 2 freed on publish
+    pin.release()
+    st = cell.stats()
+    assert st["retired"] == 0 and st["retired_epochs"] == 3
+    # a fresh acquire sees the newest epoch
+    with cell.pin() as p2:
+        assert p2.epoch == 3 and _check_epoch(pool, p2)
+
+
+def test_last_release_retires_exactly_once():
+    """K readers pin the same epoch; a publish retires it; the releases
+    race through a barrier and the epoch is freed exactly once."""
+    pool = _epoch_pool()
+    K = 6
+    cell = SnapshotCell()
+    cell.publish(pool["results"][0])
+    pins = [cell.acquire() for _ in range(K)]
+    cell.publish(pool["results"][1])
+    assert cell.stats()["retired"] == 1 and cell.stats()["retired_epochs"] == 0
+    barrier = threading.Barrier(K)
+    errors: list = []
+
+    def releaser(p):
+        try:
+            barrier.wait()
+            p.release()
+        except Exception as e:  # pragma: no cover
+            errors.append(repr(e))
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    try:
+        ts = [threading.Thread(target=releaser, args=(p,)) for p in pins]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=30.0)
+    finally:
+        sys.setswitchinterval(old)
+    assert not errors, errors
+    st = cell.stats()
+    assert st["pinned"] == 0 and st["retired"] == 0
+    assert st["retired_epochs"] == 1  # exactly once, despite the race
+    assert st["releases"] == K and st["max_concurrent_pins"] == K
+
+
+# ---------------------------------------------------------------------------
+# admission control: shed, park, park-timeout
+# ---------------------------------------------------------------------------
+
+
+def test_admission_shed_on_lag():
+    pool = _epoch_pool()
+    cell = SnapshotCell(max_lag_epochs=1)
+    cell.publish(pool["results"][0])
+    cell.report_lag(1)
+    with cell.pin() as p:  # at the bound: still admitted
+        assert p.epoch == 0
+    cell.report_lag(2)
+    with pytest.raises(AdmissionShed):
+        cell.acquire()
+    assert cell.stats()["shed"] == 1
+    cell.report_lag(0)  # writer caught up: reads admitted again
+    with cell.pin():
+        pass
+    assert cell.stats()["shed"] == 1 and cell.stats()["lag_epochs"] == 0
+
+
+def test_admission_park_until_writer_catches_up():
+    pool = _epoch_pool()
+    cell = SnapshotCell(max_lag_epochs=0, admission="park")
+    cell.publish(pool["results"][0])
+    cell.report_lag(3)
+    got: list = []
+
+    def parked_reader():
+        with cell.pin() as p:
+            got.append(p.epoch)
+
+    t = threading.Thread(target=parked_reader)
+    t.start()
+    time.sleep(0.05)
+    assert not got  # still parked
+    cell.publish(pool["results"][1])  # publish alone does not clear the lag
+    cell.report_lag(0)
+    t.join(timeout=10.0)
+    assert got == [1]  # woke up on the *new* epoch
+    st = cell.stats()
+    assert st["parked"] == 1 and st["shed"] == 0 and st["park_wait_s"] > 0
+
+
+def test_admission_park_timeout_sheds():
+    pool = _epoch_pool()
+    cell = SnapshotCell(max_lag_epochs=0, admission="park", park_timeout=0.05)
+    cell.publish(pool["results"][0])
+    cell.report_lag(5)
+    t0 = time.perf_counter()
+    with pytest.raises(AdmissionShed, match="timed out"):
+        cell.acquire()
+    assert time.perf_counter() - t0 >= 0.04
+    st = cell.stats()
+    assert st["parked"] == 1 and st["shed"] == 1
+
+
+def test_admission_knob_validation():
+    with pytest.raises(ValueError):
+        SnapshotCell(admission="drop")
+    with pytest.raises(ValueError):
+        SnapshotCell(max_lag_epochs=-1)
+
+
+# ---------------------------------------------------------------------------
+# the closed-loop load generator (short smoke in tier-1, soaks in CI)
+# ---------------------------------------------------------------------------
+
+
+def test_loadgen_smoke():
+    """A short closed-loop run: torn/stale must be zero even at this size."""
+    from repro.serve.loadgen import run_load
+
+    rep = run_load(
+        backend="jnp", n_keys=1024, n_words=2, batch=64, n_readers=2,
+        duration_s=0.8, mutation_batch=32, seed=0,
+    )
+    assert rep.errors == []
+    assert rep.n_requests > 0 and rep.epochs_published >= 2
+    assert rep.torn_reads == 0 and rep.stale_epochs == 0
+    assert rep.p50_us > 0 and rep.p99_us >= rep.p50_us
+    row = rep.to_row()
+    assert row["max_concurrent_pins"] >= 1
+
+
+@pytest.mark.soak
+def test_soak_loadgen_jnp_8_readers():
+    """The acceptance run: ≥8 readers, live incremental rebuilds, zero
+    torn reads, zero stale epochs, zero warm retraces."""
+    from repro.serve.loadgen import run_load
+
+    rep = run_load(
+        backend="jnp", n_keys=16384, n_words=2, batch=256, n_readers=8,
+        duration_s=4.0, mutation_batch=64, seed=0,
+    )
+    assert rep.errors == []
+    assert rep.n_requests >= 8 and rep.epochs_published >= 3
+    assert rep.torn_reads == 0 and rep.stale_epochs == 0
+    assert rep.warm_traces == 0, "concurrent serving must stay warm"
+    st = rep.cell_stats
+    assert st["acquires"] == st["releases"] and st["pinned"] == 0
+    assert st["max_concurrent_pins"] >= 2
+
+
+@pytest.mark.soak
+def test_soak_loadgen_pallas():
+    from repro.serve.loadgen import run_load
+
+    rep = run_load(
+        backend="pallas", n_keys=8192, n_words=2, batch=128, n_readers=8,
+        duration_s=3.0, mutation_batch=64, seed=1,
+    )
+    assert rep.errors == []
+    assert rep.torn_reads == 0 and rep.stale_epochs == 0
+    assert rep.warm_traces == 0
+
+
+@pytest.mark.soak
+def test_soak_loadgen_admission_sheds_under_lag():
+    """An impossible feed rate (1 ms per mutation cycle) must trip the
+    lag bound and shed reads instead of serving ever-staler answers."""
+    from repro.serve.loadgen import run_load
+
+    rep = run_load(
+        backend="jnp", n_keys=8192, n_words=2, batch=128, n_readers=4,
+        duration_s=3.0, mutation_batch=64, target_mutation_period_s=0.001,
+        max_lag_epochs=1, admission="shed", seed=2,
+    )
+    assert rep.errors == []
+    assert rep.torn_reads == 0 and rep.stale_epochs == 0
+    assert rep.n_shed > 0 and rep.cell_stats["shed"] == rep.n_shed
+
+
+@pytest.mark.soak
+def test_soak_pager_load():
+    """The serving-side twin: page gets racing live pager churn."""
+    from repro.serve.loadgen import run_pager_load
+
+    out = run_pager_load(
+        n_pages=2048, page_tokens=16, n_seqs=24, pages_per_seq=6,
+        n_readers=4, duration_s=3.0, seed=0,
+    )
+    assert out["errors"] == []
+    assert out["n_requests"] > 0 and out["epochs_published"] >= 2
+    assert out["torn_reads"] == 0 and out["stale_epochs"] == 0

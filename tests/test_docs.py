@@ -33,6 +33,8 @@ SURFACE = [
     SRC / "replication" / "chaos.py",
     SRC / "replication" / "supervisor.py",
     SRC / "ckpt" / "checkpoint.py",
+    SRC / "serve" / "loadgen.py",
+    SRC / "serve" / "pager.py",
 ]
 
 
