@@ -34,6 +34,7 @@ def main() -> None:
         bench_dbit_distribution,
         bench_incremental,
         bench_lookup,
+        bench_multitenant,
         bench_parallel_scaling,
         bench_pipeline,
         bench_replication_stream,
@@ -65,6 +66,10 @@ def main() -> None:
             n_keys=8192 if args.fast else 16384,
             duration_s=1.5 if args.fast else 3.0,
             grid=((2, 64), (8, 64)) if args.fast else bench_serve.GRID,
+        ),
+        "multitenant": lambda: bench_multitenant.run(
+            n_keys=1024 if args.fast else 4096,
+            ts=(1, 8) if args.fast else bench_multitenant.TS,
         ),
         "scale": lambda: bench_scale.run(
             sizes=(65536, 262144) if args.fast else bench_scale.DEFAULT_SIZES,

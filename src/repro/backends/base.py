@@ -268,6 +268,32 @@ class ExecutionBackend(abc.ABC):
             tree, jnp.asarray(queries, jnp.uint32), backend_name=self.name
         )
 
+    # ------------------------------------------------- lookup (multi-tenant)
+    def lookup_many(
+        self, stacked, queries: jnp.ndarray, n_valid=None
+    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Fused point lookup over T stacked same-geometry trees.
+
+        ``stacked`` is a ``repro.core.btree.stack_trees`` arena;
+        ``queries`` is (T_q, q, W) with ``T_q`` at most the arena
+        capacity, tenant ``t``'s block answered against member tree
+        ``t``; ``n_valid`` (optional (T_q,)) gives per-tenant live lane
+        counts.  Returns ``((T_q, q) found, (T_q, q) rid)`` — each
+        tenant's slice byte-identical to :meth:`lookup` on that tenant's
+        tree alone, which is the single-snapshot contract lifted over
+        the tenant axis.  The default is the jnp oracle: ``vmap`` of the
+        plan-cached descent over the tenant axis, one compiled program
+        per ``(T, query bucket, tree geometry)``.  Backends substitute
+        their own realization (the pallas probe kernel's tenant-major
+        grid; distributed sharding of the tenant axis over the mesh).
+        """
+        from repro.core.btree import lookup_many_planned
+
+        return lookup_many_planned(
+            stacked, jnp.asarray(queries, jnp.uint32), n_valid,
+            backend_name=self.name,
+        )
+
     # ------------------------------------------------------- refresh meta
     def refresh_meta(self, comp_sorted: jnp.ndarray, meta, ref_key,
                      n_valid: int | None = None, donate: bool = False):

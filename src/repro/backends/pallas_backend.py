@@ -139,6 +139,25 @@ class PallasBackend(ExecutionBackend):
             program_key_extra=(self.lookup_tile, self.interpret),
         )
 
+    def lookup_many(self, stacked, queries, n_valid=None):
+        """Fused multi-tenant lookup with the tenant-major probe kernel:
+        the vmapped descent routes every tenant's queries, then ONE
+        ``pallas_call`` over a (T, pairs/tile) grid screens all (tenant,
+        query, entry) pairs before the full-key confirm — byte-identical
+        per tenant to the single-snapshot pallas :meth:`lookup`."""
+        from repro.core.btree import lookup_many_planned
+
+        return lookup_many_planned(
+            stacked,
+            jnp.asarray(queries, jnp.uint32),
+            n_valid,
+            backend_name=self.name,
+            leaf_match_many_fn=lookup_ops.leaf_match_many_fn(
+                tile=self.lookup_tile, interpret=self.interpret
+            ),
+            program_key_extra=(self.lookup_tile, self.interpret),
+        )
+
     def batched_extract_sort(self, words, bitmaps, rows, plans):
         """Batched fast path: per-index pext extraction (each plan is a
         static kernel schedule), then ONE vmapped program over the stacked

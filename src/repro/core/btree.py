@@ -45,6 +45,9 @@ __all__ = [
     "search_batch",
     "search_batch_partial",
     "lookup_batch_planned",
+    "lookup_many_planned",
+    "stack_trees",
+    "tree_geometry",
     "NOT_FOUND_RID",
 ]
 
@@ -554,3 +557,180 @@ def lookup_batch_planned(
     qp = plancache.pad_tail(queries, b, 0xFFFFFFFF)
     found, rid = prog(tree, qp, np.uint32(q))
     return found[:q], rid[:q]
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant lookup: T same-geometry trees stacked, one program
+# ---------------------------------------------------------------------------
+
+
+def tree_geometry(tree: BTree) -> tuple:
+    """Static shape signature of a tree — the arena bucketing key.
+
+    Two trees with equal geometry can be stacked into one arena and
+    replay one compiled ``lookup_many`` program; a rebuild that changes
+    any array shape (or ``n_keys``, or the config) changes the geometry
+    and must migrate to a different arena bucket.  The tuple is hashable
+    and travels inside plan-cache keys.
+    """
+    levels = tuple(
+        tuple(sorted((k, tuple(map(int, v.shape))) for k, v in level.items()))
+        for level in tree.levels
+    )
+    leaf = tuple(sorted((k, tuple(map(int, v.shape))) for k, v in tree.leaf.items()))
+    return (
+        levels,
+        leaf,
+        tuple(map(int, tree.sorted_full.shape)),
+        tuple(map(int, tree.sorted_rids.shape)),
+        int(tree.n_keys),
+        int(tree.config.pk_bits),
+        float(tree.config.fill_factor),
+    )
+
+
+def stack_trees(trees, capacity: int | None = None) -> BTree:
+    """Stack T same-geometry trees on a new leading tenant axis.
+
+    Returns a :class:`BTree` whose every array leaf has shape
+    ``(capacity,) + member_shape`` — a valid pytree over which
+    ``jax.vmap`` runs the existing descent, which is how the jnp
+    ``lookup_many`` oracle is built.  ``capacity`` defaults to the next
+    power of two ``>= len(trees)`` so that tenants joining an arena
+    within its capacity replay one compiled program; pad slots replicate
+    the first member (their queries are masked out by ``n_valid``, so
+    the content is irrelevant but must be shape-correct).
+    """
+    trees = list(trees)
+    if not trees:
+        raise ValueError("stack_trees needs at least one tree")
+    geom = tree_geometry(trees[0])
+    for i, t in enumerate(trees[1:], 1):
+        if tree_geometry(t) != geom:
+            raise ValueError(
+                f"tree {i} geometry differs from tree 0; same-geometry "
+                "trees only — bucket by tree_geometry() first"
+            )
+    t_live = len(trees)
+    if capacity is None:
+        capacity = 1 << max(0, (t_live - 1).bit_length())
+    if capacity < t_live:
+        raise ValueError(f"capacity {capacity} < {t_live} trees")
+    padded = trees + [trees[0]] * (capacity - t_live)
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
+def _leaf_match_many_full(tree, node, keys, queries):
+    """Default stacked leaf probe: full-key equality, tenant-major.
+
+    ``keys`` is (T, q, lc, W), ``queries`` (T, q, W) — the T-leading twin
+    of :func:`_leaf_match_full`, same math per tenant slice.
+    """
+    del tree, node
+    return jnp.all(keys == queries[:, :, None, :], axis=-1)
+
+
+def _lookup_many_program(cache, leaf_match_many_fn):
+    """The fused cross-tenant point-lookup body, one jitted program.
+
+    The single-snapshot descent (`_descend`) is ``vmap``-ed over the
+    stacked tree's tenant axis, so T tenants' query blocks answer in one
+    dispatch of one compiled program — the multi-tenant fan-out the
+    ROADMAP asks for.  Per-tenant valid counts arrive as a ``(T,)``
+    operand; lanes at or past a tenant's count (including whole pad
+    tenants in a partially filled arena) are normalized to all-ones
+    queries in-program, exactly like the single path, so results are
+    byte-identical per tenant to ``_lookup_program`` on that tenant's
+    tree alone.  ``leaf_match_many_fn(tree, node, keys, queries) ->
+    (T, q, lc) bool`` substitutes the leaf probe (tenant-major Pallas
+    kernel on the pallas backend) and must imply full-key equality
+    bit-for-bit.
+    """
+
+    return cache.jit(_lookup_many_body(leaf_match_many_fn))
+
+
+def _lookup_many_body(leaf_match_many_fn):
+    """The un-jitted fused lookup body — see :func:`_lookup_many_program`.
+
+    Exposed separately so the distributed backend can wrap it in a
+    ``shard_map`` over the tenant axis before handing it to the plan
+    cache's jit.
+    """
+
+    def prog(tree, queries, n_valid):
+        lane = jnp.arange(queries.shape[1], dtype=jnp.uint32)
+        live = lane[None, :] < n_valid[:, None]  # (T, q)
+        queries = jnp.where(live[..., None], queries, jnp.uint32(0xFFFFFFFF))
+        node = jax.vmap(_descend)(tree, queries)  # (T, q)
+        valid = jax.vmap(lambda t, n: t.leaf["valid"][n])(tree, node)
+        keys = jax.vmap(lambda t, n: _leaf_keys(t, n)[1])(tree, node)
+        eq = leaf_match_many_fn(tree, node, keys, queries) & valid
+        found = jnp.any(eq, axis=2)
+        e = jnp.argmax(eq, axis=2)
+        rids = jax.vmap(lambda t, n: t.leaf["rid"][n])(tree, node)
+        rid = jnp.take_along_axis(rids, e[..., None], axis=2)[..., 0]
+        return found, jnp.where(found, rid, jnp.uint32(NOT_FOUND_RID))
+
+    return prog
+
+
+def lookup_many_planned(
+    stacked: BTree,
+    queries: jnp.ndarray,
+    n_valid=None,
+    *,
+    backend_name: str = "jnp",
+    leaf_match_many_fn=None,
+    program_key_extra: tuple = (),
+    cache=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused multi-tenant point lookup through the shared plan cache.
+
+    ``stacked`` is a :func:`stack_trees` arena of T same-geometry
+    snapshots; ``queries`` is ``(T_q, q, W)`` with ``T_q <= T`` — tenant
+    ``t``'s block is answered against member tree ``t``.  ``n_valid``
+    (optional, ``(T_q,)``) gives each tenant's live lane count; missing
+    tenant rows up to the arena capacity are padded with zero-valid
+    blocks, so a partially filled arena still replays the capacity-shaped
+    program.  Returns ``(found (T_q, q) bool, rid (T_q, q) uint32)``,
+    each tenant's slice byte-identical to :func:`lookup_batch_planned`
+    on that tenant's tree alone (the lookup byte-identity contract,
+    lifted over the tenant axis).
+
+    The program cache key buckets on ``(T, query_bucket, tree
+    geometry)`` per the zero-retrace discipline: tenants joining within
+    capacity, query batches drifting within a bucket, and snapshot churn
+    at fixed geometry all replay one compiled program (observable per op
+    via ``PlanCache.stats()["per_op"]["lookup_many"]``).
+    """
+    from . import plancache
+
+    cache = cache or plancache.get_cache()
+    if leaf_match_many_fn is None:
+        leaf_match_many_fn = _leaf_match_many_full
+    queries = jnp.asarray(queries, jnp.uint32)
+    if queries.ndim != 3:
+        raise ValueError(f"queries must be (T, q, W), got {queries.shape}")
+    t_q, q, w = (int(s) for s in queries.shape)
+    t_cap = int(stacked.sorted_full.shape[0])
+    if t_q > t_cap:
+        raise ValueError(f"{t_q} tenant blocks > arena capacity {t_cap}")
+    if n_valid is None:
+        nv = np.full((t_q,), q, np.uint32)
+    else:
+        nv = np.asarray(n_valid, np.uint32).reshape(-1)
+        if nv.shape[0] != t_q:
+            raise ValueError(f"n_valid has {nv.shape[0]} rows, expected {t_q}")
+    nv_full = np.zeros((t_cap,), np.uint32)
+    nv_full[:t_q] = np.minimum(nv, q)
+    b = plancache.bucket_for("lookup_many", q)
+    prog = cache.program(
+        ("lookup_many", backend_name, t_cap, b, w, tree_geometry(stacked))
+        + program_key_extra,
+        lambda: _lookup_many_program(cache, leaf_match_many_fn),
+    )
+    qp = plancache.pad_tail(queries, b, 0xFFFFFFFF, axis=1)
+    qp = plancache.pad_tail(qp, t_cap, 0xFFFFFFFF, axis=0)
+    found, rid = prog(stacked, qp, jnp.asarray(nv_full))
+    return found[:t_q, :q], rid[:t_q, :q]

@@ -182,6 +182,13 @@ class PlanCache:
     misses: int = 0
     traces: int = 0
     evictions: int = 0
+    #: per-op-family counters keyed by the op name (``key[0]`` of every
+    #: program key): op -> {"hits", "misses", "traces"}.  Surfaced through
+    #: :meth:`stats` so benches and soaks can see *which* family retraced
+    #: (e.g. the tenant-axis ``lookup_many`` bucketing) instead of only an
+    #: aggregate trace delta.
+    per_op: dict = field(default_factory=dict)
+    _building_op: str | None = field(default=None, repr=False)
     max_programs: int | None = None
     auto_size: bool = False
     auto_size_cap: int = 4096
@@ -207,10 +214,12 @@ class PlanCache:
         cheap — it wraps, it does not compile)."""
         with self._lock:
             self._win_lookups += 1
+            op_stats = self._per_op(key)
             prog = self.programs.get(key)
             if prog is not None:
                 self.hits += 1
                 self._win_hits += 1
+                op_stats["hits"] += 1
                 if self.max_programs is not None:
                     # refresh recency: dicts iterate in insertion order, so
                     # re-inserting makes the oldest entry the LRU victim
@@ -219,7 +228,14 @@ class PlanCache:
                 self._maybe_grow()
                 return prog
             self.misses += 1
-            prog = builder()
+            op_stats["misses"] += 1
+            # builders wrap synchronously under the lock, so any cache.jit
+            # they call attributes its future tracings to this op family
+            prev_op, self._building_op = self._building_op, self._op_of(key)
+            try:
+                prog = builder()
+            finally:
+                self._building_op = prev_op
             self.programs[key] = prog
             if self.max_programs is not None:
                 while len(self.programs) > int(self.max_programs):
@@ -244,13 +260,32 @@ class PlanCache:
                 self.resizes += 1
         self._win_lookups = self._win_hits = self._win_evictions = 0
 
+    @staticmethod
+    def _op_of(key: tuple) -> str:
+        """The op-family name of a program key (``key[0]`` by convention)."""
+        return str(key[0]) if isinstance(key, tuple) and key else str(key)
+
+    def _per_op(self, key_or_op) -> dict:
+        """The per-op counter dict for a key/op (created on first touch);
+        caller holds the lock."""
+        op = key_or_op if isinstance(key_or_op, str) else self._op_of(key_or_op)
+        entry = self.per_op.get(op)
+        if entry is None:
+            entry = self.per_op[op] = {"hits": 0, "misses": 0, "traces": 0}
+        return entry
+
     def jit(self, fn: Callable, **jit_kwargs) -> Callable:
         """``jax.jit`` with trace counting: the wrapper body executes only
-        while JAX traces, so ``traces`` counts compilations, not calls."""
+        while JAX traces, so ``traces`` counts compilations, not calls.
+        When called from inside a :meth:`program` builder the tracings are
+        also attributed to that program's op family in :attr:`per_op`
+        (``"_unkeyed"`` otherwise)."""
+        op = self._building_op or "_unkeyed"
 
         def traced(*args, **kwargs):
             with self._lock:  # exact trace counts under concurrent tracing
                 self.traces += 1
+                self._per_op(op)["traces"] += 1
             return fn(*args, **kwargs)
 
         jitted = jax.jit(traced, **jit_kwargs)
@@ -276,7 +311,10 @@ class PlanCache:
         """Counter snapshot: ``programs`` (cached), ``hits``/``misses``
         (cache lookups), ``traces`` (actual JAX tracings — the number that
         must stay flat across a warm same-bucket call), ``evictions``
-        (LRU victims) and the configured ``max_programs`` bound."""
+        (LRU victims), the configured ``max_programs`` bound, and
+        ``per_op`` — the same hit/miss/trace counters broken down by op
+        family (``key[0]`` of the program keys; ``cache.jit`` calls made
+        outside a program builder land under ``"_unkeyed"``)."""
         with self._lock:
             return {
                 "programs": len(self.programs),
@@ -285,6 +323,7 @@ class PlanCache:
                 "traces": self.traces,
                 "evictions": self.evictions,
                 "max_programs": self.max_programs,
+                "per_op": {op: dict(c) for op, c in self.per_op.items()},
             }
 
     def reset(self) -> None:
@@ -294,6 +333,7 @@ class PlanCache:
             self.programs.clear()
             self.hits = self.misses = self.traces = self.evictions = 0
             self.resizes = 0
+            self.per_op.clear()
             self._win_lookups = self._win_hits = self._win_evictions = 0
 
 

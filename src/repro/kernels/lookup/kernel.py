@@ -86,3 +86,66 @@ def probe_planes(
         entry_pk[None, :].astype(jnp.uint32),
     )
     return out[0]
+
+
+def _probe_many_kernel(n_words: int, pk: int, w_ref, s_ref, p_ref, o_ref):
+    """Tenant-major twin of ``_probe_kernel``.
+
+    Refs carry a leading singleton tenant block — w_ref: (1, W, tile)
+    query word planes, s_ref/p_ref/o_ref: (1, 1, tile) — and the math is
+    identical lane-for-lane, so the fused multi-tenant probe stays
+    bit-identical to the single-tenant kernel on each tenant's slice.
+    """
+    start = jnp.clip(s_ref[0, 0, :], 0, n_words * 32 - 1)
+    wi = start // 32
+    sh = (start % 32).astype(jnp.uint32)
+    w0 = jnp.zeros(start.shape, jnp.uint32)
+    w1 = jnp.zeros(start.shape, jnp.uint32)
+    for w in range(n_words):
+        plane = w_ref[0, w, :]
+        w0 = jnp.where(wi == w, plane, w0)
+        w1 = jnp.where(wi + 1 == w, plane, w1)
+    hi = w0 << sh
+    lo = jnp.where(sh == 0, jnp.uint32(0), w1 >> (jnp.uint32(32) - sh))
+    window = (hi | lo) >> jnp.uint32(32 - pk)
+    o_ref[0, 0, :] = (window == p_ref[0, 0, :]).astype(jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("pk", "tile", "interpret"))
+def probe_planes_many(
+    word_planes: jnp.ndarray,
+    starts: jnp.ndarray,
+    entry_pk: jnp.ndarray,
+    pk: int,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(T, W, n) stacked query word planes + (T, n) starts/partial keys
+    -> (T, n) uint32 candidate mask.
+
+    The grid gains a tenant-major axis — ``(T, n // tile)`` — so one
+    ``pallas_call`` screens every tenant's (query, entry) pairs; each
+    grid step streams one tenant's ``tile``-lane block through VMEM,
+    which is the kernel-level realization of "one program, N tenants".
+    ``n`` must be a multiple of ``tile``.
+    """
+    t, w, n = word_planes.shape
+    assert n % tile == 0, (word_planes.shape, tile)
+    grid = (t, n // tile)
+    out = pl.pallas_call(
+        partial(_probe_many_kernel, w, int(pk)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w, tile), lambda t, i: (t, 0, i)),
+            pl.BlockSpec((1, 1, tile), lambda t, i: (t, 0, i)),
+            pl.BlockSpec((1, 1, tile), lambda t, i: (t, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tile), lambda t, i: (t, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, 1, n), jnp.uint32),
+        interpret=interpret,
+    )(
+        word_planes,
+        starts[:, None, :].astype(jnp.int32),
+        entry_pk[:, None, :].astype(jnp.uint32),
+    )
+    return out[:, 0, :]

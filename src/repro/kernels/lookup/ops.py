@@ -2,11 +2,12 @@
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.plancache import pad_tail
 
-from .kernel import DEFAULT_TILE, probe_planes
+from .kernel import DEFAULT_TILE, probe_planes, probe_planes_many
 
 
 def probe(
@@ -59,5 +60,64 @@ def leaf_match_fn(tile: int = DEFAULT_TILE, interpret: bool = True):
             interpret=interpret,
         ).reshape(q, lc)
         return cand & jnp.all(keys == queries[:, None, :], axis=-1)
+
+    return fn
+
+
+def probe_many(
+    queries: jnp.ndarray,
+    starts: jnp.ndarray,
+    entry_pk: jnp.ndarray,
+    pk: int,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(T, m, W) stacked pair queries + (T, m) starts/partial keys
+    -> (T, m) bool candidate mask — the tenant-major twin of :func:`probe`.
+
+    Pads the pair axis to a tile multiple against cached constants (pad
+    lanes are garbage, stripped before return), transposes each tenant's
+    block to word planes, and runs the tenant-major grid kernel — one
+    ``pallas_call`` for the whole arena.
+    """
+    t, m, w = queries.shape
+    total = m + ((-m) % tile)
+    planes = pad_tail(
+        jnp.swapaxes(jnp.asarray(queries, jnp.uint32), 1, 2), total, 0, axis=2
+    )
+    starts = pad_tail(jnp.asarray(starts, jnp.int32), total, 0, axis=1)
+    entry_pk = pad_tail(jnp.asarray(entry_pk, jnp.uint32), total, 0, axis=1)
+    out = probe_planes_many(
+        planes, starts, entry_pk, int(pk), tile=tile, interpret=interpret
+    )
+    return out[:, :m].astype(bool)
+
+
+def leaf_match_many_fn(tile: int = DEFAULT_TILE, interpret: bool = True):
+    """A ``lookup_many_planned(leaf_match_many_fn=...)``-shaped closure.
+
+    The stacked twin of :func:`leaf_match_fn`: per-tenant gathers of the
+    leaf entries' window starts and stored partial keys, one tenant-major
+    probe kernel over every (tenant, query, entry) pair, then the
+    full-key confirm — byte-identical per tenant to the single-snapshot
+    pallas lookup (a full match always window-matches).
+    """
+
+    def fn(tree, node, keys, queries):
+        t, q = node.shape
+        lc = tree.config.leaf_cap
+        gather = jax.vmap(lambda arr, n: arr[n])
+        dpos = gather(tree.leaf["dpos"], node)  # (T, q, lc)
+        entry_pk = gather(tree.leaf["pk"], node)  # (T, q, lc)
+        flat_q = jnp.repeat(queries, lc, axis=1)  # (T, q*lc, W)
+        cand = probe_many(
+            flat_q,
+            (dpos + 1).reshape(t, -1),
+            entry_pk.reshape(t, -1),
+            tree.config.pk_bits,
+            tile=tile,
+            interpret=interpret,
+        ).reshape(t, q, lc)
+        return cand & jnp.all(keys == queries[:, :, None, :], axis=-1)
 
     return fn

@@ -1,1 +1,31 @@
-from . import engine, loadgen, pager  # noqa: F401
+from repro.core.snapshot import (  # noqa: F401
+    AdmissionShed,
+    IndexSnapshot,
+    SnapshotCell,
+    SnapshotPin,
+)
+
+from . import engine, loadgen, pager, tenants  # noqa: F401
+from .tenants import (  # noqa: F401
+    Arena,
+    MultiTenantEngine,
+    SLOAdmissionController,
+    SLOConfig,
+    TenantRegistry,
+)
+
+__all__ = [
+    "AdmissionShed",
+    "Arena",
+    "IndexSnapshot",
+    "MultiTenantEngine",
+    "SLOAdmissionController",
+    "SLOConfig",
+    "SnapshotCell",
+    "SnapshotPin",
+    "TenantRegistry",
+    "engine",
+    "loadgen",
+    "pager",
+    "tenants",
+]

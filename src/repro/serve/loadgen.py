@@ -55,8 +55,10 @@ __all__ = [
     "LatencyReservoir",
     "ReaderReport",
     "LoadReport",
+    "pooled_percentiles",
     "run_load",
     "run_pager_load",
+    "run_multitenant_load",
 ]
 
 
@@ -98,6 +100,40 @@ def _percentiles(samples: np.ndarray, ps=(50, 90, 99)) -> dict[str, float]:
     if samples.size == 0:
         return {f"p{p}_us": 0.0 for p in ps}
     return {f"p{p}_us": float(np.percentile(samples, p)) for p in ps}
+
+
+def pooled_percentiles(reservoirs, ps=(50, 90, 99)) -> dict[str, float]:
+    """Stream-weighted percentiles across per-thread reservoirs.
+
+    Each reservoir is a uniform sample of *its own thread's* stream, so
+    one retained sample stands for ``n_seen / len(samples)`` stream
+    observations.  Concatenating the raw samples unweighted overweights
+    slow threads — a thread that completed 8 requests contributes the
+    same sample mass as one that completed 10000, dragging the pooled
+    p99 toward the slow thread's tail.  Weighted nearest-rank instead:
+    sort the pooled values, each carrying its per-thread weight, and
+    read each percentile off the cumulative weight — equivalent to
+    percentiles over the union of the original streams.
+    """
+    vals, wts = [], []
+    for res in reservoirs:
+        s = res.samples()
+        if s.size == 0:
+            continue
+        vals.append(s)
+        wts.append(np.full(s.size, res.n_seen / s.size, np.float64))
+    if not vals:
+        return {f"p{p}_us": 0.0 for p in ps}
+    v = np.concatenate(vals)
+    w = np.concatenate(wts)
+    order = np.argsort(v, kind="stable")
+    v, w = v[order], w[order]
+    cw = np.cumsum(w)
+    out = {}
+    for p in ps:
+        idx = int(np.searchsorted(cw, p / 100.0 * cw[-1], side="left"))
+        out[f"p{p}_us"] = float(v[min(idx, v.size - 1)])
+    return out
 
 
 @dataclass
@@ -418,12 +454,7 @@ def run_load(
     wall = time.perf_counter() - t_run0
     warm_traces = plancache.cache_stats()["traces"] - s0["traces"]
 
-    pooled = (
-        np.concatenate([rep.reservoir.samples() for rep in reports])
-        if reports
-        else np.zeros(0)
-    )
-    pcts = _percentiles(pooled)
+    pcts = pooled_percentiles([rep.reservoir for rep in reports])
     n_requests = sum(rep.n_requests for rep in reports)
     errors = writer_errors + [e for rep in reports for e in rep.errors]
     return LoadReport(
@@ -566,8 +597,7 @@ def run_pager_load(
         t.join(timeout=30.0)
     wt.join(timeout=30.0)
 
-    pooled = np.concatenate([r.samples() for r in reservoirs])
-    pcts = _percentiles(pooled)
+    pcts = pooled_percentiles(reservoirs)
     return {
         "n_readers": n_readers,
         "n_requests": counts["requests"],
@@ -577,5 +607,305 @@ def run_pager_load(
         "epochs_published": pm._snapshots.stats()["n_published"],
         "snapshot": pm._snapshots.stats(),
         "errors": errors,
+        **pcts,
+    }
+
+
+def _probe_keyset_exact(rng, n_keys: int, n_words: int) -> KeySet:
+    """A masked-random keyset with *exactly* ``n_keys`` distinct keys.
+
+    The multi-tenant arena buckets tenants by tree geometry, which is a
+    function of the key count — every tenant in one arena must hold the
+    same ``n``.  Draw an oversized masked pool, dedupe, and slice.
+    """
+    pool = rng.integers(0, 2**32, size=(2 * n_keys + 64, n_words), dtype=np.uint32)
+    pool &= np.uint32(0x00FF0F0F)
+    pool = np.unique(pool, axis=0)
+    if pool.shape[0] < n_keys:  # pragma: no cover - masked space is ~2^32
+        raise ValueError(f"masked pool too small: {pool.shape[0]} < {n_keys}")
+    words = pool[rng.permutation(pool.shape[0])[:n_keys]]
+    return KeySet(
+        words=words,
+        lengths=np.full(n_keys, n_words * 4, np.int32),
+        rids=np.arange(n_keys, dtype=np.uint32),
+    )
+
+
+def run_multitenant_load(
+    *,
+    backend: str = "jnp",
+    n_tenants: int = 4,
+    n_keys: int = 2048,
+    n_words: int = 2,
+    batch: int = 128,
+    n_readers: int = 4,
+    duration_s: float = 1.5,
+    mutation_batch: int = 48,
+    mutation_period_s: float = 0.0,
+    target_p99_us: float | None = None,
+    slo_window: int = 64,
+    fairness_limit: int = 16,
+    max_delay_s: float = 0.002,
+    max_batch_queries: int = 4096,
+    seed: int = 0,
+    warmup_cycles: int = 1,
+) -> dict:
+    """Closed-loop multi-tenant readers vs. per-tenant churn writers.
+
+    The fleet form of :func:`run_load`: ``n_tenants`` same-geometry
+    indexes (exactly ``n_keys`` each) publish into per-tenant
+    :class:`SnapshotCell`\\ s and join one
+    :class:`~repro.serve.tenants.TenantRegistry` arena; ``n_readers``
+    threads round-robin over the tenants submitting probe batches
+    through a :class:`~repro.serve.tenants.MultiTenantEngine`, whose
+    dispatcher fuses the cross-tenant queues into single
+    ``lookup_many`` dispatches.  One writer thread churns the tenants
+    round-robin — per-tenant delete+reinsert with epoch-coded rids, key
+    population and geometry constant — so warm traffic must replay
+    cached programs (the report carries the exact trace delta).
+
+    Every response is verified against its ``(tenant, epoch)`` oracle
+    registered before that epoch published (torn check), and its epoch
+    must not precede the arena epoch observed before submit (stale
+    check).  ``target_p99_us`` turns on the
+    :class:`~repro.serve.tenants.SLOAdmissionController`: sheds and
+    forced admits land in the report, and ``served_per_tenant`` lets the
+    caller assert no tenant starved.
+    """
+    import jax.numpy as jnp
+
+    from repro.backends import get_backend
+    from repro.core.snapshot import SnapshotCell
+    from repro.serve.tenants import (
+        MultiTenantEngine,
+        SLOAdmissionController,
+        SLOConfig,
+        TenantRegistry,
+    )
+
+    backend_obj = get_backend(
+        backend, **({"interpret": True} if backend == "pallas" else {})
+    )
+    registry = TenantRegistry()
+    slo = (
+        None
+        if target_p99_us is None
+        else SLOAdmissionController(
+            SLOConfig(
+                target_p99_us=float(target_p99_us),
+                window=slo_window,
+                fairness_limit=fairness_limit,
+            )
+        )
+    )
+
+    # ------------------------------------------------ per-tenant state
+    tenants = list(range(n_tenants))
+    cells, pipes, states, probes = {}, {}, {}, {}
+    oracles: dict[tuple, tuple[np.ndarray, np.ndarray]] = {}
+    epoch_rid_base = 1 << 17
+
+    for t in tenants:
+        rng = np.random.default_rng(seed + 1000 * (t + 1))
+        ks = _probe_keyset_exact(rng, n_keys, n_words)
+        words_h = np.asarray(ks.words)
+        truth = {
+            tuple(int(w) for w in words_h[i]): int(ks.rids[i])
+            for i in range(n_keys)
+        }
+        churn_lo = max(1, min(batch, n_keys - mutation_batch))
+        probe_idx = np.concatenate(
+            [
+                np.arange(0, batch // 2, dtype=np.int64) % churn_lo,
+                churn_lo
+                + np.arange(batch - batch // 2, dtype=np.int64)
+                % max(1, n_keys - churn_lo),
+            ]
+        )
+        probe_keys = words_h[probe_idx].copy()
+        probe_keys[::5] ^= np.uint32(0x10)  # guaranteed misses (outside mask)
+        probes[t] = probe_keys
+
+        cell = SnapshotCell()
+        pipe = ReconstructionPipeline(backend=backend)
+        oracles[(t, cell.epoch + 1)] = _expected_answers(truth, probe_keys)
+        cur = pipe.run(ks, publish_to=cell)
+        cells[t], pipes[t] = cell, pipe
+        states[t] = {
+            "cur": cur,
+            "base": ks,
+            "tags": np.arange(n_keys, dtype=np.int64),
+            "truth": truth,
+            "words": words_h,
+            "churn_lo": churn_lo,
+            "wrng": np.random.default_rng(seed + 2000 * (t + 1)),
+        }
+        registry.publish(t, cell)
+
+    engine = MultiTenantEngine(
+        registry,
+        backend_obj,
+        max_batch_queries=max_batch_queries,
+        max_delay_s=max_delay_s,
+        slo=slo,
+    )
+
+    # ------------------------------------------------------------ writer
+    stop = threading.Event()
+    writer_errors: list = []
+
+    def writer_cycle(t: int) -> None:
+        st = states[t]
+        cell = cells[t]
+        next_epoch = cell.epoch + 1
+        churn_lo, words_h, truth = st["churn_lo"], st["words"], st["truth"]
+        wrng = st["wrng"]
+        victims = churn_lo + wrng.choice(
+            n_keys - churn_lo,
+            size=min(mutation_batch, n_keys - churn_lo),
+            replace=False,
+        )
+        keep = ~np.isin(st["tags"], victims)
+        delta_words = words_h[victims]
+        new_rids = (
+            np.uint32(next_epoch * epoch_rid_base)
+            + np.arange(len(victims), dtype=np.uint32)
+        )
+        delta = KeySet(
+            words=delta_words,
+            lengths=np.full(len(victims), n_words * 4, np.int32),
+            rids=new_rids,
+        )
+        for i_k, key in enumerate(delta_words):
+            truth[tuple(int(w) for w in key)] = int(new_rids[i_k])
+        oracles[(t, next_epoch)] = _expected_answers(truth, probes[t])
+        st["tags"] = np.concatenate([st["tags"][keep], victims])
+        st["cur"], st["base"] = pipes[t].run_incremental(
+            st["cur"], st["base"], delta, keep_rows=keep,
+            meta=st["cur"].meta, publish_to=cell,
+        )
+        registry.publish(t, cell)
+
+    def writer_loop():
+        i = 0
+        try:
+            while not stop.is_set():
+                writer_cycle(tenants[i % n_tenants])
+                i += 1
+                if mutation_period_s > 0:
+                    stop.wait(mutation_period_s)
+        except Exception as e:  # pragma: no cover - surfaced in the report
+            writer_errors.append(repr(e))
+            stop.set()
+
+    # ----------------------------------------------------------- readers
+    counts = {"requests": 0, "torn": 0, "stale": 0, "shed": 0}
+    count_lock = threading.Lock()
+    reservoirs = [LatencyReservoir(4096, seed + 10 + i) for i in range(n_readers)]
+    reader_errors: list = []
+
+    def reader_loop(idx: int):
+        res = reservoirs[idx]
+        i = idx  # stagger tenant phase across readers
+        try:
+            while not stop.is_set():
+                t = tenants[i % n_tenants]
+                i += 1
+                arena = registry.arena_of(t)
+                epoch_before = arena.epochs[t] if arena is not None else -1
+                t0 = time.perf_counter()
+                try:
+                    found, rid, epoch = engine.submit(t, probes[t])
+                except AdmissionShed:
+                    with count_lock:
+                        counts["shed"] += 1
+                    stop.wait(0.0005)  # shed backoff
+                    continue
+                res.record((time.perf_counter() - t0) * 1e6)
+                exp_f, exp_r = oracles[(t, epoch)]
+                torn = not (
+                    np.array_equal(found, exp_f) and np.array_equal(rid, exp_r)
+                )
+                with count_lock:
+                    counts["requests"] += 1
+                    if torn:
+                        counts["torn"] += 1
+                    if epoch < epoch_before:
+                        counts["stale"] += 1
+        except Exception as e:  # pragma: no cover - surfaced in the report
+            reader_errors.append(repr(e))
+
+    # ------------------------------------------------ warmup + baseline
+    for _ in range(max(warmup_cycles, 1)):
+        for t in tenants:
+            writer_cycle(t)
+    # warm the fused program (arena-capacity x probe-bucket shape) and
+    # measure the unloaded fused round trip (micro-batch delay included —
+    # the same path the loaded readers pay)
+    for t in tenants:
+        engine.submit(t, probes[t])
+    # warm every query bucket the dispatcher can coalesce into: under
+    # backlog one tenant's queued requests fuse into blocks up to the
+    # bounded take (max_batch_queries plus one request of overshoot),
+    # and a mid-run retrace would stall every tenant in the batch
+    arena0 = registry.arena_of(tenants[0])
+    qcap = max_batch_queries + batch
+    qb = plancache.bucket_for("lookup_many", batch)
+    while True:
+        blk = np.full((1, qb, n_words), 0xFFFFFFFF, np.uint32)
+        backend_obj.lookup_many(arena0.stacked, blk, np.zeros(1, np.uint32))
+        if qb >= qcap:
+            break
+        qb *= 2
+    unloaded = []
+    for _ in range(8):
+        t0 = time.perf_counter()
+        engine.submit(tenants[0], probes[tenants[0]])
+        unloaded.append((time.perf_counter() - t0) * 1e6)
+    unloaded_p50 = float(np.percentile(np.asarray(unloaded), 50))
+
+    s0 = plancache.cache_stats()
+    threads = [
+        threading.Thread(target=reader_loop, args=(i,), daemon=True)
+        for i in range(n_readers)
+    ]
+    wt = threading.Thread(target=writer_loop, daemon=True)
+    t_run0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    wt.start()
+    time.sleep(duration_s)
+    stop.set()
+    for th in threads:
+        th.join(timeout=30.0)
+    wt.join(timeout=30.0)
+    engine.shutdown()
+    wall = time.perf_counter() - t_run0
+    warm_traces = plancache.cache_stats()["traces"] - s0["traces"]
+
+    pcts = pooled_percentiles(reservoirs)
+    eng_stats = engine.stats()
+    return {
+        "backend": backend,
+        "n_tenants": n_tenants,
+        "n_readers": n_readers,
+        "duration_s": wall,
+        "batch": batch,
+        "n_requests": counts["requests"],
+        "n_shed": counts["shed"],
+        "torn_reads": counts["torn"],
+        "stale_epochs": counts["stale"],
+        "epochs_published": sum(
+            cells[t].stats()["n_published"] for t in tenants
+        ),
+        "warm_traces": warm_traces,
+        "lookups_per_s": counts["requests"] * batch / max(wall, 1e-9),
+        "unloaded_p50_us": unloaded_p50,
+        "served_per_tenant": eng_stats["served_per_tenant"],
+        "n_batches": eng_stats["n_batches"],
+        "n_dispatches": eng_stats["n_dispatches"],
+        "registry": registry.stats(),
+        "slo": None if slo is None else slo.stats(),
+        "errors": writer_errors + reader_errors,
         **pcts,
     }

@@ -35,6 +35,7 @@ SURFACE = [
     SRC / "ckpt" / "checkpoint.py",
     SRC / "serve" / "loadgen.py",
     SRC / "serve" / "pager.py",
+    SRC / "serve" / "tenants.py",
 ]
 
 

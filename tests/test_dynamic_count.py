@@ -278,9 +278,10 @@ def test_plancache_auto_size_grows_on_thrash():
             cache.program(("op", k), lambda: (lambda: None))
     assert cache.resizes >= 1
     assert cache.max_programs > 2
-    # stats() keeps its exact legacy shape (the zero-retrace tests diff it)
+    # stats() keeps its exact shape (the zero-retrace tests diff it)
     assert set(cache.stats()) == {
-        "programs", "hits", "misses", "traces", "evictions", "max_programs"
+        "programs", "hits", "misses", "traces", "evictions", "max_programs",
+        "per_op",
     }
 
 

@@ -1,0 +1,387 @@
+"""Multi-tenant fan-out: stacked ``lookup_many``, arenas, fused engine, SLO.
+
+The acceptance contract: T same-geometry snapshots answer from ONE
+compiled program, byte-identical per tenant to the single-snapshot
+``lookup`` on every backend; the registry migrates geometry changes
+without touching other tenants; a tenant retiring mid-batch sheds only
+its own requests; SLO admission sheds under overshoot but never starves
+a tenant; pooled loadgen percentiles weight threads by their stream
+length.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.backends import get_backend
+from repro.core import plancache
+from repro.core.btree import lookup_many_planned, stack_trees, tree_geometry
+from repro.core.keyformat import KeySet
+from repro.core.pipeline import ReconstructionPipeline
+from repro.core.snapshot import IndexSnapshot, SnapshotCell
+
+
+def _snap(result, epoch=0):
+    return IndexSnapshot.from_result(result, epoch=epoch)
+from repro.serve import (
+    AdmissionShed,
+    MultiTenantEngine,
+    SLOAdmissionController,
+    SLOConfig,
+    TenantRegistry,
+)
+from repro.serve.loadgen import LatencyReservoir, pooled_percentiles
+
+
+def _keyset(rng, n, w=2, rid_base=0):
+    """Exactly ``n`` unique masked keys (duplicates would make rids ambiguous)."""
+    pool = rng.integers(0, 2**32, size=(2 * n + 64, w), dtype=np.uint32)
+    pool &= np.uint32(0x00FF0F0F)
+    uniq = np.unique(pool, axis=0)
+    assert uniq.shape[0] >= n
+    words = uniq[rng.permutation(uniq.shape[0])[:n]]
+    return KeySet(
+        words=words,
+        lengths=np.full(n, w * 4, np.int32),
+        rids=np.arange(rid_base, rid_base + n, dtype=np.uint32),
+    )
+
+
+def _queries(ks, rng, q):
+    """Half hits, half guaranteed misses (bit 0x10 is outside the mask)."""
+    idx = rng.integers(0, ks.words.shape[0], size=q)
+    qs = np.asarray(ks.words)[idx].copy()
+    qs[::2] ^= np.uint32(0x10)
+    return qs
+
+
+def _backend(name):
+    return get_backend(name, **({"interpret": True} if name == "pallas" else {}))
+
+
+# ---------------------------------------------------------------------------
+# stacked tree + lookup_many core
+# ---------------------------------------------------------------------------
+
+
+def test_stack_trees_geometry_mismatch(rng):
+    t_a = ReconstructionPipeline(backend="jnp").run(_keyset(rng, 256)).tree
+    t_b = ReconstructionPipeline(backend="jnp").run(_keyset(rng, 300)).tree
+    assert tree_geometry(t_a) != tree_geometry(t_b)
+    with pytest.raises(ValueError):
+        stack_trees([t_a, t_b])
+
+
+@pytest.mark.parametrize("n", [511, 512, 513])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_lookup_many_geometry_edges(rng, n, backend):
+    """2^k±1 keys: padding boundaries of the stacked tree, two tenants."""
+    be = _backend(backend)
+    pipe = ReconstructionPipeline(backend=backend)
+    kss = [_keyset(rng, n, rid_base=1000 * i) for i in range(2)]
+    trees = [pipe.run(ks).tree for ks in kss]
+    stacked = stack_trees(trees)
+    queries = np.stack([_queries(ks, rng, 48) for ks in kss])
+    found, rid = be.lookup_many(stacked, queries)
+    for i, tree in enumerate(trees):
+        f1, r1 = be.lookup(tree, queries[i])
+        np.testing.assert_array_equal(np.asarray(found[i]), np.asarray(f1))
+        np.testing.assert_array_equal(np.asarray(rid[i]), np.asarray(r1))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "distributed"])
+def test_lookup_many_t1_matches_single_lookup(rng, backend):
+    """T=1 degenerates to the single-snapshot path, byte-identical."""
+    be = _backend(backend)
+    ks = _keyset(rng, 400)
+    tree = ReconstructionPipeline(backend=backend).run(ks).tree
+    stacked = stack_trees([tree])
+    qs = _queries(ks, rng, 64)
+    found, rid = be.lookup_many(stacked, qs[None])
+    ref = _backend("jnp" if backend == "distributed" else backend)
+    f1, r1 = ref.lookup(tree, qs)
+    assert found.shape == (1, 64) and rid.shape == (1, 64)
+    np.testing.assert_array_equal(np.asarray(found[0]), np.asarray(f1))
+    np.testing.assert_array_equal(np.asarray(rid[0]), np.asarray(r1))
+
+
+def test_lookup_many_partial_arena_and_zero_retrace(rng):
+    """Partial tenant rows (n_valid) + warm replay with per-op attribution."""
+    be = _backend("jnp")
+    kss = [_keyset(rng, 320, rid_base=500 * i) for i in range(3)]
+    trees = [ReconstructionPipeline(backend="jnp").run(ks).tree for ks in kss]
+    stacked = stack_trees(trees)  # capacity 4: one padded replica row
+    queries = np.stack([_queries(ks, rng, 32) for ks in kss])
+    n_valid = np.array([32, 7, 0], np.uint32)
+    found, rid = be.lookup_many(stacked, queries, n_valid)
+    assert found.shape == (3, 32)
+    f1, r1 = be.lookup(trees[1], queries[1][:7])
+    np.testing.assert_array_equal(np.asarray(found[1][:7]), np.asarray(f1))
+    np.testing.assert_array_equal(np.asarray(rid[1][:7]), np.asarray(r1))
+    assert not np.asarray(found[1][7:]).any()  # dead lanes answer not-found
+    assert not np.asarray(found[2]).any()  # zero-valid tenant row
+
+    s0 = plancache.cache_stats()
+    be.lookup_many(stacked, queries, n_valid)
+    s1 = plancache.cache_stats()
+    assert s1["traces"] == s0["traces"]  # warm replay
+    ops = s1["per_op"]
+    assert "lookup_many" in ops and ops["lookup_many"]["hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# registry: geometry buckets, migration
+# ---------------------------------------------------------------------------
+
+
+def test_registry_migration_on_geometry_change(rng):
+    pipe = ReconstructionPipeline(backend="jnp")
+    reg = TenantRegistry()
+    ks_a, ks_b = _keyset(rng, 256), _keyset(rng, 256, rid_base=5000)
+    reg.publish("a", _snap(pipe.run(ks_a)))
+    reg.publish("b", _snap(pipe.run(ks_b)))
+    arena0 = reg.arena_of("a")
+    assert arena0 is reg.arena_of("b") and arena0.capacity == 2
+
+    # 'a' rebuilds at a different size -> different geometry bucket
+    ks_a2 = _keyset(rng, 300, rid_base=9000)
+    reg.publish("a", _snap(pipe.run(ks_a2), epoch=1))
+    st = reg.stats()
+    assert st["n_migrations"] == 1 and st["n_arenas"] == 2
+    assert reg.arena_of("a") is not reg.arena_of("b")
+    assert reg.arena_of("b").tenants == ("b",)
+
+    # both tenants still answer correctly from their new arenas
+    be = _backend("jnp")
+    for tenant, ks in (("a", ks_a2), ("b", ks_b)):
+        arena = reg.arena_of(tenant)
+        qs = np.asarray(ks.words[:16])
+        nv = np.zeros(arena.capacity, np.uint32)
+        nv[arena.slots[tenant]] = 16
+        qb = np.full((arena.capacity, 16, 2), 0xFFFFFFFF, np.uint32)
+        qb[arena.slots[tenant]] = qs
+        found, rid = be.lookup_many(arena.stacked, qb, nv)
+        row = arena.slots[tenant]
+        assert np.asarray(found[row]).all()
+        np.testing.assert_array_equal(
+            np.asarray(rid[row]), np.asarray(ks.rids[:16])
+        )
+
+    reg.retire("a")
+    assert reg.arena_of("a") is None and reg.stats()["n_arenas"] == 1
+
+
+def test_registry_publish_pins_cell_epoch(rng):
+    """Publishing from a SnapshotCell leases the epoch until republish."""
+    pipe = ReconstructionPipeline(backend="jnp")
+    cell = SnapshotCell()
+    pipe.run(_keyset(rng, 256), publish_to=cell)
+    reg = TenantRegistry()
+    reg.publish("t", cell)
+    pipe.run(_keyset(rng, 256, rid_base=700), publish_to=cell)
+    # epoch 0 retired by the publish but still pinned by the registry
+    assert cell.stats()["retired"] == 1
+    reg.publish("t", cell)  # re-pin at epoch 1 releases epoch 0
+    assert cell.stats()["retired"] == 0
+    assert reg.arena_of("t").epochs["t"] == 1
+    reg.retire("t")
+    assert cell.stats()["pinned"] == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: fused dispatch, tenant leaving mid-batch
+# ---------------------------------------------------------------------------
+
+
+def _fleet(rng, n_tenants, n=256):
+    pipe = ReconstructionPipeline(backend="jnp")
+    reg = TenantRegistry()
+    kss = {}
+    for t in range(n_tenants):
+        ks = _keyset(rng, n, rid_base=10_000 * (t + 1))
+        kss[t] = ks
+        reg.publish(t, _snap(pipe.run(ks)))
+    return reg, kss
+
+
+def test_engine_fuses_cross_tenant_batch(rng):
+    reg, kss = _fleet(rng, 3)
+    eng = MultiTenantEngine(reg, _backend("jnp"), auto_dispatch=False)
+    results = {}
+
+    def ask(t):
+        results[t] = eng.submit(t, np.asarray(kss[t].words[:24]))
+
+    threads = [threading.Thread(target=ask, args=(t,)) for t in kss]
+    for th in threads:
+        th.start()
+    while eng.stats()["pending"] < 3:
+        pass
+    assert eng.flush() == 3
+    for th in threads:
+        th.join(timeout=10.0)
+    st = eng.stats()
+    assert st["n_dispatches"] == 1  # ONE lookup_many for all three tenants
+    assert st["n_batches"] == 1
+    for t, ks in kss.items():
+        found, rid, _epoch = results[t]
+        assert np.asarray(found).all()
+        np.testing.assert_array_equal(np.asarray(rid), np.asarray(ks.rids[:24]))
+    eng.shutdown()
+
+
+def test_tenant_leaving_mid_batch(rng):
+    """Retire between enqueue and flush: only the leaver's request sheds."""
+    reg, kss = _fleet(rng, 2)
+    eng = MultiTenantEngine(reg, _backend("jnp"), auto_dispatch=False)
+    out, err = {}, {}
+
+    def ask(t):
+        try:
+            out[t] = eng.submit(t, np.asarray(kss[t].words[:16]))
+        except AdmissionShed as e:
+            err[t] = e
+
+    threads = [threading.Thread(target=ask, args=(t,)) for t in (0, 1)]
+    for th in threads:
+        th.start()
+    while eng.stats()["pending"] < 2:
+        pass
+    reg.retire(1)
+    eng.flush()
+    for th in threads:
+        th.join(timeout=10.0)
+    assert 1 in err and "retired" in str(err[1])
+    found, rid, _epoch = out[0]  # survivor answered correctly
+    assert np.asarray(found).all()
+    np.testing.assert_array_equal(np.asarray(rid), np.asarray(kss[0].rids[:16]))
+    eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# SLO admission
+# ---------------------------------------------------------------------------
+
+
+def test_slo_windowed_aimd():
+    ctl = SLOAdmissionController(
+        SLOConfig(target_p99_us=1000.0, window=8, fairness_limit=4)
+    )
+    for _ in range(8):
+        ctl.observe("t", 5000.0)  # one overshooting window
+    assert ctl.stats()["t"]["shed_frac"] == pytest.approx(0.15)
+    for _ in range(16):
+        ctl.observe("t", 100.0)  # two clear windows -> multiplicative decay
+    assert ctl.stats()["t"]["shed_frac"] == pytest.approx(0.15 * 0.7 * 0.7)
+    # the windowed signal forgets the past stall: keep feeding clear
+    # windows and the fraction decays toward zero instead of saturating
+    for _ in range(20 * 8):
+        ctl.observe("t", 100.0)
+    assert ctl.stats()["t"]["shed_frac"] < 0.01
+
+
+def test_slo_sheds_but_never_starves():
+    ctl = SLOAdmissionController(
+        SLOConfig(target_p99_us=1.0, window=4, fairness_limit=3)
+    )
+    # drive shed_frac to the 0.9 cap with persistently overshooting windows
+    for _ in range(4 * 10):
+        ctl.observe("t", 1e6)
+    assert ctl.stats()["t"]["shed_frac"] == pytest.approx(0.9)
+    verdicts = [ctl.admit("t") for _ in range(200)]
+    st = ctl.stats()["t"]
+    assert st["n_shed"] > 0  # it does shed
+    assert st["forced_admits"] > 0  # the fairness floor fired
+    assert sum(verdicts) >= 200 // (3 + 1)  # never starves
+    # sheds are spread (accumulator), not bursty: no admit gap > limit
+    gap, worst = 0, 0
+    for v in verdicts:
+        gap = 0 if v else gap + 1
+        worst = max(worst, gap)
+    assert worst <= 3
+
+
+def test_pooled_percentiles_weight_by_stream_length():
+    """Satellite regression: a slow 8-request thread must not drag the
+    pooled p99 of a 10000-request fleet to its own tail."""
+    fast = LatencyReservoir(capacity=64, seed=0)
+    for _ in range(10_000):
+        fast.record(1.0)
+    slow = LatencyReservoir(capacity=64, seed=1)
+    for _ in range(8):
+        slow.record(100.0)
+    pooled = pooled_percentiles([fast, slow])
+    # unweighted concatenation would put 8/72 = 11% of the mass at 100.0
+    # and report p99 = 100; weighted, the slow thread is 8/10008 of the
+    # stream and the p99 stays at the fast thread's latency
+    assert pooled["p99_us"] == pytest.approx(1.0)
+    assert pooled["p50_us"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# distributed: tenant axis sharded over the mesh
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_lookup_many_sharded_subprocess():
+    """8 tenants over 4 host devices: 2 tenants per shard, byte-identical."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = src
+    code = textwrap.dedent("""
+        import numpy as np
+        from repro.backends import get_backend
+        from repro.core import plancache
+        from repro.core.btree import stack_trees
+        from repro.core.keyformat import KeySet
+        from repro.core.pipeline import ReconstructionPipeline
+
+        def ks_of(seed, n=300, w=2):
+            r = np.random.default_rng(seed)
+            pool = r.integers(0, 2**32, size=(2 * n + 64, w), dtype=np.uint32)
+            pool &= np.uint32(0x00FF0F0F)
+            uniq = np.unique(pool, axis=0)
+            words = uniq[r.permutation(uniq.shape[0])[:n]]
+            rids = np.arange(1000 * seed, 1000 * seed + n, dtype=np.uint32)
+            return KeySet(words=words, lengths=np.full(n, w * 4, np.int32), rids=rids)
+
+        pipe = ReconstructionPipeline(backend="jnp")
+        kss = [ks_of(s + 1) for s in range(8)]
+        trees = [pipe.run(k).tree for k in kss]
+        stacked = stack_trees(trees)
+        rng = np.random.default_rng(99)
+        queries = np.stack([
+            np.asarray(k.words)[rng.integers(0, 300, size=32)] for k in kss
+        ])
+        queries[:, ::2] ^= np.uint32(0x10)  # misses outside the mask
+
+        dist, ref = get_backend("distributed"), get_backend("jnp")
+        found, rid = dist.lookup_many(stacked, queries)
+        assert dist.last_info["mesh_devices"] == 4, dist.last_info
+        assert dist.last_info["tenants_per_shard"] == 2, dist.last_info
+        for i, t in enumerate(trees):
+            f1, r1 = ref.lookup(t, queries[i])
+            np.testing.assert_array_equal(np.asarray(found[i]), np.asarray(f1))
+            np.testing.assert_array_equal(np.asarray(rid[i]), np.asarray(r1))
+        s0 = plancache.cache_stats()["traces"]
+        dist.lookup_many(stacked, queries)
+        assert plancache.cache_stats()["traces"] == s0
+        print("SHARDED LOOKUP_MANY OK")
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "SHARDED LOOKUP_MANY OK" in r.stdout

@@ -102,8 +102,36 @@ def test_cache_lru_bound_and_eviction_counters():
     cache.reset()
     assert cache.stats() == {
         "programs": 0, "hits": 0, "misses": 0, "traces": 0,
-        "evictions": 0, "max_programs": 2,
+        "evictions": 0, "max_programs": 2, "per_op": {},
     }
+
+
+def test_cache_per_op_breakdown():
+    """stats()["per_op"] splits hit/miss/trace counters by op family
+    (key[0]), with tracings attributed to the op whose builder wrapped
+    the program — so a bench can see *which* family retraced."""
+    cache = plancache.PlanCache()
+
+    def build_sq():
+        return cache.jit(lambda x: x * x)
+
+    sq = cache.program(("sq", 256), build_sq)
+    cache.program(("sq", 256), build_sq)           # hit
+    cache.program(("other", 1), lambda: (lambda: 0))
+    sq(jnp.arange(4))                              # first call: one trace
+    sq(jnp.arange(4))                              # replay: no trace
+    st = cache.stats()["per_op"]
+    assert st["sq"] == {"hits": 1, "misses": 1, "traces": 1}
+    assert st["other"] == {"hits": 0, "misses": 1, "traces": 0}
+    # aggregates stay the sums of the breakdown
+    agg = cache.stats()
+    assert agg["hits"] == sum(c["hits"] for c in st.values())
+    assert agg["misses"] == sum(c["misses"] for c in st.values())
+    assert agg["traces"] == sum(c["traces"] for c in st.values())
+    # a jit outside any builder lands under "_unkeyed"
+    free = cache.jit(lambda x: x + 1)
+    free(jnp.arange(4))
+    assert cache.stats()["per_op"]["_unkeyed"]["traces"] == 1
 
 
 def test_cache_lru_bound_stays_correct_under_real_ops(rng):
